@@ -1,0 +1,27 @@
+"""Fig. 9 analogue: accuracy vs sparsity Pareto fronts — EC4T (ours, 16
+centroids) vs the EC2T ternary baseline, λ swept, same model/task/steps."""
+from __future__ import annotations
+
+from benchmarks.common import save, train_mlp
+from benchmarks.ec2t_baseline import train_mlp_ec2t
+from repro.configs.paper_mlps import MLP_HR
+
+LAMBDAS = (0.0, 0.05, 0.2, 0.5, 1.0)
+
+
+def run(steps: int = 200):
+    rows = []
+    for lam in LAMBDAS:
+        _, _, _, m4 = train_mlp(MLP_HR, lam=lam, steps=steps)
+        m2 = train_mlp_ec2t(MLP_HR, lam=lam, steps=steps)
+        rows.append({"lam": lam,
+                     "ec4t_acc": m4["acc"], "ec4t_sparsity": m4["sparsity"],
+                     "ec2t_acc": m2["acc"], "ec2t_sparsity": m2["sparsity"]})
+        print(f"λ={lam:<5} EC4T acc={m4['acc']:.3f}@{m4['sparsity']:.2f}sp | "
+              f"EC2T acc={m2['acc']:.3f}@{m2['sparsity']:.2f}sp", flush=True)
+    save("fig9_pareto", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

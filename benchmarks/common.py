@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: MLP training harness over synthetic tasks."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mlps import MLPConfig
+from repro.core import qat
+from repro.data import synthetic
+from repro.models import mlp as M
+from repro.nn.module import QuantCtx
+from repro.optim import adam, schedule
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench")
+
+
+def save(name: str, payload):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+def train_mlp(cfg_mlp: MLPConfig, *, lam: float, steps: int = 250,
+              lr: float = 5e-3, seed: int = 0, lam_ramp: int = 60,
+              quant: bool = True):
+    """EC4T-train an MLP on its synthetic task; returns (params, qstate,
+    bn, final metrics dict)."""
+    data_cfg = synthetic.ClsDataCfg(d_in=cfg_mlp.d_in,
+                                    n_classes=cfg_mlp.features[-1],
+                                    batch=128, margin=3.0, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params, bn = M.mlp_init(key, cfg_mlp)
+    qs = qat.build_qstate(params)
+    opt = adam.init(params)
+
+    @jax.jit
+    def step(params, qs, bn, opt, x, y, lam_t):
+        ctx = QuantCtx(quant=quant, lam=lam_t, compute_dtype=jnp.float32)
+
+        def loss_fn(params):
+            logits, bn2 = M.mlp_apply(params, qs, bn, x, ctx, train=True)
+            return M.cross_entropy(logits, y), (bn2, logits)
+        (loss, (bn2, logits)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt, _ = adam.apply(params, g, opt, adam.AdamConfig(lr=lr))
+        qs = qat.update_qstate(params, qs, lam_t)
+        return params, qs, bn2, opt, loss, M.accuracy(logits, y)
+
+    for i in range(steps):
+        b = synthetic.cls_batch(data_cfg, i)
+        lam_t = float(schedule.lambda_ramp(i, lam=lam, ramp_steps=lam_ramp))
+        params, qs, bn, opt, loss, acc = step(
+            params, qs, bn, opt, jnp.asarray(b["x"]),
+            jnp.asarray(b["labels"]), lam_t)
+
+    # held-out eval (fresh seeds)
+    ctx = QuantCtx(quant=quant, lam=lam, compute_dtype=jnp.float32)
+    accs = []
+    for j in range(5):
+        b = synthetic.cls_batch(data_cfg, 10_000 + j)
+        logits, _ = M.mlp_apply(params, qs, bn, jnp.asarray(b["x"]), ctx,
+                                train=False)
+        accs.append(float(M.accuracy(logits, jnp.asarray(b["labels"]))))
+    st = qat.stats(params, qs, lam)
+    metrics = {"acc": float(np.mean(accs)),
+               "sparsity": float(st["sparsity"]),
+               "entropy_bits": float(st["entropy_bits_per_weight"])}
+    return params, qs, bn, metrics

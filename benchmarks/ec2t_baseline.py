@@ -1,0 +1,99 @@
+"""EC2T — the paper's baseline (Marban et al. [16]): entropy-constrained
+*ternary* training.  Same STE + ECL machinery, codebook {-a, 0, +a} with a
+single trainable scale per tensor.  FantastIC4 generalises this to 16
+subset-sum centroids; fig. 9 shows the 4-bit version reaching a better
+accuracy↔sparsity Pareto front — bench_pareto reproduces that comparison.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mlps import MLPConfig
+from repro.core import ecl
+from repro.data import synthetic
+from repro.models import mlp as M
+from repro.optim import adam, schedule
+
+
+def _fake_quant_ternary(w, a, probs, lam):
+    book = jnp.stack([jnp.zeros_like(a), a, -a])          # (3,)
+    codes = jax.lax.stop_gradient(ecl.assign_general(w, book, probs, lam))
+    w_hat = book[codes]
+    return w_hat + (w - jax.lax.stop_gradient(w)), codes
+
+
+def train_mlp_ec2t(cfg_mlp: MLPConfig, *, lam: float, steps: int = 250,
+                   lr: float = 5e-3, seed: int = 0, lam_ramp: int = 60):
+    data_cfg = synthetic.ClsDataCfg(d_in=cfg_mlp.d_in,
+                                    n_classes=cfg_mlp.features[-1],
+                                    batch=128, margin=3.0, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params, bn = M.mlp_init(key, cfg_mlp)
+    # replace 4-bit parameterisation with ternary: {"w", "a"}
+    for layer in params["layers"]:
+        w = layer["kernel"]["w"]
+        layer["kernel"] = {"w": w, "a": jnp.mean(jnp.abs(w)) * 2.0}
+    probs = [jnp.full((3,), 1 / 3) for _ in params["layers"]]
+    opt = adam.init(params)
+
+    def fwd(params, probs, bn, x, lam_t, train):
+        new_bn = {"layers": []}
+        n = len(params["layers"])
+        codes_all = []
+        for i, layer in enumerate(params["layers"]):
+            wq, codes = _fake_quant_ternary(layer["kernel"]["w"],
+                                            layer["kernel"]["a"],
+                                            probs[i], lam_t)
+            codes_all.append(codes)
+            x = x @ wq + layer["bias"]
+            st = {}
+            if "bn_gamma" in layer:
+                if train:
+                    mu, var = x.mean(0), x.var(0)
+                    st = {"mean": 0.9 * bn["layers"][i]["mean"] + 0.1 * mu,
+                          "var": 0.9 * bn["layers"][i]["var"] + 0.1 * var}
+                else:
+                    mu, var = bn["layers"][i]["mean"], bn["layers"][i]["var"]
+                    st = bn["layers"][i]
+                x = ((x - mu) * jax.lax.rsqrt(var + 1e-5)
+                     * layer["bn_gamma"] + layer["bn_beta"])
+            new_bn["layers"].append(st)
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x, new_bn, codes_all
+
+    @jax.jit
+    def step(params, probs, bn, opt, x, y, lam_t):
+        def loss_fn(params):
+            logits, bn2, codes = fwd(params, probs, bn, x, lam_t, True)
+            return M.cross_entropy(logits, y), (bn2, codes)
+        (loss, (bn2, codes)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt, _ = adam.apply(params, g, opt, adam.AdamConfig(lr=lr))
+        probs = [0.9 * p + 0.1 * jnp.bincount(
+            c.reshape(-1).astype(jnp.int32), length=3) / c.size
+            for p, c in zip(probs, codes)]
+        return params, probs, bn2, opt
+
+    for i in range(steps):
+        b = synthetic.cls_batch(data_cfg, i)
+        lam_t = float(schedule.lambda_ramp(i, lam=lam, ramp_steps=lam_ramp))
+        params, probs, bn, opt = step(params, probs, bn, opt,
+                                      jnp.asarray(b["x"]),
+                                      jnp.asarray(b["labels"]), lam_t)
+
+    accs, spars, total = [], 0.0, 0
+    for j in range(5):
+        b = synthetic.cls_batch(data_cfg, 10_000 + j)
+        logits, _, codes = fwd(params, probs, bn, jnp.asarray(b["x"]),
+                               lam, False)
+        accs.append(float(M.accuracy(logits, jnp.asarray(b["labels"]))))
+    for i, layer in enumerate(params["layers"]):
+        book = jnp.stack([jnp.zeros(()), layer["kernel"]["a"],
+                          -layer["kernel"]["a"]])
+        codes = ecl.assign_general(layer["kernel"]["w"], book, probs[i], lam)
+        spars += float((codes == 0).sum())
+        total += codes.size
+    return {"acc": float(np.mean(accs)), "sparsity": spars / total}

@@ -1,0 +1,47 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+  python -m benchmarks.run [--fast]
+
+table2_compression    Table II  (acc + CR, hybrid vs CSR-only vs dense4)
+fig9_pareto           Fig. 9   (EC4T vs EC2T accuracy↔sparsity fronts)
+fig11_entropy_bytes   Fig. 11  (entropy -> data-movement bytes)
+acm_vs_mac            §III-A   (multiply counts + HBM bytes + kernel check)
+serving_roofline      Tables VI-VIII analogue (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    steps = 60 if args.fast else 200
+
+    from benchmarks import (bench_acm_vs_mac, bench_compression,
+                            bench_entropy_energy, bench_pareto,
+                            bench_serving_roofline)
+    benches = {
+        "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
+        "table2_compression": lambda: bench_compression.run(steps=steps),
+        "fig9_pareto": lambda: bench_pareto.run(steps=steps),
+        "fig11_entropy_bytes": lambda: bench_entropy_energy.run(steps=steps),
+        "serving_roofline": lambda: bench_serving_roofline.run(),
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"({name}: {time.time()-t0:.1f}s)")
+    print("\nall benchmarks complete; json in results/bench/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# FantastIC4 core: 4-bit bit-plane quantization (eq. 1), entropy-constrained
+# Lloyd assignment (§IV-C), EC4T training parameterisation (§IV), multiple
+# lossless compressed formats (§III-B.2) and ACM execution paths (§III-A).
+from . import acm, bitplanes, ecl, formats, qat  # noqa: F401

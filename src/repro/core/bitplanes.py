@@ -1,0 +1,130 @@
+"""Bit-plane decomposition of 4-bit weight codes (FantastIC4 eq. 1).
+
+A quantized weight tensor is represented by
+  * ``codes``  — uint8 tensor of 4-bit cluster ids in [0, 16)
+  * ``omega``  — the 4 real-valued basis centroids ω_i
+
+The dequantized value of code ``c`` is the subset-sum
+``v_c = Σ_i ω_i * bit_i(c)`` so that ``W = Σ_i ω_i B_i`` with
+``B_i = bit_i(codes)``.  Code 0 ⇒ value 0 ⇒ sparsity is a code.
+
+Packed storage keeps two 4-bit codes per uint8 (low nibble first), which is
+what the Pallas kernel consumes from HBM (4 bits/weight of traffic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_BASIS = 4
+NUM_CODES = 16
+
+
+def codes_to_bitplanes(codes: jax.Array) -> jax.Array:
+    """uint8 codes [..] -> bool bit-planes [4, ..] (LSB first)."""
+    codes = codes.astype(jnp.uint8)
+    planes = [(codes >> i) & 1 for i in range(NUM_BASIS)]
+    return jnp.stack(planes).astype(jnp.bool_)
+
+
+def bitplanes_to_codes(planes: jax.Array) -> jax.Array:
+    """bool bit-planes [4, ..] -> uint8 codes [..]."""
+    planes = planes.astype(jnp.uint8)
+    out = jnp.zeros(planes.shape[1:], jnp.uint8)
+    for i in range(NUM_BASIS):
+        out = out | (planes[i] << i)
+    return out
+
+
+def codebook(omega: jax.Array) -> jax.Array:
+    """All 16 subset-sum centroid values v_c = Σ_i ω_i bit_i(c).
+
+    omega: (*lead, 4) float -> (*lead, 16) float, v_0 == 0.  Leading dims
+    carry per-tensor centroid sets (paper §IV-B: each weight tensor gets its
+    own Ω) for layer-stacked (L, ...) and expert-stacked (E, ...) weights.
+    """
+    omega = jnp.asarray(omega)
+    idx = jnp.arange(NUM_CODES)
+    bits = jnp.stack([(idx >> i) & 1 for i in range(NUM_BASIS)], axis=-1)
+    return jnp.einsum("...i,ci->...c", omega, bits.astype(omega.dtype))
+
+
+def decode(codes: jax.Array, omega: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Dequantize codes to values. Differentiable w.r.t. omega.
+
+    codes: (*lead, R, C); omega: (*lead, 4) — or the classic unbatched
+    (R, C) / (4,).  Implemented as the bit-plane linear combination (not a
+    table gather) so that ``d decode / d ω_i = B_i`` — this is exactly
+    eq. (2) of the paper when reverse-mode differentiated, giving centroid
+    fine-tuning for free.
+    """
+    out = jnp.zeros(codes.shape, dtype)
+    for i in range(NUM_BASIS):
+        bit = ((codes >> i) & 1).astype(dtype)
+        w_i = omega[..., i].astype(dtype)
+        if omega.ndim > 1:
+            w_i = w_i[..., None, None]
+        out = out + w_i * bit
+    return out
+
+
+def pack_codes(codes: jax.Array) -> jax.Array:
+    """uint8 codes (..., K) -> packed uint8 (..., K//2), low nibble first.
+
+    Requires the trailing dim to be even.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(f"trailing dim must be even, got {codes.shape}")
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return (lo & 0xF) | (hi << 4)
+
+
+def pack_codes_rows(codes: jax.Array) -> jax.Array:
+    """uint8 codes (*lead, K, N) -> packed uint8 (*lead, K//2, N):
+    byte r = c[2r] | c[2r+1]<<4.
+
+    Row-pair (contraction-axis) packing — the layout the Pallas matmul kernel
+    consumes, so the in-kernel unpack is a cheap sublane interleave rather
+    than a lane shuffle. Requires K even.
+    """
+    if codes.shape[-2] % 2:
+        raise ValueError(f"contraction dim must be even, got {codes.shape}")
+    lo = codes[..., 0::2, :].astype(jnp.uint8)
+    hi = codes[..., 1::2, :].astype(jnp.uint8)
+    return (lo & 0xF) | (hi << 4)
+
+
+def unpack_codes_rows(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_codes_rows`: (*lead, K//2, N) -> (*lead, K, N)."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-2)        # (*lead, K//2, 2, N)
+    return out.reshape(*packed.shape[:-2], packed.shape[-2] * 2,
+                       packed.shape[-1])
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    """packed uint8 (..., K//2) -> uint8 codes (..., K)."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def init_omega_from_weights(w: jax.Array) -> jax.Array:
+    """Heuristic basis init: powers-of-two ladder scaled to the weight range.
+
+    With ω_i = s·2^i the 16 subset sums form a uniform grid [0, 15s]; we use
+    a symmetric variant {-8s, 4s, 2s, s} whose subset sums cover
+    [-8s, 7s] — i.e. int4 two's-complement — so that before any fine-tuning
+    the codebook behaves like a standard symmetric 4-bit quantizer. Centroid
+    fine-tuning (eq. 2) then departs from powers of two, which the paper
+    highlights as added expressivity.
+
+    w: (*lead, R, C) -> omega (*lead, 4): per-tensor scale over the trailing
+    two (matrix) dims, one centroid set per leading index.
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=(-2, -1)), 1e-8)
+    s = amax / 8.0
+    return jnp.stack([s, 2 * s, 4 * s, -8 * s], axis=-1).astype(w.dtype)

@@ -1,0 +1,119 @@
+"""Entropy-Constrained Lloyd (ECL) assignment — paper §IV-C.
+
+Assignment rule for weight w given the 16 subset-sum centroids v_c and the
+empirical cluster probabilities P_c:
+
+    code(w) = argmin_c  (w - v_c)^2 + lam * (-log2 P_c)
+
+The entropy penalty makes high-probability clusters cheaper, pushing mass
+onto few codes (usually code 0 == exact zero) — this is what produces the
+low first-order entropy H = -Σ P_c log2 P_c that the compressed formats and
+the accelerator exploit.
+
+Deviation from classic Lloyd (paper §IV-C): centroids are NOT updated by the
+Lloyd step; they are fine-tuned by gradient descent (eq. 2), implemented via
+the differentiable-decode parameterisation in ``qat.py``. The probability
+state is EMA-updated from the assignment histogram, so one training step
+performs one (assignment, probs) ECL iteration — across steps this is the
+full alternating algorithm.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bitplanes import NUM_CODES, codebook
+
+#: floor for cluster probabilities; keeps -log2(P) finite and bounds the
+#: penalty so dead clusters can be revived by the distance term.
+PROB_FLOOR = 1e-8
+
+
+def entropy_bits(probs: jax.Array) -> jax.Array:
+    """First-order entropy H = -Σ P log2 P (bits per weight).
+
+    probs: (*lead, 16) -> (*lead,)."""
+    p = jnp.clip(probs, PROB_FLOOR, 1.0)
+    return -jnp.sum(jnp.where(probs > 0, p * jnp.log2(p), 0.0), axis=-1)
+
+
+def assign(w: jax.Array, omega: jax.Array, probs: jax.Array,
+           lam: float | jax.Array) -> jax.Array:
+    """ECL assignment: uint8 codes minimising distance + entropy penalty.
+
+    w: (*lead, R, C) (or any shape when omega/probs are unbatched (4,)/(16,));
+    omega: (*lead, 4); probs: (*lead, 16) — returns codes with w.shape.
+    """
+    book = codebook(omega).astype(jnp.float32)                # (*lead, 16)
+    penalty = -jnp.log2(jnp.clip(probs, PROB_FLOOR, 1.0))     # (*lead, 16)
+    # Scale-invariant λ: the rate-distortion trade-off weighs bits against
+    # *squared distance*, whose magnitude is tensor-dependent (init scale,
+    # BN folding).  Normalising the penalty by mean(w²) makes one global λ
+    # meaningful across every layer of every arch — λ≈0.01-0.1 spans the
+    # paper's accuracy↔compression Pareto front for all of them.
+    wf = w.astype(jnp.float32)
+    if omega.ndim > 1:                                        # per-tensor sets
+        scale = jnp.mean(wf * wf, axis=(-2, -1), keepdims=True)[..., None]
+        book = book[..., None, None, :]                       # (*lead,1,1,16)
+        penalty = penalty[..., None, None, :]
+    else:
+        scale = jnp.mean(wf * wf)
+    cost = (wf[..., None] - book) ** 2 \
+        + jnp.asarray(lam, jnp.float32) * scale * penalty
+    return jnp.argmin(cost, axis=-1).astype(jnp.uint8)
+
+
+def histogram(codes: jax.Array, lead_ndim: int = 0) -> jax.Array:
+    """Normalised 16-bin histogram of codes (float32, sums to 1 per lead)."""
+    lead = codes.shape[:lead_ndim]
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), NUM_CODES, dtype=jnp.float32)
+    counts = onehot.reshape(*lead, -1, NUM_CODES).sum(-2)
+    return counts / jnp.maximum(counts.sum(-1, keepdims=True), 1.0)
+
+
+def update_probs(probs: jax.Array, codes: jax.Array, momentum: float = 0.9) -> jax.Array:
+    """EMA update of the cluster-probability state from fresh assignments."""
+    return momentum * probs + (1.0 - momentum) * histogram(
+        codes, lead_ndim=probs.ndim - 1)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def ecl_fit(w: jax.Array, omega: jax.Array, lam: float,
+            iters: int = 10) -> tuple[jax.Array, jax.Array]:
+    """Full alternating ECL (for post-training quantization / tests).
+
+    Alternates assignment <-> probability update; centroids stay fixed
+    (paper's modification). Returns (codes, probs).
+    """
+    lead = omega.shape[:-1]
+    probs0 = jnp.full((*lead, NUM_CODES), 1.0 / NUM_CODES, jnp.float32)
+
+    def body(probs, _):
+        codes = assign(w, omega, probs, lam)
+        return histogram(codes, lead_ndim=len(lead)), None
+
+    probs, _ = jax.lax.scan(body, probs0, None, length=iters)
+    codes = assign(w, omega, probs, lam)
+    return codes, probs
+
+
+def sparsity(codes: jax.Array) -> jax.Array:
+    """Fraction of exact zeros (code 0)."""
+    return jnp.mean((codes == 0).astype(jnp.float32))
+
+
+def assign_general(w: jax.Array, book: jax.Array, probs: jax.Array,
+                   lam) -> jax.Array:
+    """ECL assignment against an arbitrary codebook (len C).
+
+    Shared by EC4T (C=16 subset sums) and the EC2T ternary baseline
+    (C=3, {-a, 0, +a}) — the paper's fig. 9 comparison.  Same
+    scale-invariant entropy penalty as :func:`assign`."""
+    wf = w.astype(jnp.float32)
+    penalty = -jnp.log2(jnp.clip(probs, PROB_FLOOR, 1.0))
+    scale = jnp.mean(wf * wf)
+    cost = (wf[..., None] - book.astype(jnp.float32)) ** 2 \
+        + jnp.asarray(lam, jnp.float32) * scale * penalty
+    return jnp.argmin(cost, axis=-1).astype(jnp.uint8)

@@ -1,0 +1,299 @@
+"""Multiple lossless compressed formats for 4-bit code tensors (paper §III-B.2).
+
+Three formats, selected per layer by minimum encoded size (contribution 4):
+
+* ``dense4``  — trivial 4 bits/element, two codes per byte.
+* ``bitmask`` — the paper's "simple Huffman" code: a 1-bit/element occupancy
+  bitmask followed by the non-zero 4-bit codes in row-major order. Wins at
+  moderate sparsity (25–90 %).
+* ``csr``     — non-zero codes plus 8-bit column pointers within 256-wide
+  row chunks (matching the paper's 256-wide adder tree / 8-bit CSR pointer
+  chunks) and a per-chunk-row count. Wins at high sparsity (>90 %).
+
+These are host-side codecs (numpy): they are used for checkpoint payloads,
+host→device transfer accounting, and the Table-II benchmark. On-device
+execution always uses the packed dense4 form (the Pallas kernel input);
+``csr``/``bitmask`` are decoded on load — the software analogue of the
+paper's CSR→bitmask converter circuit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+CHUNK = 256  # paper's adder-tree width; CSR column pointers are 8-bit within a chunk
+
+FORMATS = ("dense4", "bitmask", "csr")
+
+
+@dataclass
+class CompressedTensor:
+    format: str
+    shape: tuple
+    payload: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    @property
+    def size_bits(self) -> int:
+        return int(sum(a.size * a.dtype.itemsize * 8 for a in self.payload.values()))
+
+    @property
+    def size_bytes(self) -> int:
+        return (self.size_bits + 7) // 8
+
+
+def _pack_nibbles(flat: np.ndarray) -> np.ndarray:
+    flat = flat.astype(np.uint8)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] & 0xF) | (flat[1::2] << 4)
+
+
+def _unpack_nibbles(packed: np.ndarray, n: int) -> np.ndarray:
+    out = np.empty(packed.size * 2, np.uint8)
+    out[0::2] = packed & 0xF
+    out[1::2] = (packed >> 4) & 0xF
+    return out[:n]
+
+
+# ---------------------------------------------------------------- dense4
+
+def encode_dense4(codes: np.ndarray) -> CompressedTensor:
+    return CompressedTensor("dense4", codes.shape,
+                            {"nibbles": _pack_nibbles(codes.reshape(-1))})
+
+
+def decode_dense4(ct: CompressedTensor) -> np.ndarray:
+    n = int(np.prod(ct.shape))
+    return _unpack_nibbles(ct.payload["nibbles"], n).reshape(ct.shape)
+
+
+# ---------------------------------------------------------------- bitmask
+
+def encode_bitmask(codes: np.ndarray) -> CompressedTensor:
+    flat = codes.reshape(-1).astype(np.uint8)
+    mask = flat != 0
+    return CompressedTensor("bitmask", codes.shape, {
+        "mask": np.packbits(mask),
+        "values": _pack_nibbles(flat[mask]),
+        "nnz": np.asarray([int(mask.sum())], np.int64),
+    })
+
+
+def decode_bitmask(ct: CompressedTensor) -> np.ndarray:
+    n = int(np.prod(ct.shape))
+    mask = np.unpackbits(ct.payload["mask"])[:n].astype(bool)
+    nnz = int(ct.payload["nnz"][0])
+    vals = _unpack_nibbles(ct.payload["values"], nnz)
+    out = np.zeros(n, np.uint8)
+    out[mask] = vals
+    return out.reshape(ct.shape)
+
+
+# ---------------------------------------------------------------- csr
+
+def encode_csr(codes: np.ndarray) -> CompressedTensor:
+    """CSR over 256-wide chunks: per chunk-row nnz count (uint16), 8-bit
+    column pointers, 4-bit values."""
+    mat = codes.reshape(codes.shape[0], -1) if codes.ndim > 1 else codes.reshape(1, -1)
+    rows, cols = mat.shape
+    pad = (-cols) % CHUNK
+    if pad:
+        mat = np.concatenate([mat, np.zeros((rows, pad), np.uint8)], axis=1)
+    chunked = mat.reshape(rows * (mat.shape[1] // CHUNK), CHUNK)
+    nz_r, nz_c = np.nonzero(chunked)
+    counts = np.bincount(nz_r, minlength=chunked.shape[0]).astype(np.uint16)
+    return CompressedTensor("csr", codes.shape, {
+        "counts": counts,
+        "colptr": nz_c.astype(np.uint8),
+        "values": _pack_nibbles(chunked[nz_r, nz_c]),
+        "nnz": np.asarray([nz_r.size], np.int64),
+    })
+
+
+def decode_csr(ct: CompressedTensor) -> np.ndarray:
+    shape = ct.shape
+    rows = shape[0] if len(shape) > 1 else 1
+    cols = int(np.prod(shape)) // rows
+    padded_cols = cols + ((-cols) % CHUNK)
+    chunked = np.zeros((rows * (padded_cols // CHUNK), CHUNK), np.uint8)
+    counts = ct.payload["counts"].astype(np.int64)
+    nnz = int(ct.payload["nnz"][0])
+    vals = _unpack_nibbles(ct.payload["values"], nnz)
+    row_idx = np.repeat(np.arange(chunked.shape[0]), counts)
+    chunked[row_idx, ct.payload["colptr"]] = vals
+    mat = chunked.reshape(rows, padded_cols)[:, :cols]
+    return mat.reshape(shape)
+
+
+_ENC = {"dense4": encode_dense4, "bitmask": encode_bitmask, "csr": encode_csr}
+_DEC = {"dense4": decode_dense4, "bitmask": decode_bitmask, "csr": decode_csr}
+
+
+def encode(codes: np.ndarray, fmt: str) -> CompressedTensor:
+    return _ENC[fmt](np.asarray(codes, np.uint8))
+
+
+def decode(ct: CompressedTensor) -> np.ndarray:
+    return _DEC[ct.format](ct)
+
+
+def analytic_size_bits(shape: tuple, nnz: int, fmt: str) -> int:
+    """Closed-form encoded size (bits) — used for fast format selection and
+    the Table-II style benchmark (matches the codecs above exactly)."""
+    n = int(np.prod(shape))
+    rows = shape[0] if len(shape) > 1 else 1
+    cols = n // rows
+    chunk_rows = rows * ((cols + CHUNK - 1) // CHUNK)
+    if fmt == "dense4":
+        return 2 * ((n + 1) // 2) * 4
+    if fmt == "bitmask":
+        return 8 * ((n + 7) // 8) + 2 * ((nnz + 1) // 2) * 4 + 64
+    if fmt == "csr":
+        return 16 * chunk_rows + 8 * nnz + 2 * ((nnz + 1) // 2) * 4 + 64
+    raise ValueError(fmt)
+
+
+def select_format(codes: np.ndarray) -> str:
+    """Pick the most compact of the three formats (paper contribution 4)."""
+    codes = np.asarray(codes, np.uint8)
+    nnz = int(np.count_nonzero(codes))
+    sizes = {f: analytic_size_bits(codes.shape, nnz, f) for f in FORMATS}
+    return min(sizes, key=sizes.get)
+
+
+def encode_best(codes: np.ndarray) -> CompressedTensor:
+    return encode(codes, select_format(codes))
+
+
+def compression_ratio(codes: np.ndarray, fmt: str | None = None,
+                      orig_bits_per_weight: int = 32) -> float:
+    """Full-precision size / compressed size (paper Table II 'CR')."""
+    codes = np.asarray(codes, np.uint8)
+    fmt = fmt or select_format(codes)
+    nnz = int(np.count_nonzero(codes))
+    comp = analytic_size_bits(codes.shape, nnz, fmt)
+    return codes.size * orig_bits_per_weight / comp
+
+
+# ------------------------------------------------------------- huffman
+# Beyond-paper extension in the paper's own lineage ([5] Deep Compression,
+# [6] DeepCABAC): a canonical Huffman code over the 16 cluster ids.  Where
+# CSR/bitmask only exploit *zeros*, Huffman exploits the full low-entropy
+# histogram that EC4T training produces — encoded size approaches
+# H bits/weight, beating every other format once H < ~3.5 bits.  Decode is
+# table-driven (canonical codes), the natural software analogue of the
+# paper's "efficient loading of repeated values".
+
+def _huffman_lengths(counts: np.ndarray) -> np.ndarray:
+    """Code lengths for 16 symbols (package-merge-free simple Huffman)."""
+    import heapq
+    heap = [(int(c), i, (i,)) for i, c in enumerate(counts) if c > 0]
+    if len(heap) == 1:
+        lengths = np.zeros(16, np.uint8)
+        lengths[heap[0][1]] = 1
+        return lengths
+    heapq.heapify(heap)
+    lengths = np.zeros(16, np.uint8)
+    tie = 16
+    while len(heap) > 1:
+        c1, _, s1 = heapq.heappop(heap)
+        c2, _, s2 = heapq.heappop(heap)
+        for s in s1 + s2:
+            lengths[s] += 1
+        heapq.heappush(heap, (c1 + c2, tie, s1 + s2))
+        tie += 1
+    return lengths
+
+
+def _canonical_codes(lengths: np.ndarray):
+    """(code, length) per symbol, canonical ordering.
+
+    Pure-python ints throughout: ``int << np.uint8`` promotes to uint8
+    under NumPy 2 and silently wraps at 255 (bug found by hypothesis)."""
+    order = sorted((int(l), s) for s, l in enumerate(lengths) if l > 0)
+    codes = np.zeros(16, np.uint32)
+    code = 0
+    prev_len = order[0][0]
+    for l, s in order:
+        code <<= (l - prev_len)
+        codes[s] = code
+        code += 1
+        prev_len = l
+    return codes
+
+
+def encode_huffman(codes: np.ndarray) -> CompressedTensor:
+    flat = codes.reshape(-1).astype(np.uint8)
+    counts = np.bincount(flat, minlength=16)
+    lengths = _huffman_lengths(counts)
+    cw = _canonical_codes(lengths)
+    # bit-pack MSB-first
+    sym_lengths = lengths[flat].astype(np.int64)
+    total_bits = int(sym_lengths.sum())
+    out = np.zeros((total_bits + 7) // 8, np.uint8)
+    pos = np.concatenate([[0], np.cumsum(sym_lengths)[:-1]])
+    for s in range(16):
+        l = int(lengths[s])
+        if l == 0:
+            continue
+        idx = np.nonzero(flat == s)[0]
+        if idx.size == 0:
+            continue
+        word = int(cw[s])
+        for b in range(l):
+            bit = (word >> (l - 1 - b)) & 1
+            if bit:
+                p = pos[idx] + b
+                # ufunc.at: plain fancy-index |= drops duplicate byte hits
+                np.bitwise_or.at(out, p // 8,
+                                 (128 >> (p % 8)).astype(np.uint8))
+    return CompressedTensor("huffman", codes.shape, {
+        "bits": out,
+        "lengths": lengths,
+        "nbits": np.asarray([total_bits], np.int64),
+    })
+
+
+def decode_huffman(ct: CompressedTensor) -> np.ndarray:
+    lengths = ct.payload["lengths"]
+    cw = _canonical_codes(lengths)
+    n = int(np.prod(ct.shape))
+    bits = np.unpackbits(ct.payload["bits"])[: int(ct.payload["nbits"][0])]
+    # build (length, code) -> symbol lookup
+    lut = {(int(lengths[s]), int(cw[s])): s
+           for s in range(16) if lengths[s] > 0}
+    out = np.empty(n, np.uint8)
+    acc, alen, j = 0, 0, 0
+    for b in bits:
+        acc = (acc << 1) | int(b)
+        alen += 1
+        sym = lut.get((alen, acc))
+        if sym is not None:
+            out[j] = sym
+            j += 1
+            acc, alen = 0, 0
+    assert j == n, (j, n)
+    return out.reshape(ct.shape)
+
+
+_ENC["huffman"] = encode_huffman
+_DEC["huffman"] = decode_huffman
+FORMATS_EXT = FORMATS + ("huffman",)
+
+
+def analytic_size_bits_huffman(codes: np.ndarray) -> int:
+    counts = np.bincount(codes.reshape(-1).astype(np.uint8), minlength=16)
+    lengths = _huffman_lengths(counts) if counts.sum() else np.zeros(16)
+    data_bits = int((counts * lengths).sum())
+    return 8 * ((data_bits + 7) // 8) + 16 * 8 + 64   # + table + header
+
+
+def select_format_ext(codes: np.ndarray) -> str:
+    """Format selection over the extended set (incl. huffman)."""
+    codes = np.asarray(codes, np.uint8)
+    nnz = int(np.count_nonzero(codes))
+    sizes = {f: analytic_size_bits(codes.shape, nnz, f) for f in FORMATS}
+    sizes["huffman"] = analytic_size_bits_huffman(codes)
+    return min(sizes, key=sizes.get)

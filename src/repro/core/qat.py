@@ -1,0 +1,162 @@
+"""EC4T — entropy-constrained 4-bit training (paper §IV), as a parameterisation.
+
+A quantized tensor is stored in the trainable tree as a dict
+
+    {"w": master_fp_weights, "omega": (4,) basis centroids}
+
+with a mirrored non-trainable quantization state
+
+    {"probs": (16,) EMA cluster probabilities}
+
+The forward pass uses :func:`fake_quant`:
+
+    codes = stop_grad( ECL_assign(w, omega, probs, lam) )      # §IV-C
+    w_hat = Σ_i ω_i · bit_i(codes)       (differentiable in ω) # eq. (1)
+    w_used = w_hat + (w - stop_grad(w))                        # STE, §IV-D
+
+Reverse-mode AD then yields exactly the paper's two update rules at once:
+  * ∂L/∂w      = δW               (straight-through to the masters)
+  * ∂L/∂ω_i    = Σ_j δW_j B_i[j]  (centroid fine-tuning, eq. (2))
+
+The probability state is EMA-updated from fresh assignments once per step
+(one alternating ECL iteration per training step — see ``ecl.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import bitplanes, ecl
+
+QUANT_KEYS = frozenset({"w", "omega"})
+FROZEN_KEYS = frozenset({"packed", "omega"})
+
+
+def is_quant_leaf(node: Any) -> bool:
+    """A dict holding a quantized tensor parameterisation."""
+    return isinstance(node, dict) and QUANT_KEYS.issubset(node.keys())
+
+
+def is_frozen_leaf(node: Any) -> bool:
+    """A dict holding a frozen (packed 4-bit) serving tensor."""
+    return isinstance(node, dict) and FROZEN_KEYS.issubset(node.keys()) \
+        and "w" not in node
+
+
+def make_quant_param(w: jax.Array) -> dict:
+    return {"w": w, "omega": bitplanes.init_omega_from_weights(w)}
+
+
+def init_qstate_leaf(lead: tuple = ()) -> dict:
+    return {"probs": jnp.full((*lead, ecl.NUM_CODES),
+                              1.0 / ecl.NUM_CODES, jnp.float32)}
+
+
+def fake_quant(w: jax.Array, omega: jax.Array, probs: jax.Array,
+               lam, dtype=None) -> jax.Array:
+    """STE fake-quantization with differentiable centroid path."""
+    dtype = dtype or w.dtype
+    codes = jax.lax.stop_gradient(ecl.assign(w, omega, probs, lam))
+    w_hat = bitplanes.decode(codes, omega, jnp.float32)
+    ste = w.astype(jnp.float32) - jax.lax.stop_gradient(w.astype(jnp.float32))
+    return (w_hat + ste).astype(dtype)
+
+
+def apply_quant(node: dict, qstate: dict, lam, dtype=None) -> jax.Array:
+    return fake_quant(node["w"], node["omega"], qstate["probs"], lam, dtype)
+
+
+# --------------------------------------------------------------- tree utils
+
+def _map_quant_leaves(fn: Callable, tree: Any, *rest: Any) -> Any:
+    """Map ``fn`` over quantized-parameter dicts (treated as leaves)."""
+    return jax.tree_util.tree_map(
+        fn, tree, *rest, is_leaf=is_quant_leaf)
+
+
+def build_qstate(params: Any) -> Any:
+    """Mirror tree with a probs state per quantized leaf.
+
+    Non-quantized leaves mirror to a tiny uint8 placeholder sharing the
+    leaf's *leading* dim — a leaf (not None) at every position keeps the
+    tree tree_map-compatible with the parameter tree, and the leading dim
+    keeps layer-stacked mirrors sliceable by the scan-over-layers.
+    """
+    def f(node):
+        if is_quant_leaf(node):
+            return init_qstate_leaf(node["w"].shape[:-2])
+        if hasattr(node, "ndim") and node.ndim >= 1:
+            return jnp.zeros(node.shape[:1], jnp.uint8)
+        return jnp.zeros((), jnp.uint8)
+    return jax.tree_util.tree_map(f, params, is_leaf=is_quant_leaf)
+
+
+def update_qstate(params: Any, qstate: Any, lam,
+                  momentum: float = 0.9) -> Any:
+    """One EMA step of the per-tensor cluster probabilities (ECL iteration).
+
+    Runs under jit/pjit; the histogram reduction over a sharded master weight
+    produces a single 16-element psum per tensor.
+    """
+    def f(node, qs):
+        if not is_quant_leaf(node):
+            return qs
+        codes = ecl.assign(node["w"], node["omega"], qs["probs"], lam)
+        return {"probs": ecl.update_probs(qs["probs"], codes, momentum)}
+    return jax.tree_util.tree_map(f, params, qstate, is_leaf=is_quant_leaf)
+
+
+def quantize_tree(params: Any, qstate: Any, lam) -> Any:
+    """Freeze: replace each quantized leaf with {codes, omega} (inference)."""
+    def f(node, qs):
+        if not is_quant_leaf(node):
+            return node
+        codes = ecl.assign(node["w"], node["omega"], qs["probs"], lam)
+        return {"codes": codes, "omega": node["omega"]}
+    return jax.tree_util.tree_map(f, params, qstate, is_leaf=is_quant_leaf)
+
+
+def freeze_tree(params: Any, qstate: Any, lam) -> Any:
+    """Serving form: every quantized leaf becomes {"packed", "omega"} with
+    row-pair-packed uint8 codes — 4 bits/weight in HBM (the paper's traffic
+    win; the dry-run's memory roofline term sees exactly these bytes).
+    Requires even contraction dims (all assigned archs satisfy this)."""
+    def f(node, qs):
+        if not is_quant_leaf(node):
+            return node
+        codes = ecl.assign(node["w"], node["omega"], qs["probs"], lam)
+        return {"packed": bitplanes.pack_codes_rows(codes),
+                "omega": node["omega"].astype(jnp.float32)}
+    return jax.tree_util.tree_map(f, params, qstate, is_leaf=is_quant_leaf)
+
+
+def decode_frozen(node: dict, dtype=jnp.float32) -> jax.Array:
+    codes = bitplanes.unpack_codes_rows(node["packed"])
+    return bitplanes.decode(codes, node["omega"], dtype)
+
+
+def stats(params: Any, qstate: Any, lam) -> dict:
+    """Global sparsity / entropy / size diagnostics over quantized leaves."""
+    total, zeros, bits = [], [], []
+
+    def f(node, qs):
+        if is_quant_leaf(node):
+            codes = ecl.assign(node["w"], node["omega"], qs["probs"], lam)
+            lead_nd = node["omega"].ndim - 1
+            per_lead = ecl.entropy_bits(ecl.histogram(codes, lead_nd))
+            elems_per_lead = codes.shape[-2] * codes.shape[-1] \
+                if codes.ndim >= 2 else codes.size
+            total.append(jnp.asarray(codes.size, jnp.float32))
+            zeros.append(jnp.sum((codes == 0).astype(jnp.float32)))
+            bits.append(jnp.sum(per_lead) * elems_per_lead)
+        return node
+
+    _map_quant_leaves(f, params, qstate)
+    n = sum(total) if total else jnp.asarray(1.0)
+    return {
+        "quant_params": n,
+        "sparsity": (sum(zeros) / n) if zeros else jnp.asarray(0.0),
+        "entropy_bits_per_weight": (sum(bits) / n) if bits else jnp.asarray(0.0),
+    }

@@ -1,0 +1,5 @@
+# FantastIC4 Pallas TPU kernels: packed-int4 ACM matmul with fused epilogue
+# (fantastic4_matmul.py) and fused ECL assignment+dequant (ecl_quant.py).
+# ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles,
+# including the literal bit-plane ACM form of eq. (1).
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: packed-int4 ACM matmul with fused §V epilogue.
+
+TPU adaptation of the FantastIC4 ACM engine (DESIGN.md §2): the packed 4-bit
+codes travel HBM→VMEM at 4 bits/weight (the paper's data-movement win); a
+VMEM tile is decoded to ``W_tile = Σ_i ω_i B_i`` with VPU ops (the 4
+"multipliers" of the paper become 4 scalar·mask AXPYs per tile) and consumed
+by a single MXU matmul. The per-layer epilogue (×α₁ per-feature, +bias,
+ReLU, ×α₂) is fused so the (M,N) output never round-trips HBM between ops —
+the software analogue of the paper's pipelined float unit.
+
+Layouts / tiling:
+  x       (M, K)     activation tile (bm, bk) — revisited across the N grid
+                     (activation-stationary dataflow, §V-C).
+  packed  (K//2, N)  two codes per byte along K (sublane interleave unpack).
+  omega   (1, 4) f32; bias/alpha1 (1, N) f32; alpha2 (1, 1) f32.
+  out     (M, N)     accumulated in an f32 VMEM scratch across the K grid.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"), M/N parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref,
+            o_ref, acc_ref, *, activation: Optional[str], n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = w_ref[...]                                   # (bk//2, bn) uint8
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    codes = jnp.stack([lo, hi], axis=1)                   # (bk//2, 2, bn)
+    codes = codes.reshape(packed.shape[0] * 2, packed.shape[1])
+
+    # W_tile = Σ_i ω_i B_i  — the 4-multiplier ACM recombination, per tile.
+    w_tile = jnp.zeros(codes.shape, jnp.float32)
+    for i in range(4):
+        bit = ((codes >> i) & 1).astype(jnp.float32)
+        w_tile = w_tile + omega_ref[0, i] * bit
+
+    x_tile = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_tile, w_tile,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...]
+        y = y * alpha1_ref[...]                           # (1, bn) broadcasts
+        y = y + bias_ref[...]
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        y = y * alpha2_ref[0, 0]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "out_dtype", "block_m", "block_n",
+                     "block_k", "interpret"))
+def fantastic4_matmul_pallas(
+        x: jax.Array, packed: jax.Array, omega: jax.Array,
+        alpha1: jax.Array, bias: jax.Array, alpha2: jax.Array,
+        *, activation: Optional[str] = None, out_dtype=None,
+        block_m: int = 128, block_n: int = 256, block_k: int = 512,
+        interpret: bool = False) -> jax.Array:
+    """x:(M,K) f32/bf16/int8 · packed:(K//2,N) uint8 -> (M,N) out_dtype."""
+    m, k = x.shape
+    k2, n = packed.shape
+    assert k == 2 * k2, (x.shape, packed.shape)
+    out_dtype = out_dtype or x.dtype
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bk // 2), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    alpha1 = _pad_to(alpha1.reshape(1, -1).astype(jnp.float32), 1, bn)
+    bias = _pad_to(bias.reshape(1, -1).astype(jnp.float32), 1, bn)
+    alpha2 = alpha2.reshape(1, 1).astype(jnp.float32)
+    omega = omega.reshape(1, 4).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, wp, omega, alpha1, bias, alpha2)
+    return out[:m, :n]

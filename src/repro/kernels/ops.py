@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the FantastIC4 Pallas kernels.
+
+On a TPU backend the Pallas kernels run natively; on CPU (this container)
+they execute in ``interpret=True`` mode so every test validates the actual
+kernel body against the pure-jnp oracles in ``ref.py``. ``use_kernel=False``
+selects the oracle path (used by the models' default serving path on CPU,
+where interpret-mode would be needlessly slow for large layers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ecl_quant import ecl_quant_pallas
+from .fantastic4_matmul import fantastic4_matmul_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fantastic4_matmul(x: jax.Array, packed: jax.Array, omega: jax.Array,
+                      bias: Optional[jax.Array] = None,
+                      alpha1: Optional[jax.Array] = None,
+                      alpha2: Optional[jax.Array] = None,
+                      activation: Optional[str] = None,
+                      out_dtype=None,
+                      use_kernel: bool = True,
+                      interpret: Optional[bool] = None,
+                      block_m: int = 128, block_n: int = 256,
+                      block_k: int = 512) -> jax.Array:
+    """Quantized linear y = epilogue(x @ decode(packed, omega)).
+
+    x: (M, K); packed: (K//2, N) uint8 (row-pair packed); omega: (4,).
+    bias/alpha1: (N,) or None; alpha2: scalar or None.
+    """
+    n = packed.shape[1]
+    if not use_kernel:
+        return ref.fantastic4_matmul_ref(
+            x, packed, omega, bias=bias, alpha1=alpha1, alpha2=alpha2,
+            activation=activation, out_dtype=out_dtype)
+    interpret = _default_interpret() if interpret is None else interpret
+    alpha1 = jnp.ones((n,), jnp.float32) if alpha1 is None else alpha1
+    bias = jnp.zeros((n,), jnp.float32) if bias is None else bias
+    alpha2 = jnp.ones((), jnp.float32) if alpha2 is None else jnp.asarray(alpha2)
+    return fantastic4_matmul_pallas(
+        x, packed, omega, alpha1, bias, alpha2,
+        activation=activation, out_dtype=out_dtype or x.dtype,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+
+
+def ecl_quant(w: jax.Array, omega: jax.Array, penalty: jax.Array,
+              use_kernel: bool = True,
+              interpret: Optional[bool] = None,
+              block_r: int = 256, block_c: int = 512):
+    """Fused ECL assign + dequant. Returns (codes uint8, w_hat f32)."""
+    if not use_kernel:
+        return ref.ecl_quant_ref(w, omega, penalty)
+    interpret = _default_interpret() if interpret is None else interpret
+    squeeze = w.ndim == 1
+    w2 = w[None, :] if squeeze else w.reshape(w.shape[0], -1)
+    codes, what = ecl_quant_pallas(w2, omega, penalty,
+                                   block_r=block_r, block_c=block_c,
+                                   interpret=interpret)
+    if squeeze:
+        return codes[0], what[0]
+    return codes.reshape(w.shape), what.reshape(w.shape)

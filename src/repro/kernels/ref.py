@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the FantastIC4 kernels.
+
+``fantastic4_matmul_ref`` — decode packed 4-bit codes to weights, one f32
+matmul, fused §V epilogue.  ``acm_bitplane_ref`` — the *literal* ACM paradigm
+of eq. (1): four bit-plane dot products accumulated first, multiplied by the
+4 basis centroids last.  Both are mathematically identical; tests assert it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitplanes
+
+
+def _epilogue(y: jax.Array, bias, alpha1, alpha2, activation: Optional[str],
+              out_dtype) -> jax.Array:
+    if alpha1 is not None:
+        y = y * alpha1.astype(y.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation not in (None, "none"):
+        raise ValueError(f"unsupported activation {activation}")
+    if alpha2 is not None:
+        y = y * jnp.asarray(alpha2, y.dtype)
+    return y.astype(out_dtype)
+
+
+def unpack_rows(packed: jax.Array) -> jax.Array:
+    """(K//2, N) uint8 -> (K, N) uint8 codes; byte r = c[2r] | c[2r+1]<<4."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=1).reshape(packed.shape[0] * 2,
+                                               packed.shape[1])
+
+
+def decode_weights(packed: jax.Array, omega: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return bitplanes.decode(unpack_rows(packed), omega, dtype)
+
+
+def fantastic4_matmul_ref(x: jax.Array, packed: jax.Array, omega: jax.Array,
+                          bias=None, alpha1=None, alpha2=None,
+                          activation: Optional[str] = None,
+                          out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    w = decode_weights(packed, omega, jnp.float32)
+    y = x.astype(jnp.float32) @ w
+    return _epilogue(y, bias, alpha1, alpha2, activation, out_dtype)
+
+
+def acm_bitplane_ref(x: jax.Array, packed: jax.Array, omega: jax.Array,
+                     bias=None, alpha1=None, alpha2=None,
+                     activation: Optional[str] = None,
+                     out_dtype=None) -> jax.Array:
+    """Literal accumulate-then-multiply (paper fig. 1): accumulate activations
+    per bit-plane, then 4 multiplies + 3 adds per output element."""
+    out_dtype = out_dtype or x.dtype
+    codes = unpack_rows(packed)
+    xf = x.astype(jnp.float32)
+    acc = 0.0
+    for i in range(bitplanes.NUM_BASIS):
+        plane = ((codes >> i) & 1).astype(jnp.float32)       # B_i
+        acc = acc + omega[i].astype(jnp.float32) * (xf @ plane)
+    return _epilogue(acc, bias, alpha1, alpha2, activation, out_dtype)
+
+
+def ecl_quant_ref(w: jax.Array, omega: jax.Array, penalty: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Fused ECL assignment + dequantization oracle.
+
+    penalty = lam * (-log2 probs), precomputed (16,).
+    Returns (codes uint8, w_hat f32).
+    """
+    book = bitplanes.codebook(omega).astype(jnp.float32)
+    cost = (w.astype(jnp.float32)[..., None] - book) ** 2 + penalty
+    codes = jnp.argmin(cost, axis=-1).astype(jnp.uint8)
+    return codes, book[codes]

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: a leading 'pod'
+axis, (pod=2, data=16, model=16) = 512 chips; batch shards over
+('pod', 'data') and the model axis stays intra-pod (ICI), so the only
+inter-pod (DCI) collective is the DP gradient reduction — the standard
+multi-pod posture.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before *any* device query).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh() -> jax.sharding.Mesh:
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def describe(mesh: jax.sharding.Mesh) -> dict:
+    return {"axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_devices": int(mesh.devices.size)}

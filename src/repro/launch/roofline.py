@@ -1,0 +1,199 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = Σ per-class collective bytes / link_bw
+
+Sources: ``compiled.cost_analysis()`` provides FLOPs and bytes-accessed per
+device (XLA reports per-partition numbers under SPMD).  Collective bytes are
+NOT in cost_analysis — :func:`collective_bytes` parses the optimized HLO and
+sums operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, scaled by how many times the op runs
+(trip counts of enclosing while-loops, i.e. scan-over-layers).
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment sheet).
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) anchors the "useful fraction":
+HLO_FLOPs ≫ MODEL_FLOPS exposes remat recompute, masked-attention waste and
+dispatch overhead — the per-cell notes call out which.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?:\(([^)]*)\)|(\S+?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_WHILE_TRIP_RE = re.compile(
+    r"while\(.*?\)[^\n]*?trip_count[=\":\s]+(\d+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective class, weighted by the trip
+    count of the innermost enclosing while loop (scan-over-layers runs each
+    in-body collective L times).
+
+    Returns {class: bytes} + {"total": ..., "count": ...}.  Byte figures are
+    per-device (HLO shapes under SPMD are the per-partition shapes).
+    """
+    # map line index -> trip count by tracking while-body computations
+    trip_by_comp: dict = {}
+    cur_comp = None
+    comp_re = re.compile(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*(?:->.*)?\{\s*$")
+    # first pass: find calls to while with known trip counts and their bodies
+    body_trip: dict = {}
+    for m in re.finditer(
+            r"while\([^\n]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+            r"[^\n]*", hlo_text):
+        line = m.group(0)
+        tc = re.search(r'known_trip_count=\{n="?(\d+)"?\}', line)
+        if not tc:
+            tc = re.search(r"trip_count[=\":\s]+(\d+)", line)
+        body_trip[m.group(2)] = int(tc.group(1)) if tc else 1
+
+    out: dict = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+                 "all-to-all": 0, "collective-permute": 0, "count": 0}
+    cur_trip = 1
+    for line in hlo_text.splitlines():
+        mm = comp_re.match(line.strip()) if line.strip().endswith("{") else None
+        if mm is not None and not line.lstrip().startswith(("ENTRY",)):
+            name = mm.group(1).lstrip("%")
+            cur_trip = body_trip.get(name, 1)
+        if line.lstrip().startswith("ENTRY"):
+            cur_trip = 1
+        cm = _COLL_RE.match(line)
+        if cm:
+            shape_str = cm.group(1) or cm.group(2)
+            kind = cm.group(3)
+            out[kind] += _shape_bytes(shape_str) * cur_trip
+            out["count"] += cur_trip
+    out["total"] = sum(out[k] for k in ("all-gather", "all-reduce",
+                                        "reduce-scatter", "all-to-all",
+                                        "collective-permute"))
+    return out
+
+
+def model_flops(cfg, shape_info: dict) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D per generated
+    token for inference kinds.  N counts *active* params touched per token."""
+    n_active = active_params(cfg)
+    b, s = shape_info["batch"], shape_info["seq"]
+    kind = shape_info["kind"]
+    if kind == "train":
+        tokens = b * s
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = b * s
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * b          # decode: one token per sequence
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    d, L = cfg.d_model, cfg.n_layers
+    total = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    hd = cfg.resolved_head_dim
+
+    def attn_params():
+        if cfg.mla is not None:
+            m = cfg.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim
+                                                      + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        return d * hd * (cfg.n_heads * 2 + cfg.n_kv * 2)
+
+    def ffn_params(ff):
+        mult = 3 if cfg.act == "swiglu" else 2
+        return mult * d * ff
+
+    def ssm_params():
+        di = cfg.d_inner
+        dproj = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+        return d * dproj + di * d
+
+    kinds = {"dense": 0, "moe": 0, "ssm": 0, "hybrid": 0}
+    if cfg.family == "moe":
+        kinds["dense"] = cfg.n_dense_layers
+        kinds["moe"] = L - cfg.n_dense_layers
+    elif cfg.family == "ssm":
+        kinds["ssm"] = L
+    elif cfg.family == "hybrid":
+        kinds["hybrid"] = L
+    else:
+        kinds["dense"] = L
+
+    total += kinds["dense"] * (attn_params() + ffn_params(cfg.dense_ff
+                                                          or cfg.d_ff))
+    total += kinds["moe"] * (attn_params()
+                             + (cfg.top_k + cfg.n_shared_experts)
+                             * ffn_params(cfg.d_ff))
+    total += kinds["ssm"] * ssm_params()
+    total += kinds["hybrid"] * (attn_params() + ssm_params()
+                                + ffn_params(cfg.d_ff))
+    if cfg.family == "audio":
+        total += cfg.n_enc_layers * (attn_params() + ffn_params(cfg.d_ff))
+        total += L * (2 * attn_params() + ffn_params(cfg.d_ff))
+        total -= L * (attn_params() + ffn_params(cfg.d_ff))  # counted above
+    return float(total)
+
+
+def roofline_terms(rec: dict, cfg=None) -> dict:
+    """Per-device seconds for each term + the dominant bottleneck."""
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["bytes_per_device"] / HBM_BW
+    coll = rec.get("collectives", {})
+    collective_s = coll.get("total", 0) / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda kv: kv[1])
+    out = {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dom[0],
+        "bound_s": dom[1],
+    }
+    if cfg is not None:
+        from .specs import SHAPES
+        info = SHAPES[rec["shape"]]
+        mf = model_flops(cfg, info)
+        hlo_total = rec["flops_per_device"] * rec["n_devices"]
+        out["model_flops"] = mf
+        out["hlo_flops_total"] = hlo_total
+        out["useful_fraction"] = mf / hlo_total if hlo_total else 0.0
+        # roofline fraction: model-flops-time over the bound term
+        ideal_s = mf / (rec["n_devices"] * PEAK_FLOPS)
+        out["ideal_compute_s"] = ideal_s
+        out["roofline_fraction"] = ideal_s / dom[1] if dom[1] else 0.0
+    return out

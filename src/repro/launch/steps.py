@@ -1,0 +1,213 @@
+"""Step functions (train / prefill / decode) + their sharding contracts.
+
+``build_step`` returns (fn, in_shardings, out_shardings, input_specs) for a
+given (arch × shape × mesh) cell — the exact object the dry-run lowers and
+the launchers execute.  Serving steps run on the *frozen* tree (packed
+4-bit codes + ω): weights enter HBM at 4 bits each and are decoded inline —
+FantastIC4's data-movement win expressed where the TPU roofline can see it
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core import qat
+from ..models import lm as lm_model
+from ..models import whisper as W
+from ..nn import transformer as T
+from ..nn.module import QuantCtx
+from ..optim import adam, ec4t
+from ..runtime.sharding import Rules
+from . import specs as specs_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    name: str
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    args: tuple                  # abstract args (ShapeDtypeStructs)
+    donate: tuple = ()
+
+
+def make_rules(cfg: ArchConfig, mesh: jax.sharding.Mesh) -> Rules:
+    return Rules(tuple(mesh.axis_names),
+                 dict(zip(mesh.axis_names, mesh.devices.shape)), cfg)
+
+
+def _ctx(cfg: ArchConfig, *, quant: bool, dtype=jnp.bfloat16) -> QuantCtx:
+    return QuantCtx(quant=quant, lam=cfg.lam, compute_dtype=dtype)
+
+
+def _loss_fn(cfg: ArchConfig, mesh, use_ep: bool, remat: str):
+    fwd = (W.whisper_forward_loss if cfg.family == "audio"
+           else lm_model.lm_forward_loss)
+
+    def loss(params, qstate, batch, lam):
+        ctx = QuantCtx(quant=cfg.quantize, lam=lam,
+                       compute_dtype=jnp.bfloat16)
+        return fwd(params, qstate, batch, ctx, cfg, mesh=mesh,
+                   use_ep=use_ep, remat=remat)
+    return loss
+
+
+# ---------------------------------------------------------------- train
+
+def build_train_step(cfg: ArchConfig, mesh: jax.sharding.Mesh, *,
+                     shape_name: str = "train_4k", remat: str = "full",
+                     use_ep: bool = True, zero1: bool = True,
+                     adam_cfg: Optional[adam.AdamConfig] = None) -> StepBundle:
+    rules = make_rules(cfg, mesh)
+    adam_cfg = adam_cfg or adam.AdamConfig()
+    step_fn = ec4t.make_train_step(
+        _loss_fn(cfg, mesh, use_ep, remat), adam_cfg, lam=cfg.lam)
+
+    a_state = specs_mod.abstract_train_state(cfg)
+    a_batch = specs_mod.input_specs(cfg, shape_name)
+
+    p_specs = rules.param_specs(a_state["params"])
+    state_specs = {
+        "params": p_specs,
+        "opt": {"m": rules.opt_specs(a_state["params"], zero1=zero1),
+                "v": rules.opt_specs(a_state["params"], zero1=zero1),
+                "step": P()},
+        "qstate": rules.qstate_specs(a_state["qstate"]),
+    }
+    batch_specs = rules.batch_specs(a_batch)
+    in_sh = (rules.named(mesh, state_specs), rules.named(mesh, batch_specs))
+    out_sh = (rules.named(mesh, state_specs), None)
+    return StepBundle("train", step_fn, in_sh, out_sh,
+                      (a_state, a_batch), donate=(0,))
+
+
+# -------------------------------------------------------------- serving
+
+def _frozen_params(cfg: ArchConfig, serve_dtype: str = "packed4") -> Any:
+    """Abstract serving tree: "packed4" (codes at 4 bits/weight, decoded
+    on the fly — the FantastIC4 path) or "bf16" (plain weights — the
+    comparison point that isolates what the Pallas VMEM-decode kernel must
+    beat; §Perf deepseek iterations)."""
+    a_params = specs_mod.abstract_params(cfg)
+    if serve_dtype == "bf16":
+        def to_bf16(tree):
+            def f(node):
+                if qat.is_quant_leaf(node):
+                    return node["w"].astype(jnp.bfloat16)
+                return node
+            return jax.tree_util.tree_map(f, tree,
+                                          is_leaf=qat.is_quant_leaf)
+        return jax.eval_shape(to_bf16, a_params)
+    a_q = jax.eval_shape(qat.build_qstate, a_params)
+    return jax.eval_shape(
+        functools.partial(qat.freeze_tree, lam=cfg.lam), a_params, a_q)
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: jax.sharding.Mesh, *,
+                       shape_name: str = "prefill_32k",
+                       use_ep: bool = True,
+                       serve_dtype: str = "packed4") -> StepBundle:
+    rules = make_rules(cfg, mesh)
+    info = specs_mod.SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    a_params = _frozen_params(cfg, serve_dtype)
+    a_batch = specs_mod.input_specs(cfg, shape_name)
+
+    if cfg.family == "audio":
+        def fn(params, batch):
+            ctx = _ctx(cfg, quant=False)
+            enc = W.whisper_encode(params, 0, batch["embeds"], ctx, cfg)
+            cross = W.precompute_cross(params, 0, enc, ctx, cfg)
+            tgt = batch["tokens"].shape[1]
+            cache = W.init_dec_cache(cfg, b, W.MAX_TGT)
+            logits, cache = W.whisper_decode(params, 0, batch["tokens"],
+                                             cross, ctx, cfg, cache=cache)
+            nxt = jnp.argmax(logits[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            return nxt, cache, cross
+
+        a_cache = jax.eval_shape(
+            functools.partial(W.init_dec_cache, cfg, b, W.MAX_TGT))
+        hd = cfg.resolved_head_dim
+        a_cross = (jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, cfg.enc_len, cfg.n_kv, hd), jnp.bfloat16),) * 2
+        out_specs = (rules.batch_spec(2, b), rules.cache_specs(a_cache),
+                     rules.cache_specs(a_cross))
+    else:
+        def fn(params, batch):
+            ctx = _ctx(cfg, quant=False)
+            cache = T.init_cache(cfg, b, s)
+            logits, cache, _ = T.lm_apply(
+                params, 0, batch.get("tokens"), ctx, cfg,
+                embeds=batch.get("embeds"), cache=cache, mesh=mesh,
+                use_ep=use_ep)
+            nxt = jnp.argmax(logits[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            return nxt, cache
+
+        a_cache = jax.eval_shape(functools.partial(T.init_cache, cfg, b, s))
+        out_specs = (rules.batch_spec(2, b), rules.cache_specs(a_cache))
+
+    p_specs = rules.param_specs(a_params)
+    in_sh = (rules.named(mesh, p_specs),
+             rules.named(mesh, rules.batch_specs(a_batch)))
+    out_sh = rules.named(mesh, out_specs)
+    return StepBundle("prefill", fn, in_sh, out_sh, (a_params, a_batch))
+
+
+def build_decode_step(cfg: ArchConfig, mesh: jax.sharding.Mesh, *,
+                      shape_name: str = "decode_32k",
+                      use_ep: bool = True,
+                      serve_dtype: str = "packed4") -> StepBundle:
+    rules = make_rules(cfg, mesh)
+    a_params = _frozen_params(cfg, serve_dtype)
+    a_batch = specs_mod.input_specs(cfg, shape_name)
+
+    if cfg.family == "audio":
+        def fn(params, batch):
+            ctx = _ctx(cfg, quant=False)
+            logits, cache = W.whisper_decode(
+                params, 0, batch["tokens"], batch["cross_kv"], ctx, cfg,
+                positions=batch["positions"], cache=batch["cache"])
+            nxt = jnp.argmax(logits[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            return nxt, cache
+        a_out_cache = a_batch["cache"]
+    else:
+        def fn(params, batch):
+            ctx = _ctx(cfg, quant=False)
+            logits, cache, _ = T.lm_apply(
+                params, 0, batch.get("tokens"), ctx, cfg,
+                embeds=batch.get("embeds"), positions=batch["positions"],
+                cache=batch["cache"], mesh=mesh, use_ep=use_ep)
+            nxt = jnp.argmax(logits[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            return nxt, cache
+        a_out_cache = a_batch["cache"]
+
+    batch_specs = dict(rules.batch_specs(
+        {k: v for k, v in a_batch.items() if k not in ("cache", "cross_kv")}))
+    batch_specs["cache"] = rules.cache_specs(a_batch["cache"])
+    if "cross_kv" in a_batch:
+        batch_specs["cross_kv"] = rules.cache_specs(a_batch["cross_kv"])
+
+    info = specs_mod.SHAPES[shape_name]
+    p_specs = rules.param_specs(a_params)
+    in_sh = (rules.named(mesh, p_specs), rules.named(mesh, batch_specs))
+    out_sh = rules.named(mesh, (rules.batch_spec(2, info["batch"]),
+                                rules.cache_specs(a_out_cache)))
+    return StepBundle("decode", fn, in_sh, out_sh, (a_params, a_batch),
+                      donate=(1,))
+
+
+BUILDERS = {"train": build_train_step, "prefill": build_prefill_step,
+            "decode": build_decode_step}
+
+
+def build_step(cfg: ArchConfig, mesh: jax.sharding.Mesh, shape_name: str,
+               **kw) -> StepBundle:
+    kind = specs_mod.SHAPES[shape_name]["kind"]
+    return BUILDERS[kind](cfg, mesh, shape_name=shape_name, **kw)

@@ -1,0 +1,72 @@
+"""Causal-LM task heads: loss, next-token prediction, sampling.
+
+The transformer body lives in ``nn/transformer.py``; this module owns the
+task-level math shared by train/prefill/decode step functions
+(``launch/steps.py``): masked cross-entropy over the padded vocab and greedy
+sampling for the serving loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..nn import transformer as T
+from ..nn.module import QuantCtx
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, vocab: int,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy.  logits: (B, S, Vp); labels: (B, S) with
+    ids < vocab; padded-vocab columns were already masked to -1e30."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_forward_loss(params, qstate, batch: dict, ctx: QuantCtx,
+                    cfg: ArchConfig, *, mesh=None, use_ep=True,
+                    remat: str = "none"):
+    """Full train forward: returns (loss, metrics)."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")      # stubbed vlm/audio frontends
+    logits, _, aux = T.lm_apply(params, qstate, tokens, ctx, cfg,
+                                embeds=embeds, mesh=mesh, use_ep=use_ep,
+                                remat=remat)
+    ce = lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+    loss = ce + cfg.aux_loss_coef * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def greedy_step(params, qstate, tokens, ctx, cfg, *, positions, cache,
+                mesh=None):
+    """One serving step: feed tokens, return (next_token, new_cache)."""
+    logits, cache, _ = T.lm_apply(params, qstate, tokens, ctx, cfg,
+                                  positions=positions, cache=cache,
+                                  mesh=mesh)
+    nxt = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    return nxt, cache
+
+
+def generate(params, qstate, prompt: jax.Array, ctx: QuantCtx,
+             cfg: ArchConfig, *, max_new: int, mesh=None) -> jax.Array:
+    """Greedy generation: prefill the prompt then decode max_new tokens.
+
+    Python-loop driver for examples/tests (the jitted serving path is
+    launch/serve.py)."""
+    b, s = prompt.shape
+    cache = T.init_cache(cfg, b, s + max_new, dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    nxt, cache = greedy_step(params, qstate, prompt, ctx, cfg,
+                             positions=pos, cache=cache, mesh=mesh)
+    outs = [nxt]
+    for t in range(max_new - 1):
+        p_t = jnp.full((b, 1), s + t, jnp.int32)
+        nxt, cache = greedy_step(params, qstate, nxt, ctx, cfg,
+                                 positions=p_t, cache=cache, mesh=mesh)
+        outs.append(nxt)
+    return jnp.concatenate(outs, axis=1)

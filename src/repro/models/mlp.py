@@ -1,0 +1,230 @@
+"""The paper's hardware-conform MLPs (§VI-A): MLP-GSC, MLP-HR, LeNet-300-100.
+
+This is the direct reproduction path.  Three phases:
+
+* **train** — EC4T fake-quant linears + BatchNorm (batch statistics, EMA
+  running stats) + ReLU; exactly the models of Table II.
+* **freeze** — ECL-assign final codes; fold BatchNorm and quantization
+  scales into the §V epilogue constants:
+
+      y = α₂ · relu( α₁ ⊙ (x·Ŵ) + b' )
+      α₁ = γ/σ   (per-feature; absorbs de-quantization + batch-norm scale)
+      b' = β − γμ/σ + α₁·bias
+      α₂ = activation re-quantization scale for the next layer
+
+  and encode each layer's codes in its *cheapest* format (CSR / bitmask /
+  dense4 — contribution 4, Table II's CR column).
+* **serve** — run the packed codes through the ``fantastic4_matmul`` Pallas
+  kernel (VMEM bit-plane decode + MXU matmul + fused epilogue) or the
+  pure-jnp oracle; optional int8 activation mode mirrors the paper's 8-bit
+  activation FPGA configuration.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.paper_mlps import MLPConfig
+from ..core import acm, bitplanes, ecl, formats, qat
+from ..kernels import ops as kops
+from ..nn.module import QuantCtx
+
+
+# ------------------------------------------------------------------- init
+
+def mlp_init(key, cfg: MLPConfig) -> tuple:
+    """Returns (params, bn_state).  Every FC layer is EC4T-quantized
+    (the paper quantizes input and output layers too — Table II note)."""
+    params = {"layers": []}
+    bn_state = {"layers": []}
+    d_in = cfg.d_in
+    keys = jax.random.split(key, len(cfg.features))
+    for i, d_out in enumerate(cfg.features):
+        scale = (2.0 / d_in) ** 0.5
+        w = jax.random.normal(keys[i], (d_in, d_out), jnp.float32) * scale
+        layer = {"kernel": qat.make_quant_param(w),
+                 "bias": jnp.zeros((d_out,), jnp.float32)}
+        st = {}
+        if cfg.batch_norm:
+            layer["bn_gamma"] = jnp.ones((d_out,), jnp.float32)
+            layer["bn_beta"] = jnp.zeros((d_out,), jnp.float32)
+            st = {"mean": jnp.zeros((d_out,), jnp.float32),
+                  "var": jnp.ones((d_out,), jnp.float32)}
+        params["layers"].append(layer)
+        bn_state["layers"].append(st)
+        d_in = d_out
+    return params, bn_state
+
+
+# ---------------------------------------------------------------- forward
+
+def mlp_apply(params: dict, qstate: Any, bn_state: dict, x: jax.Array,
+              ctx: QuantCtx, *, train: bool = False,
+              bn_momentum: float = 0.9):
+    """Training/eval forward.  Returns (logits, new_bn_state)."""
+    new_bn = {"layers": []}
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        lq = qstate["layers"][i] if isinstance(qstate, dict) else 0
+        node = layer["kernel"]
+        if ctx.quant:
+            w = qat.apply_quant(node, lq["kernel"], ctx.lam, jnp.float32)
+        else:
+            w = node["w"].astype(jnp.float32)
+        x = x.astype(jnp.float32) @ w + layer["bias"]
+        st = {}
+        if "bn_gamma" in layer:
+            if train:
+                mu = x.mean(0)
+                var = x.var(0)
+                st = {"mean": bn_momentum * bn_state["layers"][i]["mean"]
+                              + (1 - bn_momentum) * mu,
+                      "var": bn_momentum * bn_state["layers"][i]["var"]
+                             + (1 - bn_momentum) * var}
+            else:
+                mu = bn_state["layers"][i]["mean"]
+                var = bn_state["layers"][i]["var"]
+                st = bn_state["layers"][i]
+            x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * layer["bn_gamma"] \
+                + layer["bn_beta"]
+        new_bn["layers"].append(st)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x, new_bn
+
+
+# ----------------------------------------------------------------- freeze
+
+def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
+               act_bits: Optional[int] = None) -> dict:
+    """ECL-quantize every layer and fold BN into the §V epilogue constants.
+
+    Returns a serving pack: per layer {packed codes, omega, alpha1, bias,
+    alpha2, format, size_bytes}.  ``act_bits`` enables the paper's
+    quantized-activation mode (8 in the FPGA config): alpha2 re-scales the
+    ReLU output into the next layer's integer grid.
+    """
+    layers = []
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        node = layer["kernel"]
+        probs = qstate["layers"][i]["kernel"]["probs"]
+        codes = ecl.assign(node["w"], node["omega"], probs, lam)
+        k, m = codes.shape
+        if k % 2:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros((1, m), jnp.uint8)], axis=0)
+        packed = bitplanes.pack_codes_rows(codes)
+
+        if "bn_gamma" in layer:
+            st = bn_state["layers"][i]
+            inv_sigma = 1.0 / np.sqrt(np.asarray(st["var"]) + 1e-5)
+            alpha1 = np.asarray(layer["bn_gamma"]) * inv_sigma
+            bias = (np.asarray(layer["bn_beta"])
+                    + alpha1 * (np.asarray(layer["bias"]) - np.asarray(st["mean"])))
+        else:
+            alpha1 = np.ones((m,), np.float32)
+            bias = np.asarray(layer["bias"])
+
+        alpha2 = np.float32(1.0)
+        codes_np = np.asarray(codes[:k])
+        fmt = formats.select_format(codes_np)
+        ct = formats.encode(codes_np, fmt)
+        layers.append({
+            "packed": packed,
+            "omega": node["omega"].astype(jnp.float32),
+            "alpha1": jnp.asarray(alpha1, jnp.float32),
+            "bias": jnp.asarray(bias, jnp.float32),
+            "alpha2": jnp.asarray(alpha2),
+            "shape": (k, m),
+            "activation": "relu" if i < n - 1 else None,
+            "format": fmt,
+            "size_bytes": ct.size_bytes,
+            "dense_bytes": codes_np.size * 4,   # fp32 original, for CR
+        })
+    return {"layers": layers, "act_bits": act_bits}
+
+
+def mlp_serve(pack: dict, x: jax.Array, *, use_kernel: bool = True,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """End-to-end inference on the frozen pack (kernel or oracle path)."""
+    for layer in pack["layers"]:
+        x = kops.fantastic4_matmul(
+            x.astype(jnp.float32), layer["packed"], layer["omega"],
+            bias=layer["bias"], alpha1=layer["alpha1"],
+            alpha2=layer["alpha2"], activation=layer["activation"],
+            use_kernel=use_kernel, interpret=interpret)
+    return x
+
+
+def pack_compression_summary(pack: dict) -> dict:
+    comp = sum(l["size_bytes"] for l in pack["layers"])
+    orig = sum(l["dense_bytes"] for l in pack["layers"])
+    return {
+        "compressed_bytes": comp,
+        "fp32_bytes": orig,
+        "compression_ratio": orig / comp,
+        "formats": [l["format"] for l in pack["layers"]],
+    }
+
+
+# --------------------------------------------------------------- training
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(lp, labels[:, None], axis=-1).mean()
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return (logits.argmax(-1) == labels).mean()
+
+
+# ------------------------------------------- int8 activation mode (§V/§VI)
+
+def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
+    """Per-layer activation scales from a calibration batch — the paper's
+    8-bit-activation FPGA configuration.  alpha2 of layer i becomes the
+    re-quantization scale mapping the ReLU output onto the next layer's
+    int8 grid; the next layer's alpha1 absorbs the de-quantization."""
+    scales = []
+    x = x_calib.astype(jnp.float32)
+    for layer in pack["layers"]:
+        y = kops.fantastic4_matmul(
+            x, layer["packed"], layer["omega"], bias=layer["bias"],
+            alpha1=layer["alpha1"], alpha2=None,
+            activation=layer["activation"], use_kernel=False)
+        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-6) / 127.0
+        scales.append(float(s))
+        x = y
+    return {"act_scales": scales}
+
+
+def mlp_serve_int8(pack: dict, calib: dict, x: jax.Array, *,
+                   use_kernel: bool = False,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Serving with int8 inter-layer activations (paper §VI-C: 8-bit
+    activations, 16-bit basis weights, fp scaling).
+
+    Layer i emits round(y/s_i) clipped to int8; layer i+1 folds s_i into
+    its alpha1 — the FantastIC4 ACM datapath never sees floats between
+    layers except through the two alpha multipliers, exactly the §V
+    pipeline.  The final layer returns float logits."""
+    scales = calib["act_scales"]
+    n = len(pack["layers"])
+    xq = x.astype(jnp.float32)
+    in_scale = 1.0
+    for i, layer in enumerate(pack["layers"]):
+        alpha1 = layer["alpha1"] * in_scale      # de-quantize inputs
+        y = kops.fantastic4_matmul(
+            xq, layer["packed"], layer["omega"], bias=layer["bias"],
+            alpha1=alpha1, alpha2=None, activation=layer["activation"],
+            use_kernel=use_kernel, interpret=interpret)
+        if i < n - 1:
+            xq = jnp.clip(jnp.round(y / scales[i]), -127, 127)
+            in_scale = scales[i]
+        else:
+            xq = y
+    return xq

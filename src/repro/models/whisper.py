@@ -1,0 +1,192 @@
+"""Whisper-base backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment the conv frontend is a STUB — ``input_specs()`` provides
+precomputed frame embeddings (B, 1500, d_model); everything after that is
+real: sinusoidal-position encoder (bidirectional MHA), learned-position
+decoder (causal self-attention with KV cache + cross-attention), LayerNorm,
+GELU MLPs, tied output projection.
+
+Cross-attention KV is computed once from the encoder output
+(:func:`precompute_cross`) and handed to every decode step — the standard
+enc-dec serving split.  FC projections are EC4T-quantized like every other
+arch (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..nn import attention as attn
+from ..nn.layers import (embedding_init, gelu_mlp, gelu_mlp_init, layer_norm,
+                         layer_norm_init, linear, sinusoidal_positions,
+                         subtree)
+from ..nn.module import QuantCtx
+
+MAX_TGT = 448      # whisper's decoder context
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _enc_layer_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": layer_norm_init(d),
+        "attn": attn.gqa_init(k1, d, cfg.n_heads, cfg.n_kv, hd, cfg.quantize),
+        "ln2": layer_norm_init(d),
+        "mlp": gelu_mlp_init(k2, d, cfg.d_ff, cfg.quantize),
+    }
+
+
+def _dec_layer_init(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": layer_norm_init(d),
+        "attn": attn.gqa_init(k1, d, cfg.n_heads, cfg.n_kv, hd, cfg.quantize),
+        "ln_cross": layer_norm_init(d),
+        "cross": attn.gqa_init(k2, d, cfg.n_heads, cfg.n_kv, hd, cfg.quantize),
+        "ln2": layer_norm_init(d),
+        "mlp": gelu_mlp_init(k3, d, cfg.d_ff, cfg.quantize),
+    }
+
+
+def whisper_init(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    enc = _stack([_enc_layer_init(k, cfg)
+                  for k in jax.random.split(ks[0], cfg.n_enc_layers)])
+    dec = _stack([_dec_layer_init(k, cfg)
+                  for k in jax.random.split(ks[1], cfg.n_layers)])
+    return {
+        "enc_layers": enc,
+        "enc_ln": layer_norm_init(cfg.d_model),
+        "dec_layers": dec,
+        "dec_ln": layer_norm_init(cfg.d_model),
+        "embed": embedding_init(ks[2], cfg.padded_vocab, cfg.d_model),
+        "dec_pos": jax.random.normal(ks[3], (MAX_TGT, cfg.d_model),
+                                     jnp.float32) * 0.02,
+    }
+
+
+# ---------------------------------------------------------------- encoder
+
+def whisper_encode(params, qstate, frames: jax.Array, ctx: QuantCtx,
+                   cfg: ArchConfig) -> jax.Array:
+    """frames: (B, T, d) stubbed conv-frontend output -> encoder states."""
+    b, t, _ = frames.shape
+    x = frames.astype(ctx.dtype) + sinusoidal_positions(
+        t, cfg.d_model, ctx.dtype)[None]
+    eq = subtree(qstate, "enc_layers")
+    if not isinstance(eq, dict):
+        eq = jnp.zeros((cfg.n_enc_layers,), jnp.uint8)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(x, xs):
+        lp, lq = xs
+        h = layer_norm(lp["ln1"], x)
+        y, _ = attn.gqa_apply(lp["attn"], subtree(lq, "attn"), h, ctx,
+                              n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                              head_dim=cfg.resolved_head_dim,
+                              positions=pos, causal=False,
+                              chunk=cfg.attn_chunk)
+        x = x + y
+        h = layer_norm(lp["ln2"], x)
+        return x + gelu_mlp(lp["mlp"], subtree(lq, "mlp"), h, ctx), None
+
+    x, _ = jax.lax.scan(body, x, (params["enc_layers"], eq))
+    return layer_norm(params["enc_ln"], x)
+
+
+def precompute_cross(params, qstate, enc_out: jax.Array, ctx: QuantCtx,
+                     cfg: ArchConfig):
+    """Per-decoder-layer cross K/V from encoder states: (L, B, T, n_kv, hd)."""
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    dq = subtree(qstate, "dec_layers")
+    if not isinstance(dq, dict):
+        dq = jnp.zeros((cfg.n_layers,), jnp.uint8)
+
+    def body(_, xs):
+        lp, lq = xs
+        lqc = subtree(lq, "cross")
+        k = linear(lp["cross"]["k"], subtree(lqc, "k"), enc_out, ctx)
+        v = linear(lp["cross"]["v"], subtree(lqc, "v"), enc_out, ctx)
+        return None, (k.reshape(b, t, cfg.n_kv, hd),
+                      v.reshape(b, t, cfg.n_kv, hd))
+
+    _, (ks, vs) = jax.lax.scan(body, None, (params["dec_layers"], dq))
+    return ks, vs
+
+
+# ---------------------------------------------------------------- decoder
+
+def init_dec_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    per = {"attn": attn.init_kv_cache(batch, max_len, cfg.n_kv,
+                                      cfg.resolved_head_dim, dtype)}
+    return _stack([per] * cfg.n_layers)
+
+
+def whisper_decode(params, qstate, tokens: jax.Array, cross_kv,
+                   ctx: QuantCtx, cfg: ArchConfig, *,
+                   positions: Optional[jax.Array] = None,
+                   cache: Optional[dict] = None):
+    """Decoder forward.  Returns (logits, new_cache)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"]["table"].astype(ctx.dtype)[tokens]
+    x = x + params["dec_pos"].astype(ctx.dtype)[positions]
+    dq = subtree(qstate, "dec_layers")
+    if not isinstance(dq, dict):    # frozen serving: scan needs a lead axis
+        dq = jnp.zeros((cfg.n_layers,), jnp.uint8)
+    cross_k, cross_v = cross_kv
+
+    def body(x, xs):
+        lp, lq, lcache, ck, cv = xs
+        h = layer_norm(lp["ln1"], x)
+        y, new_c = attn.gqa_apply(
+            lp["attn"], subtree(lq, "attn"), h, ctx, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+            positions=positions, causal=True,
+            cache=lcache["attn"] if lcache is not None else None,
+            chunk=cfg.attn_chunk)
+        x = x + y
+        h = layer_norm(lp["ln_cross"], x)
+        # cross-attention: queries from the decoder, precomputed enc KV
+        y, _ = attn.gqa_apply(lp["cross"], subtree(lq, "cross"), h, ctx,
+                              n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                              head_dim=cfg.resolved_head_dim,
+                              positions=positions, kv_override=(ck, cv),
+                              chunk=cfg.attn_chunk)
+        x = x + y
+        h = layer_norm(lp["ln2"], x)
+        x = x + gelu_mlp(lp["mlp"], subtree(lq, "mlp"), h, ctx)
+        return x, ({"attn": new_c} if new_c is not None else None)
+
+    xs = (params["dec_layers"], dq, cache, cross_k, cross_v)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = layer_norm(params["dec_ln"], x)
+    logits = x.astype(jnp.float32) @ params["embed"]["table"].astype(
+        jnp.float32).T
+    if cfg.padded_vocab != cfg.vocab:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab,
+                           -1e30, logits)
+    return logits, new_cache
+
+
+def whisper_forward_loss(params, qstate, batch: dict, ctx: QuantCtx,
+                         cfg: ArchConfig, **_):
+    """Train forward: encode stubbed frames, teacher-force the decoder."""
+    from .lm import lm_loss
+    enc = whisper_encode(params, qstate, batch["embeds"], ctx, cfg)
+    cross = precompute_cross(params, qstate, enc, ctx, cfg)
+    logits, _ = whisper_decode(params, qstate, batch["tokens"], cross,
+                               ctx, cfg)
+    loss = lm_loss(logits, batch["labels"], cfg.vocab, batch.get("mask"))
+    return loss, {"ce": loss, "aux": jnp.zeros(()), "loss": loss}

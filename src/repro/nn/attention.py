@@ -1,0 +1,397 @@
+"""Attention: GQA / MHA / sliding-window / MLA, with chunked online-softmax.
+
+One implementation serves all assigned LM archs:
+
+* **GQA** (qwen2-vl, smollm, danube, glm4, grok) — ``n_kv <= n_heads`` KV
+  heads, queries grouped.  MHA (codeqwen, whisper) is the ``n_kv == n_heads``
+  special case.
+* **SWA** (danube, hymba) — sliding-window mask of width ``window``; caps the
+  KV cache at ``window`` for decode, which is what makes ``long_500k``
+  sub-quadratic for these archs.
+* **MLA** (deepseek-v3) — low-rank latent compression of Q and KV.  The
+  cache stores only the 512-wide latent + 64-wide rope key.  Prefill/train
+  decompress the latent **per KV chunk inside the softmax scan** (never
+  materialising the (B,S,128,192) full K); decode uses the *absorbed* form
+  (W_uk folded into the query, attention directly against the latent).
+
+All softmax paths run through :func:`chunked_attention`, a flash-attention
+style online-softmax over KV chunks expressed with ``jax.lax.scan``:
+
+* memory is O(Sq · chunk) instead of O(Sq · Skv) — required for
+  ``prefill_32k``/``decode_32k``;
+* KV heads are consumed via grouped einsums (no ``repeat`` to Q heads);
+* an optional ``kv_chunk_fn`` maps raw scan inputs to the chunk's (K, V) —
+  identity for GQA, latent-decompression for MLA;
+* it is the exact softmax (running max + normaliser), asserted against the
+  dense reference in tests.
+
+Sharding notes (runtime/sharding.py): Q/K/V/O kernels shard over the 'model'
+mesh axis on the head dimension when divisible, else stay replicated; the KV
+cache shards on batch over the data axes.  This file is sharding-agnostic —
+it computes on global logical shapes and lets GSPMD partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rotary, linear, linear_init, subtree
+from .module import QuantCtx, materialize
+
+NEG_INF = -1e30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+# ------------------------------------------------------------ mask helpers
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+               window: Optional[int], kv_len: Optional[jax.Array]) -> jax.Array:
+    """Additive bias (B, Sq, Skv) from position vectors.
+
+    q_pos: (B, Sq) int32 absolute positions of the queries.
+    kv_pos: (B, Skv) int32 absolute positions of the keys (-1 = padding).
+    kv_len: optional (B,) number of valid cache entries (decode).
+    """
+    q = q_pos[:, :, None]          # (B, Sq, 1)
+    k = kv_pos[:, None, :]         # (B, 1, Skv)
+    ok = k >= 0
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= q - k < window
+    if kv_len is not None:
+        ok &= k < kv_len[:, None, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------ chunked online softmax
+
+def chunked_attention(q: jax.Array, kv_parts: Any, *,
+                      q_pos: jax.Array, kv_pos: jax.Array,
+                      causal: bool = True, window: Optional[int] = None,
+                      kv_len: Optional[jax.Array] = None,
+                      chunk: int = 1024, scale: float,
+                      n_kv: int, dv: int,
+                      kv_chunk_fn: Optional[Callable] = None) -> jax.Array:
+    """Exact softmax attention, online over KV chunks.
+
+    q: (B, Sq, H, D).  ``kv_parts`` is a pytree whose leaves have the KV
+    sequence on axis 1; ``kv_chunk_fn(parts_chunk)`` maps a chunk of it to
+    ``(k, v)`` of shapes (B, c, n_kv, D) / (B, c, n_kv, dv).  When None,
+    ``kv_parts`` must already be that (k, v) tuple.
+    Returns (B, Sq, H, dv) in f32.
+    """
+    b, sq, h, d = q.shape
+    rep = h // n_kv
+    # keep q/k/v in their storage dtype; the score einsums accumulate in
+    # f32 via preferred_element_type (MXU bf16xbf16+f32).  Materialising
+    # f32 *copies* of every KV chunk doubled the serving memory-roofline
+    # term (EXPERIMENTS.md §Perf iteration 1).
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, n_kv, rep, d)
+
+    skv = jax.tree_util.tree_leaves(kv_parts)[0].shape[1]
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        def padk(a):
+            w = [(0, 0)] * a.ndim
+            w[1] = (0, pad)
+            return jnp.pad(a, w)
+        kv_parts = jax.tree_util.tree_map(padk, kv_parts)
+        # padded keys land at position -1 so the mask rejects them
+        kv_pos = jnp.pad(kv_pos, [(0, 0), (0, pad)], constant_values=-1)
+    n_chunks = (skv + pad) // chunk
+
+    def to_scan(a):  # (B, n*c, ...) -> (n, B, c, ...)
+        return a.reshape(a.shape[0], n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    scan_parts = jax.tree_util.tree_map(to_scan, kv_parts)
+    scan_pos = to_scan(kv_pos[:, :, None])[..., 0]           # (n, B, c)
+
+    ident = kv_chunk_fn is None
+
+    def body(carry, inp):
+        m, l, acc = carry          # (B,G,rep,Sq) ×2, (B,G,rep,Sq,dv)
+        parts_c, pos_c = inp
+        kc, vc = parts_c if ident else kv_chunk_fn(parts_c)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kc,
+                       preferred_element_type=jnp.float32)  # (B,G,rep,Sq,c)
+        s = s + _mask_bias(q_pos, pos_c, causal=causal, window=window,
+                           kv_len=kv_len)[:, None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, n_kv, rep, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, rep, sq), jnp.float32),
+            jnp.zeros((b, n_kv, rep, sq, dv), jnp.float32))
+    # checkpoint the chunk body: the bwd pass re-forms each chunk's scores
+    # instead of stacking (n_chunks, B, G, rep, Sq, c) f32 probability
+    # tensors in HBM — on memory-bound cells the recompute is ~free
+    # (§Perf iteration 5)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                  init, (scan_parts, scan_pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]             # (B,G,rep,Sq,dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+
+
+def dense_attention_ref(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                        kv_len=None, scale=None):
+    """O(Sq·Skv)-memory oracle for tests."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    rep = q.shape[2] // k.shape[2]
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kf)
+    s = s + _mask_bias(q_pos, kv_pos, causal=causal, window=window,
+                       kv_len=kv_len)[:, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+def softmax_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                      kv_len=None, chunk=1024, scale=None):
+    """Standard (k, v) entry point into :func:`chunked_attention`."""
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    return chunked_attention(
+        q, (k, v), q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+        window=window, kv_len=kv_len, chunk=chunk, scale=scale,
+        n_kv=k.shape[2], dv=v.shape[-1])
+
+
+# ---------------------------------------------------------------- KV cache
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Ring-buffer KV cache.  ``pos`` holds each slot's absolute position
+    (-1 = empty); masking is purely position-based, so a window-capped
+    buffer (SWA decode: size == window) wraps for free — this is what keeps
+    ``long_500k`` decode at O(window) memory for danube/hymba."""
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cache_update(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                  positions: jax.Array) -> dict:
+    """Write Sq new KV entries at slot len % size (functional).
+
+    Multi-entry writes (prefill) must not wrap: callers size prefill caches
+    at full sequence length; only single-token decode wraps."""
+    size = cache["k"].shape[1]
+    idx = cache["len"] % size
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, idx, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"],
+                                       positions[0].astype(jnp.int32), (idx,))
+    return {"k": k, "v": v, "pos": pos, "len": cache["len"] + k_new.shape[1]}
+
+
+# -------------------------------------------------------------------- GQA
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             quantize: bool, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": linear_init(kq, d_model, n_heads * head_dim, quantize, bias=qkv_bias),
+        "k": linear_init(kk, d_model, n_kv * head_dim, quantize, bias=qkv_bias),
+        "v": linear_init(kv, d_model, n_kv * head_dim, quantize, bias=qkv_bias),
+        "o": linear_init(ko, n_heads * head_dim, d_model, quantize),
+    }
+
+
+def gqa_apply(p: dict, q_state: Any, x: jax.Array, ctx: QuantCtx, *,
+              n_heads: int, n_kv: int, head_dim: int,
+              cos_sin: Optional[tuple] = None,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True, window: Optional[int] = None,
+              cache: Optional[dict] = None,
+              kv_override: Optional[tuple] = None,
+              chunk: int = 1024):
+    """Self-attention (or cross-attention when ``kv_override`` is given).
+
+    Returns (y, new_cache).  ``positions``: (B, Sq) absolute positions of x.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    q = linear(p["q"], subtree(q_state, "q"), x, ctx).reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = linear(p["k"], subtree(q_state, "k"), x, ctx).reshape(b, s, n_kv, head_dim)
+        v = linear(p["v"], subtree(q_state, "v"), x, ctx).reshape(b, s, n_kv, head_dim)
+        if cos_sin is not None:
+            cos, sin = cos_sin
+            q = apply_rotary(q, cos, sin)
+            k = apply_rotary(k, cos, sin)
+    else:
+        k, v = kv_override                      # cross-attn: precomputed KV
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        new_cache = _cache_update(cache, k, v, positions)
+        k, v = new_cache["k"], new_cache["v"]
+        kv_pos = jnp.broadcast_to(new_cache["pos"], (b, k.shape[1]))
+    else:
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32), (b, k.shape[1]))
+
+    out = softmax_attention(
+        q, k, v, positions, kv_pos, causal=causal and kv_override is None,
+        window=window, chunk=chunk)
+    out = out.reshape(b, s, n_heads * head_dim).astype(ctx.dtype)
+    y = linear(p["o"], subtree(q_state, "o"), out, ctx)
+    return y, new_cache
+
+
+# -------------------------------------------------------------------- MLA
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    """DeepSeek-V3 multi-head latent attention dims (arXiv:2412.19437)."""
+    d_model: int = 7168
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key, cfg: MLACfg, quantize: bool) -> dict:
+    """Low-rank Q and KV projections.  The *latent* c_kv (kv_lora_rank) plus
+    the shared rope key (qk_rope_dim) are what decode caches — the paper's
+    'compress the cache' idea; the cache stays 16-bit (activations are
+    quantization-sensitive, FantastIC4 fig. 2)."""
+    ks = jax.random.split(key, 5)
+    c = cfg
+    return {
+        "q_down": linear_init(ks[0], c.d_model, c.q_lora_rank, quantize),
+        "q_up": linear_init(ks[1], c.q_lora_rank, c.n_heads * c.qk_dim, quantize),
+        "kv_down": linear_init(ks[2], c.d_model,
+                               c.kv_lora_rank + c.qk_rope_dim, quantize),
+        "kv_up": linear_init(ks[3], c.kv_lora_rank,
+                             c.n_heads * (c.qk_nope_dim + c.v_head_dim), quantize),
+        "o": linear_init(ks[4], c.n_heads * c.v_head_dim, c.d_model, quantize),
+    }
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: MLACfg,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_apply(p: dict, q_state: Any, x: jax.Array, ctx: QuantCtx,
+              cfg: MLACfg, *, cos_sin: tuple,
+              positions: Optional[jax.Array] = None,
+              cache: Optional[dict] = None, chunk: int = 1024,
+              force_absorbed: Optional[bool] = None):
+    """MLA block.  Path selection:
+
+    * Sq > 1 (train / prefill): *naive* form with per-chunk latent
+      decompression inside the softmax scan — cheaper when Sq is large and
+      never materialises the (B, Skv, H, qk_dim) K tensor.
+    * Sq == 1 (decode): *absorbed* form — W_uk folded into the query and
+      W_uv applied after attending directly over the latent; per-step cost
+      O(Skv · H · (r + rope)) instead of O(Skv · H · r · decompress).
+    """
+    b, s, _ = x.shape
+    c = cfg
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    q = linear(p["q_up"], subtree(q_state, "q_up"),
+               linear(p["q_down"], subtree(q_state, "q_down"), x, ctx), ctx)
+    q = q.reshape(b, s, c.n_heads, c.qk_dim)
+    q_nope, q_rope = q[..., :c.qk_nope_dim], q[..., c.qk_nope_dim:]
+
+    kv = linear(p["kv_down"], subtree(q_state, "kv_down"), x, ctx)
+    ckv, k_rope = kv[..., :c.kv_lora_rank], kv[..., c.kv_lora_rank:]
+
+    cos, sin = cos_sin
+    q_rope = apply_rotary(q_rope, cos, sin)
+    k_rope = apply_rotary(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"] % cache["ckv"].shape[1]
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, idx, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, idx, 0))
+        pos_all = jax.lax.dynamic_update_slice(
+            cache["pos"], positions[0].astype(jnp.int32), (idx,))
+        new_cache = {"ckv": ckv_all, "krope": kr_all, "pos": pos_all,
+                     "len": cache["len"] + s}
+        ckv, k_rope = ckv_all, kr_all
+        kv_pos = jnp.broadcast_to(pos_all, (b, ckv.shape[1]))
+    else:
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(ckv.shape[1], dtype=jnp.int32), (b, ckv.shape[1]))
+
+    skv = ckv.shape[1]
+    scale = c.qk_dim ** -0.5
+
+    # materialise the (possibly fake-quantized) up-projection once
+    w_up = materialize(p["kv_up"]["kernel"], subtree(subtree(q_state, "kv_up"),
+                                                     "kernel"), ctx)
+    w_up = w_up.reshape(c.kv_lora_rank, c.n_heads, c.qk_nope_dim + c.v_head_dim)
+    w_uk = w_up[..., :c.qk_nope_dim]          # (r, H, nope)
+    w_uv = w_up[..., c.qk_nope_dim:]          # (r, H, v)
+
+    absorbed = (s == 1) if force_absorbed is None else force_absorbed
+    if absorbed:
+        # fold W_uk into the query; attend over the latent (n_kv = 1)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        q_full = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)], axis=-1)
+        k_lat = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None, :]
+        out_lat = chunked_attention(
+            q_full, (k_lat, ckv[:, :, None, :]), q_pos=positions,
+            kv_pos=kv_pos, causal=True, chunk=chunk,
+            scale=scale, n_kv=1, dv=c.kv_lora_rank)
+        out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv.astype(jnp.float32))
+    else:
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+        def decompress(parts_c):
+            ckv_c, kr_c = parts_c             # (B,c,r), (B,c,rope)
+            kvu = jnp.einsum("bkr,rhd->bkhd", ckv_c.astype(jnp.float32),
+                             w_up.astype(jnp.float32))
+            k_c = jnp.concatenate(
+                [kvu[..., :c.qk_nope_dim],
+                 jnp.broadcast_to(kr_c[:, :, None, :].astype(jnp.float32),
+                                  (*kr_c.shape[:2], c.n_heads, c.qk_rope_dim))],
+                axis=-1)
+            return k_c, kvu[..., c.qk_nope_dim:]
+
+        out = chunked_attention(
+            q_full, (ckv, k_rope), q_pos=positions, kv_pos=kv_pos,
+            causal=True, chunk=chunk, scale=scale,
+            n_kv=c.n_heads, dv=c.v_head_dim, kv_chunk_fn=decompress)
+
+    out = out.reshape(b, s, c.n_heads * c.v_head_dim).astype(ctx.dtype)
+    y = linear(p["o"], subtree(q_state, "o"), out, ctx)
+    return y, new_cache

@@ -1,0 +1,155 @@
+"""Shared layers: norms, linear (quantization-aware), embeddings, rotary
+embeddings (RoPE / partial-rotary / M-RoPE), and MLP blocks."""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .module import QuantCtx, materialize, maybe_quant_param
+
+
+# ------------------------------------------------------------------ norms
+
+def rms_norm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def layer_norm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- linear
+
+def linear_init(key, d_in: int, d_out: int, quantize: bool,
+                bias: bool = False, dtype=jnp.float32) -> dict:
+    scale = 1.0 / (d_in ** 0.5)
+    w = jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)
+    p = {"kernel": maybe_quant_param(w, quantize)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, q: Any, x: jax.Array, ctx: QuantCtx) -> jax.Array:
+    qk = q["kernel"] if isinstance(q, dict) else 0
+    w = materialize(p["kernel"], qk, ctx)
+    y = x @ w
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+# -------------------------------------------------------------- embedding
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: dict, ids: jax.Array, ctx: QuantCtx) -> jax.Array:
+    return p["table"].astype(ctx.dtype)[ids]
+
+
+def unembed(p: dict, x: jax.Array, ctx: QuantCtx) -> jax.Array:
+    """Tied read-out: logits = x @ table.T (f32 accumulation)."""
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+
+
+# ----------------------------------------------------------------- rotary
+
+def rope_cos_sin(positions: jax.Array, rotary_dim: int, theta: float,
+                 dtype=jnp.float32):
+    """positions (..., S) -> cos/sin (..., S, rotary_dim//2)."""
+    half = rotary_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def mrope_cos_sin(positions: jax.Array, rotary_dim: int, theta: float,
+                  sections: Sequence[int], dtype=jnp.float32):
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) (t, h, w) streams;
+    sections: per-stream number of rotary *pairs* (sums to rotary_dim//2).
+    Each rotary pair takes its angle from the stream its index falls in."""
+    half = rotary_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (3, B, S, half)
+    stream = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)            # (half,)
+    onehot = jax.nn.one_hot(stream, 3, dtype=jnp.float32).T  # (3, half)
+    sel = jnp.einsum("tbsh,th->bsh", ang, onehot)            # (B, S, half)
+    return jnp.cos(sel).astype(dtype), jnp.sin(sel).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh); cos/sin: (B, S, half) with half <= Dh//2.
+
+    Rotates the first 2*half dims (GLM-style partial rotary supported),
+    pairing dim i with dim i+half (NeoX/llama convention)."""
+    half = cos.shape[-1]
+    x_rot, x_pass = x[..., :2 * half], x[..., 2 * half:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if x_pass.shape[-1] else out
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(n)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -------------------------------------------------------------------- MLP
+
+def swiglu_init(key, d: int, d_ff: int, quantize: bool) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": linear_init(k1, d, d_ff, quantize),
+            "up": linear_init(k2, d, d_ff, quantize),
+            "down": linear_init(k3, d_ff, d, quantize)}
+
+
+def swiglu(p: dict, q: Any, x: jax.Array, ctx: QuantCtx) -> jax.Array:
+    g = linear(p["gate"], q["gate"] if isinstance(q, dict) else 0, x, ctx)
+    u = linear(p["up"], q["up"] if isinstance(q, dict) else 0, x, ctx)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return linear(p["down"], q["down"] if isinstance(q, dict) else 0, h, ctx)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, quantize: bool,
+                  bias: bool = True) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": linear_init(k1, d, d_ff, quantize, bias=bias),
+            "fc2": linear_init(k2, d_ff, d, quantize, bias=bias)}
+
+
+def gelu_mlp(p: dict, q: Any, x: jax.Array, ctx: QuantCtx) -> jax.Array:
+    h = linear(p["fc1"], q["fc1"] if isinstance(q, dict) else 0, x, ctx)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["fc2"], q["fc2"] if isinstance(q, dict) else 0, h, ctx)
+
+
+def subtree(q: Any, key: str) -> Any:
+    """Navigate the qstate mirror tree (0 where absent)."""
+    return q[key] if isinstance(q, dict) and key in q else 0

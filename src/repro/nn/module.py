@@ -1,0 +1,65 @@
+"""Minimal functional module system.
+
+Parameters are nested dicts of arrays; a *quantized* tensor is the dict
+``{"w", "omega"}`` (see ``core.qat``). Every ``*_init(key, ...)`` returns a
+param tree; every ``*_apply(p, q, x, ...)`` consumes the param tree ``p`` and
+the mirrored quantization-state tree ``q`` (probs at quant leaves, 0
+elsewhere). ``QuantCtx`` carries the QAT mode so one model definition serves
+fp32 baseline, EC4T training, and frozen serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import qat
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCtx:
+    quant: bool = False          # EC4T fake-quant active?
+    lam: float = 0.0             # entropy-penalty strength λ
+    compute_dtype: Any = jnp.bfloat16
+    deterministic: bool = True
+
+    @property
+    def dtype(self):
+        return self.compute_dtype
+
+
+FP32_CTX = QuantCtx(quant=False, compute_dtype=jnp.float32)
+
+
+def materialize(node: Any, q: Any, ctx: QuantCtx) -> jax.Array:
+    """Resolve a (possibly quantized/frozen) weight leaf to compute dtype.
+
+    Frozen leaves ({"packed", "omega"}) decode 4-bit codes on the fly —
+    serving reads 4 bits/weight from HBM and reconstructs W = Σ ω_i B_i in
+    registers/VMEM; on TPU this is the Pallas kernel, under plain XLA it is
+    the same dataflow expressed with jnp ops."""
+    if qat.is_quant_leaf(node):
+        if ctx.quant:
+            return qat.apply_quant(node, q, ctx.lam, ctx.dtype)
+        return node["w"].astype(ctx.dtype)
+    if qat.is_frozen_leaf(node):
+        return qat.decode_frozen(node, ctx.dtype)
+    return node.astype(ctx.dtype)
+
+
+def maybe_quant_param(w: jax.Array, quantize: bool) -> Any:
+    return qat.make_quant_param(w) if quantize else w
+
+
+def param_count(tree: Any) -> int:
+    """Trainable parameter count (masters counted once, probs excluded)."""
+    n = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n += leaf.size
+    return n
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

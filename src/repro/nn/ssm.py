@@ -1,0 +1,251 @@
+"""Mamba2 — state-space duality (SSD), arXiv:2405.21060.
+
+Sequence mode (train / prefill) uses the chunked SSD algorithm: the sequence
+is cut into chunks of length Q; each chunk's *intra*-chunk contribution is a
+small quadratic ("attention-like") einsum under a decay mask, chunk boundary
+states are combined with a **parallel associative scan** (log-depth on TPU),
+and the *inter*-chunk contribution is one more einsum.  Cost is
+O(S·Q·(H·P + G·N)) — linear in S — which is what qualifies mamba2/hymba for
+the ``long_500k`` cell.
+
+Decode mode carries a recurrent state (B, H, P, N) plus a (width-1)-deep
+convolution tail; one token costs O(H·P·N) regardless of context length.
+``tests/test_ssm.py`` asserts sequence == step-by-step decode.
+
+Quantization (DESIGN.md §5): in/out projections are EC4T-quantized (the bulk
+of parameters); A_log, dt_bias, D, conv and norm parameters stay fp32 — they
+are tiny and sensitivity-critical, the paper's mixed-precision rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init, subtree
+from .module import QuantCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_inner: int          # = expand * d_model
+    n_heads: int          # d_inner // headdim
+    d_state: int
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def headdim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, cfg: SSMCfg, quantize: bool) -> dict:
+    c = cfg
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * c.d_inner + 2 * c.n_groups * c.d_state + c.n_heads
+    return {
+        "in_proj": linear_init(k1, c.d_model, d_in_proj, quantize),
+        "out_proj": linear_init(k2, c.d_inner, c.d_model, quantize),
+        "conv_w": jax.random.normal(k3, (c.conv_width, c.conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((c.conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, c.n_heads)),   # A = -exp(A_log)
+        "dt_bias": jnp.zeros((c.n_heads,), jnp.float32),
+        "D": jnp.ones((c.n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((c.d_inner,), jnp.float32),
+    }
+
+
+def init_ssm_state(batch: int, cfg: SSMCfg, dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+    }
+
+
+def _gated_rms_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                    eps: float = 1e-6) -> jax.Array:
+    """Mamba2's RMSNorm(y * silu(z)) gate."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _segsum_exp(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-triangular exp(Σ_{k<i<=q} a_i).
+
+    The mask is applied *inside* the exp (as -1e30) rather than on its
+    output: ``where(mask, exp(diff), 0)`` leaks inf·0 = NaN through the
+    upper triangle in reverse mode (diff > 0 there overflows exp)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]     # (..., q, k): Σ_{k+1..q}
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.exp(jnp.where(mask, diff, -1e30))
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p) pre-scaled inputs (already ×dt); a: (b, s, h) log-decay
+    (= dt·A, ≤ 0); B, C: (b, s, g, n) with h % g == 0.
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)])        # a=0 ⇒ decay 1
+        B = jnp.pad(B, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        C = jnp.pad(C, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    nc = x.shape[1] // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    # broadcast groups to heads for the einsums
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk (block-diagonal) term
+    L = _segsum_exp(ac.transpose(0, 1, 3, 2))              # (b,nc,h,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp",
+                        Ch.astype(jnp.float32), Bh.astype(jnp.float32),
+                        L, xc.astype(jnp.float32))
+
+    # ---- chunk-final states
+    a_cum = jnp.cumsum(ac, axis=2)                         # (b,nc,Q,h)
+    a_tot = a_cum[:, :, -1]                                # (b,nc,h)
+    decay_to_end = jnp.exp(a_tot[:, :, None] - a_cum)      # (b,nc,Q,h)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn",
+                        Bh.astype(jnp.float32), decay_to_end,
+                        xc.astype(jnp.float32))            # (b,nc,h,p,n)
+
+    # ---- inter-chunk recurrence: s_c = exp(a_tot_c)·s_{c-1} + states_c
+    decay_chunk = jnp.exp(a_tot).transpose(0, 2, 1)        # (b,h,nc)
+    states_t = states.transpose(0, 2, 1, 3, 4)             # (b,h,nc,p,n)
+    if init_state is not None:
+        # prepend the carried-in state as a virtual chunk with decay 1
+        states_t = jnp.concatenate(
+            [init_state.astype(jnp.float32)[:, :, None], states_t], axis=2)
+        decay_chunk = jnp.concatenate(
+            [jnp.ones((b, h, 1), jnp.float32), decay_chunk], axis=2)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, sr + sl * dr[..., None, None]
+
+    dscan, sscan = jax.lax.associative_scan(
+        combine, (decay_chunk, states_t), axis=2)
+    final_state = sscan[:, :, -1]                          # (b,h,p,n)
+    # state entering chunk c = scanned state of chunk c-1
+    if init_state is not None:
+        prev = sscan[:, :, :-1]
+    else:
+        prev = jnp.concatenate(
+            [jnp.zeros_like(sscan[:, :, :1]), sscan[:, :, :-1]], axis=2)
+    prev = prev.transpose(0, 2, 1, 3, 4)                   # (b,nc,h,p,n)
+
+    # ---- inter-chunk output term
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Ch.astype(jnp.float32), prev, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def ssm_apply(p: dict, q_state: Any, u: jax.Array, ctx: QuantCtx,
+              cfg: SSMCfg, *, state: Optional[dict] = None):
+    """Sequence-mode mamba2 block: u (b, s, d_model) -> (y, new_state).
+
+    When ``state`` is given its ssm/conv tails seed the computation
+    (prefill-continuation / decode parity tests)."""
+    c = cfg
+    b, s, _ = u.shape
+    zxbcdt = linear(p["in_proj"], subtree(q_state, "in_proj"), u, ctx)
+    z = zxbcdt[..., :c.d_inner]
+    xBC = zxbcdt[..., c.d_inner:c.d_inner + c.conv_dim]
+    dt_raw = zxbcdt[..., -c.n_heads:]
+
+    # causal depthwise conv (width W): pad left with conv tail (or zeros)
+    w = c.conv_width
+    tail = (state["conv"].astype(xBC.dtype) if state is not None
+            else jnp.zeros((b, w - 1, c.conv_dim), xBC.dtype))
+    xBC_pad = jnp.concatenate([tail, xBC], axis=1)
+    new_conv_tail = xBC_pad[:, -(w - 1):]
+    conv = sum(xBC_pad[:, i:i + s] * p["conv_w"][i].astype(xBC.dtype)
+               for i in range(w))
+    xBC = jax.nn.silu(conv.astype(jnp.float32) + p["conv_b"]).astype(ctx.dtype)
+
+    x = xBC[..., :c.d_inner].reshape(b, s, c.n_heads, c.headdim)
+    B = xBC[..., c.d_inner:c.d_inner + c.n_groups * c.d_state]
+    C = xBC[..., c.d_inner + c.n_groups * c.d_state:]
+    B = B.reshape(b, s, c.n_groups, c.d_state)
+    C = C.reshape(b, s, c.n_groups, c.d_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (b,s,h)
+    A = -jnp.exp(p["A_log"])                                          # (h,)
+    a = dt * A                                                        # log-decay
+    x_dt = x.astype(jnp.float32) * dt[..., None]
+
+    init_ssm = state["ssm"] if state is not None else None
+    y, fin = ssd_chunked(x_dt, a, B, C, c.chunk, init_state=init_ssm)
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, c.d_inner).astype(ctx.dtype)
+
+    y = _gated_rms_norm(y, z, p["norm_scale"])
+    out = linear(p["out_proj"], subtree(q_state, "out_proj"), y, ctx)
+    new_state = {"ssm": fin, "conv": new_conv_tail.astype(jnp.float32)}
+    return out, new_state
+
+
+def ssm_step(p: dict, q_state: Any, u: jax.Array, ctx: QuantCtx,
+             cfg: SSMCfg, state: dict):
+    """Decode-mode: u (b, 1, d_model), O(H·P·N) per token."""
+    c = cfg
+    b = u.shape[0]
+    zxbcdt = linear(p["in_proj"], subtree(q_state, "in_proj"), u, ctx)
+    z = zxbcdt[:, 0, :c.d_inner]
+    xBC_new = zxbcdt[:, 0, c.d_inner:c.d_inner + c.conv_dim]
+    dt_raw = zxbcdt[:, 0, -c.n_heads:]
+
+    conv_in = jnp.concatenate(
+        [state["conv"].astype(xBC_new.dtype), xBC_new[:, None]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), p["conv_w"])
+    xBC = jax.nn.silu(conv + p["conv_b"]).astype(ctx.dtype)
+    new_conv_tail = conv_in[:, 1:].astype(jnp.float32)
+
+    x = xBC[:, :c.d_inner].reshape(b, c.n_heads, c.headdim)
+    B = xBC[:, c.d_inner:c.d_inner + c.n_groups * c.d_state]
+    C = xBC[:, c.d_inner + c.n_groups * c.d_state:]
+    rep = c.n_heads // c.n_groups
+    Bh = jnp.repeat(B.reshape(b, c.n_groups, c.d_state), rep, axis=1)
+    Ch = jnp.repeat(C.reshape(b, c.n_groups, c.d_state), rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (b,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                              # (b,h)
+
+    s_new = (state["ssm"].astype(jnp.float32) * dA[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32),
+                          Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, c.d_inner).astype(ctx.dtype)
+
+    y = _gated_rms_norm(y, z, p["norm_scale"])
+    out = linear(p["out_proj"], subtree(q_state, "out_proj"), y[:, None], ctx)
+    return out, {"ssm": s_new, "conv": new_conv_tail}

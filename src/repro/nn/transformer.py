@@ -1,0 +1,420 @@
+"""Decoder-only transformer assembly for all assigned LM-family archs.
+
+One ``lm_init``/``lm_apply`` pair covers dense / vlm / moe / ssm / hybrid by
+branching on ``ArchConfig.family`` at *trace* time.  Layers are **stacked**
+((L, ...) leaves) and executed with ``jax.lax.scan`` so that the HLO holds a
+single layer body — this keeps compile time flat in depth (61-layer deepseek
+lowers in the same time as 2-layer smoke) and is what makes the 80-cell
+dry-run tractable.  Heterogeneous depth (deepseek: 3 dense + 58 MoE layers)
+becomes two consecutive scans over two stacks.
+
+Per-layer quantization state (probs) and KV/SSM caches are stacked the same
+way and travel through the scan as xs/ys.  Per-layer scalars that vary
+across layers (hymba's SWA-vs-global window) are scan inputs too, so the
+body stays layer-uniform.
+
+Activation checkpointing: ``remat`` wraps the scan body with
+``jax.checkpoint`` — "full" recomputes the whole block on the backward pass
+(min memory), "dots" saves matmul outputs (the XLA-recommended middle
+ground), "none" saves everything.  A hillclimb lever in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (embedding_init, gelu_mlp, gelu_mlp_init, layer_norm,
+                     layer_norm_init, linear_init, mrope_cos_sin,
+                     rms_norm, rms_norm_init, rope_cos_sin, subtree,
+                     swiglu, swiglu_init)
+from .module import QuantCtx
+
+HUGE_WINDOW = 1 << 30     # "global attention" encoded as a very wide window
+
+
+def _norm_init(cfg: ArchConfig, d: int) -> dict:
+    return layer_norm_init(d) if cfg.norm == "layer" else rms_norm_init(d)
+
+
+def _norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    return layer_norm(p, x) if cfg.norm == "layer" else rms_norm(p, x)
+
+
+def _mlp_init(key, cfg: ArchConfig, d_ff: int) -> dict:
+    if cfg.act == "gelu":
+        return gelu_mlp_init(key, cfg.d_model, d_ff, cfg.quantize)
+    return swiglu_init(key, cfg.d_model, d_ff, cfg.quantize)
+
+
+def _mlp(cfg: ArchConfig, p: dict, q: Any, x: jax.Array, ctx: QuantCtx):
+    if cfg.act == "gelu":
+        return gelu_mlp(p, q, x, ctx)
+    return swiglu(p, q, x, ctx)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> ssm_lib.SSMCfg:
+    return ssm_lib.SSMCfg(d_model=cfg.d_model, d_inner=cfg.d_inner,
+                          n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+                          n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk)
+
+
+def _mla_cfg(cfg: ArchConfig) -> attn.MLACfg:
+    m = cfg.mla
+    return attn.MLACfg(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                       q_lora_rank=m.q_lora_rank, kv_lora_rank=m.kv_lora_rank,
+                       qk_nope_dim=m.qk_nope_dim, qk_rope_dim=m.qk_rope_dim,
+                       v_head_dim=m.v_head_dim)
+
+
+# ------------------------------------------------------------- layer init
+
+def _layer_init(key, cfg: ArchConfig, kind: str) -> dict:
+    """kind: dense | moe | ssm | hybrid (resolved from family per depth)."""
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    p: dict = {"ln1": _norm_init(cfg, d)}
+
+    if kind != "ssm":
+        if cfg.mla is not None:
+            p["attn"] = attn.mla_init(ks[0], _mla_cfg(cfg), cfg.quantize)
+        else:
+            p["attn"] = attn.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv, hd,
+                                      cfg.quantize, qkv_bias=cfg.qkv_bias)
+
+    if kind == "ssm" or kind == "hybrid":
+        p["ssm"] = ssm_lib.ssm_init(ks[1], _ssm_cfg(cfg), cfg.quantize)
+    if kind == "hybrid":
+        p["attn_norm"] = rms_norm_init(d)
+        p["ssm_norm"] = rms_norm_init(d)
+
+    if kind == "dense":
+        p["ln2"] = _norm_init(cfg, d)
+        p["mlp"] = _mlp_init(ks[2], cfg, cfg.dense_ff or cfg.d_ff)
+    elif kind == "moe":
+        p["ln2"] = _norm_init(cfg, d)
+        p["moe"] = moe_lib.moe_init(ks[2], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.quantize,
+                                    n_shared=cfg.n_shared_experts)
+    elif kind == "hybrid":
+        p["ln2"] = _norm_init(cfg, d)
+        p["mlp"] = _mlp_init(ks[2], cfg, cfg.d_ff)
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _layer_kinds(cfg: ArchConfig) -> list:
+    if cfg.family == "moe":
+        return (["dense"] * cfg.n_dense_layers
+                + ["moe"] * (cfg.n_layers - cfg.n_dense_layers))
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        return ["hybrid"] * cfg.n_layers
+    return ["dense"] * cfg.n_layers   # dense | vlm
+
+
+def lm_init(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    kinds = _layer_kinds(cfg)
+    stacks: dict = {}
+    for kind in ("dense", "moe", "ssm", "hybrid"):
+        idx = [i for i, k in enumerate(kinds) if k == kind]
+        if idx:
+            stacks[kind] = _stack([_layer_init(keys[i], cfg, kind)
+                                   for i in idx])
+    p = {
+        "embed": embedding_init(keys[-1], cfg.padded_vocab, cfg.d_model),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+        "stacks": stacks,
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(keys[-2], cfg.d_model, cfg.padded_vocab,
+                                   quantize=False)
+    return p
+
+
+# ------------------------------------------------------------------ cache
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, cap_window: bool = False) -> dict:
+    """Stacked per-layer decode state.  With ``cap_window`` (decode-only
+    usage) SWA archs get a window-sized ring buffer — O(window) memory at
+    any context length; prefill callers keep the full length so multi-token
+    writes never wrap.  hymba's few global-attention layers force full
+    length (its long-context memory win comes from the SSM branch + SWA on
+    the other 29 layers)."""
+    kinds = _layer_kinds(cfg)
+    caches: dict = {}
+
+    def attn_cache():
+        if cfg.mla is not None:
+            return attn.init_mla_cache(batch, max_len, _mla_cfg(cfg), dtype)
+        kv_len = max_len
+        if cap_window and cfg.window and not cfg.global_attn_layers:
+            kv_len = min(max_len, cfg.window)
+        return attn.init_kv_cache(batch, kv_len, cfg.n_kv,
+                                  cfg.resolved_head_dim, dtype)
+
+    for kind in ("dense", "moe", "ssm", "hybrid"):
+        n = sum(1 for k in kinds if k == kind)
+        if not n:
+            continue
+        per: dict = {}
+        if kind != "ssm":
+            per["attn"] = attn_cache()
+        if kind in ("ssm", "hybrid"):
+            per["ssm"] = ssm_lib.init_ssm_state(batch, _ssm_cfg(cfg))
+        caches[kind] = _stack([per] * n)
+    return caches
+
+
+# ---------------------------------------------------------------- forward
+
+def _windows_for(cfg: ArchConfig, idx: list) -> Optional[jax.Array]:
+    """Per-layer window sizes (hymba) or None for a uniform setting."""
+    if not cfg.global_attn_layers:
+        return None
+    ws = [HUGE_WINDOW if i in cfg.global_attn_layers else cfg.window
+          for i in idx]
+    return jnp.asarray(ws, jnp.int32)
+
+
+def _attn_batch_reshard(cfg: ArchConfig, mesh, seq: int) -> bool:
+    """True when attention should run batch-sharded over the *model* axis.
+
+    Archs whose head counts don't divide the model axis (smollm 15H/5kv,
+    hymba 25H/5kv, qwen2-vl 12H/2kv, glm4 2kv...) fall back to replicated
+    attention weights; without this reshard every model-column then runs
+    the *same* attention compute — a tp× FLOP and intermediate-traffic
+    inflation (20.8× HLO/MODEL on smollm, §Perf iteration 2).  Resharding
+    the activations so batch spans (data × model) for the attention block
+    costs two cheap batch all-to-alls per layer and removes the redundancy.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    tp = mesh.shape["model"]
+    if tp == 1 or cfg.mla is not None:
+        return False
+    heads_sharded = cfg.n_heads % tp == 0 and cfg.n_kv % tp == 0
+    return (not heads_sharded) and seq % tp == 0
+
+
+def _block(cfg: ArchConfig, kind: str, lp: dict, lq: Any, x: jax.Array,
+           ctx: QuantCtx, *, cos_sin, positions, lcache, window,
+           mesh, use_ep: bool, attn_reshard: bool = False):
+    """One transformer block; returns (x, new_lcache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, lp["ln1"], x)
+    new_cache: dict = {}
+
+    def reshard(arr, full: bool):
+        """Sequence-parallel attention re-sharding: inside the attention
+        block, (B, S, ...) tensors shard S over 'model' (queries split;
+        GSPMD all-gathers the much smaller K/V).  Going *into* the block
+        this is a free partition refinement; going out it is one gather of
+        the block output.  (Batch-dim resharding triggered GSPMD's
+        'involuntary full rematerialization' — §Perf iteration 3.)"""
+        if not attn_reshard or arr is None or arr.ndim < 2:
+            return arr
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        spec = P(axes, "model" if full else None,
+                 *([None] * (arr.ndim - 2)))
+        return jax.lax.with_sharding_constraint(
+            arr, jax.sharding.NamedSharding(mesh, spec))
+
+    if kind == "ssm":
+        st = lcache["ssm"] if lcache is not None else None
+        if x.shape[1] == 1 and st is not None:
+            y, new_st = ssm_lib.ssm_step(lp["ssm"], subtree(lq, "ssm"), h,
+                                         ctx, _ssm_cfg(cfg), st)
+        else:
+            y, new_st = ssm_lib.ssm_apply(lp["ssm"], subtree(lq, "ssm"), h,
+                                          ctx, _ssm_cfg(cfg), state=st)
+        new_cache["ssm"] = new_st
+        x = x + y
+        return x, new_cache, aux
+
+    # --- attention branch (dense / moe / hybrid)
+    acache = lcache["attn"] if lcache is not None else None
+    if cfg.mla is not None:
+        ay, new_ac = attn.mla_apply(lp["attn"], subtree(lq, "attn"), h, ctx,
+                                    _mla_cfg(cfg), cos_sin=cos_sin,
+                                    positions=positions, cache=acache,
+                                    chunk=cfg.attn_chunk)
+    else:
+        h_a = reshard(h, full=True)
+        cs_a = (jax.tree_util.tree_map(lambda a: reshard(a, True), cos_sin)
+                if attn_reshard and cos_sin is not None
+                and cos_sin[0].ndim >= 2 else cos_sin)
+        ay, new_ac = attn.gqa_apply(lp["attn"], subtree(lq, "attn"), h_a, ctx,
+                                    n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                    head_dim=cfg.resolved_head_dim,
+                                    cos_sin=cs_a,
+                                    positions=reshard(positions, True),
+                                    causal=True, window=window,
+                                    cache=acache, chunk=cfg.attn_chunk)
+        ay = reshard(ay, full=False)
+    if new_ac is not None:
+        new_cache["attn"] = new_ac
+
+    if kind == "hybrid":
+        st = lcache["ssm"] if lcache is not None else None
+        if x.shape[1] == 1 and st is not None:
+            sy, new_st = ssm_lib.ssm_step(lp["ssm"], subtree(lq, "ssm"), h,
+                                          ctx, _ssm_cfg(cfg), st)
+        else:
+            sy, new_st = ssm_lib.ssm_apply(lp["ssm"], subtree(lq, "ssm"), h,
+                                           ctx, _ssm_cfg(cfg), state=st)
+        new_cache["ssm"] = new_st
+        # hymba: mean of per-branch normalised outputs
+        y = 0.5 * (rms_norm(lp["attn_norm"], ay) + rms_norm(lp["ssm_norm"], sy))
+    else:
+        y = ay
+    x = x + y
+
+    # --- FFN branch
+    if kind == "moe":
+        h2 = _norm(cfg, lp["ln2"], x)
+        y2, aux = moe_lib.moe_ffn(lp["moe"], subtree(lq, "moe"), h2, ctx,
+                                  mesh=mesh, top_k=cfg.top_k,
+                                  gate=cfg.moe_gate,
+                                  capacity_factor=cfg.capacity_factor,
+                                  routed_scaling=cfg.routed_scaling,
+                                  use_ep=use_ep)
+        x = x + y2
+    elif "mlp" in lp:
+        h2 = _norm(cfg, lp["ln2"], x)
+        x = x + _mlp(cfg, lp["mlp"], subtree(lq, "mlp"), h2, ctx)
+    return x, new_cache, aux
+
+
+def _run_stack(cfg: ArchConfig, kind: str, stack_p, stack_q, x, ctx, *,
+               cos_sin, positions, stack_cache, windows, mesh, use_ep,
+               remat: str, attn_reshard: bool = False):
+    """scan one homogeneous layer stack."""
+    n_layers = jax.tree_util.tree_leaves(stack_p)[0].shape[0]
+    if not isinstance(stack_q, dict):
+        # no quantization state (frozen serving): scan needs a leading axis
+        stack_q = jnp.zeros((n_layers,), jnp.uint8)
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        lp, lq, lcache, window = xs
+        x, new_cache, aux = _block(cfg, kind, lp, lq, x, ctx,
+                                   cos_sin=cos_sin, positions=positions,
+                                   lcache=lcache, window=window,
+                                   mesh=mesh, use_ep=use_ep,
+                                   attn_reshard=attn_reshard)
+        return (x, aux_sum + aux), new_cache
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if windows is None:
+        w_static = None if cfg.window is None else cfg.window
+        windows = jnp.full((n_layers,),
+                           w_static if w_static is not None else HUGE_WINDOW,
+                           jnp.int32)
+        if cfg.window is None:
+            windows = None            # uniform no-window: keep mask simpler
+
+    xs = (stack_p, stack_q, stack_cache,
+          windows if windows is not None
+          else jnp.zeros((n_layers,), jnp.int32))
+    if windows is None:
+        # replace the window input with None semantics inside body via closure
+        def body_nw(carry, xs):
+            lp, lq, lcache, _ = xs
+            return body(carry, (lp, lq, lcache, None))
+        (x, aux), new_caches = jax.lax.scan(body_nw, (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_caches
+
+
+def lm_apply(params: dict, qstate: Any, tokens: Optional[jax.Array],
+             ctx: QuantCtx, cfg: ArchConfig, *,
+             embeds: Optional[jax.Array] = None,
+             positions: Optional[jax.Array] = None,
+             cache: Optional[dict] = None,
+             mesh: Optional[jax.sharding.Mesh] = None,
+             use_ep: bool = True, remat: str = "none",
+             attn_reshard: Optional[bool] = None):
+    """Forward pass.  Returns (logits, new_cache, aux_loss).
+
+    ``tokens``: (B, S) int32, or ``embeds``: (B, S, d) for the stubbed
+    vlm/audio frontends.  ``positions``: (B, S) absolute positions (decode
+    passes the cache offset); defaults to arange.
+    """
+    if embeds is None:
+        x = params["embed"]["table"].astype(ctx.dtype)[tokens]
+        b, s = tokens.shape
+    else:
+        x = embeds.astype(ctx.dtype)
+        b, s = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        rotary_dim = cfg.mla.qk_rope_dim
+    else:
+        rotary_dim = int(hd * cfg.rotary_frac)
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.stack([positions] * 3)
+        cos_sin = mrope_cos_sin(pos3, rotary_dim, cfg.rope_theta,
+                                cfg.mrope_sections, dtype=jnp.float32)
+    elif cfg.family != "ssm":
+        cos_sin = rope_cos_sin(positions, rotary_dim, cfg.rope_theta,
+                               dtype=jnp.float32)
+    else:
+        cos_sin = None
+
+    if attn_reshard is None:
+        attn_reshard = cache is None and _attn_batch_reshard(cfg, mesh, s)
+    kinds = _layer_kinds(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict = {}
+    for kind in ("dense", "moe", "ssm", "hybrid"):
+        if kind not in params["stacks"]:
+            continue
+        idx = [i for i, k in enumerate(kinds) if k == kind]
+        stack_q = subtree(subtree(qstate, "stacks"), kind)
+        stack_c = cache.get(kind) if cache is not None else None
+        windows = _windows_for(cfg, idx)
+        x, aux, nc = _run_stack(
+            cfg, kind, params["stacks"][kind], stack_q, x, ctx,
+            cos_sin=cos_sin, positions=positions, stack_cache=stack_c,
+            windows=windows, mesh=mesh, use_ep=use_ep, remat=remat,
+            attn_reshard=attn_reshard)
+        aux_total = aux_total + aux
+        if stack_c is not None:
+            new_caches[kind] = nc
+
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"]["table"].astype(
+            jnp.float32).T
+    else:
+        w = params["lm_head"]["kernel"]
+        logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    # mask padded vocab rows
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, (new_caches if cache is not None else None), aux_total

@@ -1,0 +1,86 @@
+"""EC4T training step assembly (paper §IV, full loop).
+
+One training step =
+  1. fake-quant forward + backward (STE; gradients w.r.t. masters *and* the
+     4 basis centroids fall out of the differentiable decode — eq. (2)),
+  2. Adam on the whole tree (masters + ω + everything unquantized),
+  3. one alternating-ECL iteration: EMA-update the per-tensor cluster
+     probabilities from fresh assignments (core/qat.update_qstate),
+  4. (MoE archs) deepseek-style aux-free balancing: nudge the router's
+     bias-correction toward the under-loaded experts.
+
+All of it runs inside one jit/pjit; the probs update over a sharded master
+weight reduces to a 16-wide psum per tensor (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import qat
+from . import adam
+from .grad_compress import GradCompressCfg, compress_grads, init_error_state
+
+
+def make_train_step(loss_fn: Callable, adam_cfg: adam.AdamConfig, *,
+                    lam: float | Callable = 0.02,
+                    probs_momentum: float = 0.9,
+                    lr_schedule: Optional[Callable] = None,
+                    compress: Optional[GradCompressCfg] = None,
+                    mesh=None):
+    """Build the jittable EC4T train step.
+
+    loss_fn(params, qstate, batch, lam) -> (loss, metrics).
+    Returns step(state, batch) -> (state, metrics) with
+    state = {params, opt, qstate, err?}.
+    """
+
+    def step(state, batch):
+        p, opt, qs = state["params"], state["opt"], state["qstate"]
+        lam_t = lam(opt["step"]) if callable(lam) else lam
+        lr_scale = lr_schedule(opt["step"]) if lr_schedule else 1.0
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, qs, batch, lam_t), has_aux=True)(p)
+
+        err = state.get("err")
+        if compress is not None and err is not None:
+            grads, err = compress_grads(grads, err, compress, mesh=mesh)
+
+        new_p, new_opt, opt_metrics = adam.apply(p, grads, opt, adam_cfg,
+                                                 lr_scale=lr_scale)
+        new_qs = qat.update_qstate(new_p, qs, lam_t, probs_momentum)
+
+        metrics = dict(metrics, **opt_metrics, lam=jnp.asarray(lam_t),
+                       lr_scale=jnp.asarray(lr_scale))
+        new_state = {"params": new_p, "opt": new_opt, "qstate": new_qs}
+        if err is not None:
+            new_state["err"] = err
+        return new_state, metrics
+
+    return step
+
+
+def init_train_state(params: Any,
+                     compress: Optional[GradCompressCfg] = None) -> dict:
+    state = {"params": params, "opt": adam.init(params),
+             "qstate": qat.build_qstate(params)}
+    if compress is not None:
+        state["err"] = init_error_state(params, compress)
+    return state
+
+
+def update_moe_bias(params: Any, load_frac: jax.Array, *,
+                    gamma: float = 1e-3) -> Any:
+    """deepseek-v3 aux-loss-free balancing: decrease the routing bias of
+    overloaded experts, increase underloaded (sign update, rate γ).
+    ``load_frac``: (E,) fraction of assignments per expert this step."""
+    def f(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name.endswith("router/bias_correction"):
+            target = 1.0 / leaf.shape[-1]
+            return leaf + gamma * jnp.sign(target - load_frac)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, params)

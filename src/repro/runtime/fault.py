@@ -1,0 +1,122 @@
+"""Fault tolerance for the training loop.
+
+Large fleets fail constantly; the posture here (DESIGN.md §4):
+
+* **checkpoint/restart** — ``FaultTolerantLoop`` checkpoints every
+  ``ckpt_every`` steps through the atomic CheckpointManager; on (re)start it
+  resumes from the latest step found.  Data is step-seeded
+  (data/synthetic.py) so skip-ahead is exact with zero replay.
+* **preemption** — SIGTERM/SIGINT set a flag; the loop checkpoints at the
+  next step boundary and exits cleanly (the SLURM/Borg eviction contract).
+* **transient-failure retry** — a step that raises an XLA runtime error is
+  retried up to ``max_retries`` times from the last good state before the
+  job surrenders; systematic (deterministic) failures exhaust retries
+  immediately rather than looping forever.
+* **bounded-stale metrics** — device→host metric fetches only block every
+  ``metrics_every`` steps, so a slow host NIC never serialises the step
+  (straggler mitigation on the observability path; the data path is handled
+  by the prefetching ShardedFeed).
+* **elastic restart** — restore maps arrays onto the *current* mesh, so a
+  job resized 512→256 chips resumes from the same checkpoint (exercised in
+  tests/test_checkpoint.py with two different fake-device meshes).
+"""
+from __future__ import annotations
+
+import logging
+import signal
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from ..checkpoint.manager import CheckpointManager
+
+log = logging.getLogger(__name__)
+
+
+class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a checkpoint-at-next-boundary flag."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:      # non-main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        log.warning("preemption signal %s received", signum)
+        self.requested = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+class FaultTolerantLoop:
+    def __init__(self, step_fn: Callable, manager: CheckpointManager, *,
+                 ckpt_every: int = 100, metrics_every: int = 10,
+                 max_retries: int = 3,
+                 on_metrics: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.manager = manager
+        self.ckpt_every = ckpt_every
+        self.metrics_every = metrics_every
+        self.max_retries = max_retries
+        self.on_metrics = on_metrics or (lambda step, m: None)
+
+    def resume_or(self, init_state: Any, sharding_fn=None) -> tuple:
+        """(state, start_step): latest checkpoint if present, else init."""
+        step = self.manager.latest_step()
+        if step is None:
+            return init_state, 0
+        state, meta = self.manager.restore(init_state, step,
+                                           sharding_fn=sharding_fn)
+        log.info("resumed from step %d", meta["step"])
+        return state, meta["step"]
+
+    def run(self, state: Any, batches: Iterator, *, start_step: int = 0,
+            total_steps: int = 1000) -> tuple:
+        """Returns (state, last_step, reason) with reason in
+        {"done", "preempted", "failed"}."""
+        guard = PreemptionGuard()
+        pending_metrics = None
+        step = start_step
+        try:
+            while step < total_steps:
+                if guard.requested:
+                    self.manager.save(step, state)
+                    return state, step, "preempted"
+                batch = next(batches)
+                retries = 0
+                while True:
+                    try:
+                        new_state, metrics = self.step_fn(state, batch)
+                        break
+                    except jax.errors.JaxRuntimeError as e:
+                        retries += 1
+                        log.warning("step %d failed (%s), retry %d/%d",
+                                    step, e, retries, self.max_retries)
+                        if retries > self.max_retries:
+                            self.manager.save(step, state)
+                            return state, step, "failed"
+                        time.sleep(0.1 * retries)
+                state = new_state
+                step += 1
+                # bounded-stale metrics: fetch the metrics of N steps ago
+                if step % self.metrics_every == 0:
+                    if pending_metrics is not None:
+                        fetched = jax.device_get(pending_metrics[1])
+                        self.on_metrics(pending_metrics[0], fetched)
+                    pending_metrics = (step, metrics)
+                if step % self.ckpt_every == 0:
+                    self.manager.save(step, state)
+            if pending_metrics is not None:
+                self.on_metrics(pending_metrics[0],
+                                jax.device_get(pending_metrics[1]))
+            self.manager.save(step, state)
+            return state, step, "done"
+        finally:
+            guard.restore()

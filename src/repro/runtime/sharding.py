@@ -1,0 +1,231 @@
+"""Partition rules: parameter/optimizer/activation sharding for the mesh.
+
+Mesh axes (launch/mesh.py): ``('data', 'model')`` single-pod,
+``('pod', 'data', 'model')`` multi-pod.  Batch shards over the data axes
+(pod included), weights Megatron-style over ``model``:
+
+* QKV / gate / up / q_up / kv_up: column-sharded (output features);
+* O / down / out_proj: row-sharded (contraction dim → psum);
+* embedding + LM head: vocab-sharded;
+* MoE expert banks: expert-sharded over 'model' when E % tp == 0
+  (deepseek 256e), else per-expert TP on the FFN width (grok 8e);
+* everything small/sensitive (norms, biases, router, ω, probs, SSM
+  dynamics): replicated — they are the paper's full-precision parameters
+  and a negligible byte fraction.
+
+Every rule is **divisibility-guarded**: a dim that doesn't divide by the
+axis size falls back to replication for that dim (e.g. smollm's 15 heads on
+a 16-wide model axis).  The rules operate on *names + shapes* via
+``tree_map_with_path``, so they apply identically to concrete arrays and to
+``jax.eval_shape`` results — the dry-run shards a model that was never
+materialised.
+
+ZeRO-1 (:func:`zero1_spec`): optimizer moments and fp32 masters additionally
+shard their first still-replicated dim over the data axes — GSPMD then
+lowers the grad reduction into reduce-scatter + the param broadcast into
+all-gather, the standard ZeRO-1 collective schedule.
+
+Leading scan dims ((L, ...) stacked layers) are detected from the path and
+skipped (never sharded: every device runs every layer of its shard).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# path-regex -> role; order matters (first match wins)
+_RULES: Tuple[Tuple[str, str], ...] = (
+    (r"embed//table$", "vocab_rows"),
+    (r"lm_head//kernel(//w|//packed)?$", "vocab_cols"),
+    (r"(attn|cross)//(q|k|v)//(kernel(//w|//packed)?|bias)$", "attn_qkv"),
+    (r"(attn|cross)//o//kernel(//w|//packed)?$", "attn_o"),
+    (r"attn//(q_down|kv_down)//kernel(//w|//packed)?$", "col"),
+    (r"attn//(q_up|kv_up)//kernel(//w|//packed)?$", "head_col"),
+    (r"(mlp|shared)//(gate|up|fc1)//(kernel(//w|//packed)?|bias)$", "col"),
+    (r"(mlp|shared)//(down|fc2)//kernel(//w|//packed)?$", "row"),
+    (r"(mlp|shared)//(down|fc2)//bias$", "rep"),
+    (r"moe//experts//(gate|up)//(w|packed)$", "expert_col"),
+    (r"moe//experts//down//(w|packed)$", "expert_row"),
+    (r"moe//experts//(gate|up)$", "expert_col"),
+    (r"moe//experts//down$", "expert_row"),
+    (r"moe//router//", "rep"),
+    (r"ssm//in_proj//kernel(//w|//packed)?$", "row_contract"),
+    (r"ssm//out_proj//kernel(//w|//packed)?$", "row"),
+    (r"//omega$", "rep"),
+    (r"//probs$", "rep"),
+)
+
+_STACK_MARKERS = ("stacks//", "enc_layers//", "dec_layers//", "layers//")
+
+
+def path_name(path) -> str:
+    return "//".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+
+
+def _n_lead(name: str, ndim: int, trailing: int) -> int:
+    """Number of leading stacked dims (scan L, etc.) before the logical
+    tensor dims."""
+    for m in _STACK_MARKERS:
+        if m in name:
+            return max(ndim - trailing, 0)
+    return 0
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+class Rules:
+    def __init__(self, mesh_axes: Tuple[str, ...], mesh_shape: dict, cfg):
+        self.axes = mesh_axes
+        self.shape = mesh_shape
+        self.cfg = cfg
+        self.tp = mesh_shape.get("model", 1)
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        self.dp = int(np.prod([mesh_shape[a] for a in self.dp_axes] or [1]))
+
+    # ---- role -> spec over the *logical* trailing dims
+    def _role_spec(self, role: str, shape: Tuple[int, ...]) -> P:
+        tp, cfg = self.tp, self.cfg
+        m = "model"
+        if role == "vocab_rows":
+            return P(m if _div(shape[0], tp) else None, None)
+        if role == "vocab_cols":
+            return P(None, m if _div(shape[1], tp) else None)
+        if role == "attn_qkv":
+            heads_ok = (_div(getattr(cfg, "n_heads", 0), tp)
+                        and _div(getattr(cfg, "n_kv", 0), tp))
+            if len(shape) == 1:      # qkv bias
+                return P(m if heads_ok and _div(shape[0], tp) else None)
+            return P(None, m if heads_ok and _div(shape[1], tp) else None)
+        if role == "head_col":       # MLA up-projections: per-head columns
+            heads_ok = _div(getattr(cfg, "n_heads", 0), tp)
+            return P(None, m if heads_ok and _div(shape[1], tp) else None)
+        if role == "attn_o":
+            heads_ok = _div(getattr(cfg, "n_heads", 0), tp)
+            return P(m if heads_ok and _div(shape[0], tp) else None, None)
+        if role == "col":
+            if len(shape) == 1:
+                return P(m if _div(shape[0], tp) else None)
+            return P(None, m if _div(shape[1], tp) else None)
+        if role == "row":
+            return P(m if _div(shape[0], tp) else None, None)
+        if role == "row_contract":
+            return P(m if _div(shape[0], tp) else None, None)
+        if role == "expert_col":
+            if _div(shape[0], tp):
+                return P(m, None, None)
+            return P(None, None, m if _div(shape[2], tp) else None)
+        if role == "expert_row":
+            if _div(shape[0], tp):
+                return P(m, None, None)
+            return P(None, m if _div(shape[1], tp) else None, None)
+        return P(*([None] * len(shape)))
+
+    def spec_for(self, name: str, shape: Tuple[int, ...]) -> P:
+        for pattern, role in _RULES:
+            if re.search(pattern, name):
+                trailing = {"vocab_rows": 2, "vocab_cols": 2, "attn_qkv": None,
+                            }.get(role)
+                # roles operate on their natural trailing arity
+                arity = 3 if role.startswith("expert") else (
+                    1 if len(shape) >= 1 and (name.endswith("bias")
+                                              or role == "rep") else 2)
+                if role == "rep":
+                    return P(*([None] * len(shape)))
+                if name.endswith("bias"):
+                    arity = 1
+                lead = _n_lead(name, len(shape), arity)
+                logical = shape[lead:]
+                if len(logical) != arity:
+                    return P(*([None] * len(shape)))
+                sub = self._role_spec(role, logical)
+                return P(*([None] * lead), *sub)
+        return P(*([None] * len(shape)))
+
+    # ------------------------------------------------------ tree mappers
+
+    def param_specs(self, params: Any) -> Any:
+        def f(path, leaf):
+            return self.spec_for(path_name(path), np.shape(leaf))
+        return jax.tree_util.tree_map_with_path(f, params)
+
+    def zero1_spec(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Shard the first replicated, divisible dim over the data axes."""
+        if not self.dp_axes or self.dp == 1:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (s, dim) in enumerate(zip(parts, shape)):
+            if s is None and _div(dim, self.dp):
+                parts[i] = self.dp_axes if len(self.dp_axes) > 1 \
+                    else self.dp_axes[0]
+                return P(*parts)
+        return spec
+
+    def opt_specs(self, params: Any, zero1: bool = True) -> Any:
+        """Specs for one params-shaped moment tree (m or v)."""
+        def f(path, leaf):
+            spec = self.spec_for(path_name(path), np.shape(leaf))
+            if zero1:
+                spec = self.zero1_spec(spec, np.shape(leaf))
+            return spec
+        return jax.tree_util.tree_map_with_path(f, params)
+
+    def qstate_specs(self, qstate: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda leaf: P(*([None] * np.ndim(leaf))), qstate)
+
+    def batch_spec(self, ndim: int, batch_dim: Optional[int] = None) -> P:
+        """Batch over the data axes; replicate when indivisible (B=1 in
+        long_500k — a single sequence cannot data-shard)."""
+        if batch_dim is not None and not _div(batch_dim, self.dp):
+            return P(*([None] * ndim))
+        ax = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        return P(ax, *([None] * (ndim - 1)))
+
+    def batch_specs(self, batch: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda leaf: self.batch_spec(np.ndim(leaf),
+                                         np.shape(leaf)[0]
+                                         if np.ndim(leaf) else None), batch)
+
+    def cache_specs(self, cache: Any) -> Any:
+        """KV/SSM caches: batch over data axes; heads over model when
+        divisible.  Leading (L,) stack dim replicated.  Cache leaves are
+        (L, B, S, n_kv, hd) / (L, B, S, r) / (L, B, H, P, N) / scalars."""
+        tp = self.tp
+
+        def f(path, leaf):
+            name = path_name(path)
+            nd = np.ndim(leaf)
+            shape = np.shape(leaf)
+            if nd <= 1 or name.endswith("len") or name.endswith("pos"):
+                return P(*([None] * nd))
+            b_dim = shape[1] if nd >= 2 else None
+            bx = None
+            if b_dim is not None and _div(b_dim, self.dp) and self.dp_axes:
+                bx = (self.dp_axes if len(self.dp_axes) > 1
+                      else self.dp_axes[0])
+            if name.endswith(("//k", "//v")) and nd == 5:
+                kv_ok = _div(shape[3], tp)
+                return P(None, bx, None, "model" if kv_ok else None, None)
+            if name.endswith("//ssm") and nd == 5:
+                h_ok = _div(shape[2], tp)
+                return P(None, bx, "model" if h_ok else None, None, None)
+            if nd >= 2:
+                return P(None, bx, *([None] * (nd - 2)))
+            return P(*([None] * nd))
+        return jax.tree_util.tree_map_with_path(f, cache)
+
+    # ------------------------------------------------------- shardings
+
+    def named(self, mesh: Mesh, specs: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))

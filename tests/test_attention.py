@@ -1,0 +1,83 @@
+"""Chunked online-softmax vs dense reference; MLA forms; SWA ring cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+from repro.nn.layers import rope_cos_sin
+from repro.nn.module import FP32_CTX
+
+
+def _qkv(seed, b, sq, skv, h, g, d):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, g, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, g, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,sq,skv,h,g,d", [
+    (1, 8, 8, 4, 4, 16), (2, 16, 16, 8, 2, 8), (2, 7, 13, 6, 3, 4),
+    (1, 33, 65, 4, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("chunk", [4, 7, 1024])
+def test_chunked_matches_dense(b, sq, skv, h, g, d, causal, window, chunk):
+    if causal and sq != skv:
+        pytest.skip("causal needs aligned positions here")
+    q, k, v = _qkv(b * sq + h, b, sq, skv, h, g, d)
+    qp = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    kp = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    out = A.softmax_attention(q, k, v, qp, kp, causal=causal, window=window,
+                              chunk=chunk)
+    ref = A.dense_attention_ref(q, k, v, qp, kp, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_fully_masked_rows_are_finite():
+    q, k, v = _qkv(0, 1, 4, 4, 2, 2, 8)
+    qp = jnp.zeros((1, 4), jnp.int32)          # all queries at position 0
+    kp = jnp.broadcast_to(jnp.arange(4) + 10, (1, 4))  # keys all "future"
+    out = A.softmax_attention(q, k, v, qp, kp, causal=True, chunk=2)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_mla_absorbed_equals_naive():
+    cfg = A.MLACfg(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                   qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8)
+    key = jax.random.PRNGKey(0)
+    p = A.mla_init(key, cfg, quantize=False)
+    x = jax.random.normal(key, (2, 1, 64))
+    pos = jnp.zeros((2, 1), jnp.int32)
+    cs = rope_cos_sin(pos, cfg.qk_rope_dim, 1e4)
+    cache = A.init_mla_cache(2, 8, cfg, jnp.float32)
+    y1, _ = A.mla_apply(p, 0, x, FP32_CTX, cfg, cos_sin=cs, positions=pos,
+                        cache=cache, force_absorbed=True)
+    y2, _ = A.mla_apply(p, 0, x, FP32_CTX, cfg, cos_sin=cs, positions=pos,
+                        cache=cache, force_absorbed=False)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+
+def test_swa_ring_buffer_decode():
+    """A window-sized ring cache must reproduce full-cache SWA decoding."""
+    d_model, nh, nkv, hd, W = 32, 4, 2, 8, 4
+    key = jax.random.PRNGKey(1)
+    p = A.gqa_init(key, d_model, nh, nkv, hd, False)
+    S = 12
+    x = jax.random.normal(key, (1, S, d_model))
+    pos = jnp.arange(S)[None, :]
+    cs = rope_cos_sin(pos, hd, 1e4)
+
+    def decode_all(cache_size):
+        cache = A.init_kv_cache(1, cache_size, nkv, hd, jnp.float32)
+        outs = []
+        for t in range(S):
+            y, cache = A.gqa_apply(
+                p, 0, x[:, t:t+1], FP32_CTX, n_heads=nh, n_kv=nkv,
+                head_dim=hd, cos_sin=(cs[0][:, t:t+1], cs[1][:, t:t+1]),
+                positions=pos[:, t:t+1], window=W, cache=cache)
+            outs.append(y)
+        return jnp.concatenate(outs, 1)
+
+    np.testing.assert_allclose(decode_all(W), decode_all(S), atol=1e-5)

@@ -1,0 +1,80 @@
+"""Bit-plane codec: pack/unpack roundtrips, decode == eq.(1), lead dims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplanes as bp
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_rows_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    k = 2 * rng.integers(1, 16)
+    n = rng.integers(1, 16)
+    codes = jnp.asarray(rng.integers(0, 16, size=(k, n)), jnp.uint8)
+    packed = bp.pack_codes_rows(codes)
+    assert packed.shape == (k // 2, n)
+    np.testing.assert_array_equal(bp.unpack_codes_rows(packed), codes)
+
+
+def test_pack_rows_lead_dims():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 16, size=(3, 2, 8, 5)), jnp.uint8)
+    packed = bp.pack_codes_rows(codes)
+    assert packed.shape == (3, 2, 4, 5)
+    np.testing.assert_array_equal(bp.unpack_codes_rows(packed), codes)
+
+
+def test_pack_odd_raises():
+    with pytest.raises(ValueError):
+        bp.pack_codes_rows(jnp.zeros((3, 5), jnp.uint8))
+
+
+def test_codebook_subset_sums():
+    omega = jnp.asarray([0.5, -1.0, 2.0, 0.25])
+    book = bp.codebook(omega)
+    assert book.shape == (16,)
+    assert book[0] == 0.0                       # code 0 == exact zero
+    for c in range(16):
+        expect = sum(float(omega[i]) for i in range(4) if (c >> i) & 1)
+        np.testing.assert_allclose(book[c], expect, rtol=1e-6)
+
+
+def test_decode_equals_codebook_gather():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(0, 16, size=(32, 8)), jnp.uint8)
+    omega = jnp.asarray(rng.normal(size=4), jnp.float32)
+    np.testing.assert_allclose(bp.decode(codes, omega),
+                               bp.codebook(omega)[codes], rtol=1e-6)
+
+
+def test_decode_batched_matches_unbatched():
+    rng = np.random.default_rng(2)
+    codes = jnp.asarray(rng.integers(0, 16, size=(5, 6, 4)), jnp.uint8)
+    omega = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    out = bp.decode(codes, omega)
+    for i in range(5):
+        np.testing.assert_allclose(out[i], bp.decode(codes[i], omega[i]))
+
+
+def test_omega_grad_is_bitplane_sum():
+    """d decode / d omega_i == sum of bit-plane B_i — paper eq. (2)."""
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(0, 16, size=(16, 16)), jnp.uint8)
+    omega = jnp.asarray(rng.normal(size=4), jnp.float32)
+    g = jax.grad(lambda om: jnp.sum(bp.decode(codes, om)))(omega)
+    for i in range(4):
+        bi = ((codes >> i) & 1).astype(jnp.float32).sum()
+        np.testing.assert_allclose(g[i], bi, rtol=1e-5)
+
+
+def test_init_omega_covers_int4_grid():
+    w = jnp.asarray(np.random.default_rng(4).normal(size=(64, 64)), jnp.float32)
+    omega = bp.init_omega_from_weights(w)
+    book = np.sort(np.asarray(bp.codebook(omega)))
+    # subset sums of {s,2s,4s,-8s} = int4 grid [-8s, 7s]
+    s = float(jnp.max(jnp.abs(w))) / 8
+    np.testing.assert_allclose(book, np.arange(-8, 8) * s, rtol=1e-5)

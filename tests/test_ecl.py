@@ -1,0 +1,65 @@
+"""ECL assignment properties: optimality, entropy/sparsity vs lambda."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplanes as bp, ecl
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_assign_minimises_cost(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    omega = jnp.asarray(rng.normal(size=4), jnp.float32)
+    probs = jnp.asarray(rng.dirichlet(np.ones(16)), jnp.float32)
+    lam = float(rng.uniform(0, 0.5))
+    codes = ecl.assign(w, omega, probs, lam)
+    book = np.asarray(bp.codebook(omega))
+    pen = -np.log2(np.clip(np.asarray(probs), ecl.PROB_FLOOR, 1))
+    scale = float(np.mean(np.asarray(w) ** 2))   # scale-invariant penalty
+    cost = (np.asarray(w)[:, None] - book) ** 2 + lam * scale * pen
+    np.testing.assert_array_equal(np.asarray(codes), cost.argmin(1))
+
+
+def test_lam_zero_is_nearest_neighbour():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    omega = jnp.asarray([0.1, 0.2, 0.4, -0.8], jnp.float32)
+    codes = ecl.assign(w, omega, jnp.full((16,), 1 / 16), 0.0)
+    book = np.asarray(bp.codebook(omega))
+    nn = np.abs(np.asarray(w)[:, None] - book).argmin(1)
+    np.testing.assert_array_equal(np.asarray(codes), nn)
+
+
+def test_sparsity_and_entropy_monotone_in_lambda():
+    """Higher lambda => more mass on popular clusters => lower entropy,
+    and (for zero-heavy inits) more exact zeros — the paper's fig. 9 axis."""
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.normal(size=(128, 128)) * 0.1, jnp.float32)
+    omega = bp.init_omega_from_weights(w)
+    ents, spars = [], []
+    for lam in (0.0, 0.01, 0.05, 0.2):
+        codes, probs = ecl.ecl_fit(w, omega, lam, iters=12)
+        ents.append(float(ecl.entropy_bits(ecl.histogram(codes))))
+        spars.append(float(ecl.sparsity(codes)))
+    assert ents == sorted(ents, reverse=True), ents
+    assert spars[-1] > spars[0], spars
+
+
+def test_histogram_lead_dims():
+    rng = np.random.default_rng(9)
+    codes = jnp.asarray(rng.integers(0, 16, size=(3, 50)), jnp.uint8)
+    h = ecl.histogram(codes, lead_ndim=1)
+    assert h.shape == (3, 16)
+    np.testing.assert_allclose(np.asarray(h).sum(-1), 1.0, rtol=1e-6)
+    for i in range(3):
+        np.testing.assert_allclose(h[i], ecl.histogram(codes[i]), rtol=1e-6)
+
+
+def test_update_probs_ema():
+    probs = jnp.full((16,), 1 / 16, jnp.float32)
+    codes = jnp.zeros((100,), jnp.uint8)        # all zeros
+    p2 = ecl.update_probs(probs, codes, momentum=0.5)
+    assert float(p2[0]) > 0.5                   # pulled toward all-zero hist
+    np.testing.assert_allclose(float(jnp.sum(p2)), 1.0, rtol=1e-5)

@@ -1,0 +1,44 @@
+"""Paper §VI-C configuration: 8-bit activations between layers.
+
+int8 serving must track the f32 serving path closely (the paper reports
+'accurate enough to perform inference without harming prediction
+performance') and the kernel path must agree with the oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mlps import MLP_HR
+from repro.core import qat
+from repro.models import mlp as M
+from repro.nn.module import QuantCtx
+
+
+def _frozen_pack():
+    key = jax.random.PRNGKey(0)
+    p, bn = M.mlp_init(key, MLP_HR)
+    q = qat.build_qstate(p)
+    x = jax.random.normal(key, (64, MLP_HR.d_in))
+    ctx = QuantCtx(quant=True, lam=0.05, compute_dtype=jnp.float32)
+    _, bn = M.mlp_apply(p, q, bn, x, ctx, train=True)
+    pack = M.freeze_mlp(p, q, bn, lam=0.05)
+    return pack, x
+
+
+def test_int8_activations_track_f32():
+    pack, x = _frozen_pack()
+    calib = M.calibrate_act_scales(pack, x)
+    y32 = M.mlp_serve(pack, x, use_kernel=False)
+    y8 = M.mlp_serve_int8(pack, calib, x)
+    rel = float(jnp.linalg.norm(y8 - y32) / jnp.linalg.norm(y32))
+    agree = float((y8.argmax(-1) == y32.argmax(-1)).mean())
+    assert rel < 0.05, rel
+    assert agree > 0.9, agree
+
+
+def test_int8_kernel_matches_oracle():
+    pack, x = _frozen_pack()
+    calib = M.calibrate_act_scales(pack, x)
+    y_o = M.mlp_serve_int8(pack, calib, x[:8], use_kernel=False)
+    y_k = M.mlp_serve_int8(pack, calib, x[:8], use_kernel=True,
+                           interpret=True)
+    np.testing.assert_allclose(y_k, y_o, atol=1e-2, rtol=1e-2)

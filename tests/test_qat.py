@@ -1,0 +1,74 @@
+"""EC4T parameterisation: STE identity, eq.(2) centroid grads, state EMA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanes as bp, ecl, qat
+
+
+def test_ste_passes_master_grads_through():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    omega = bp.init_omega_from_weights(w)
+    probs = jnp.full((16,), 1 / 16, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(qat.fake_quant(w, omega, probs, 0.01) * u))(w)
+    np.testing.assert_allclose(g, u, atol=1e-6)     # straight-through
+
+
+def test_omega_grad_matches_eq2():
+    """dL/d omega_i == sum_j dL/dW_j * B_i[j] (paper eq. 2)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    omega = bp.init_omega_from_weights(w)
+    probs = jnp.full((16,), 1 / 16, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    lam = 0.03
+    g = jax.grad(lambda om: jnp.sum(qat.fake_quant(w, om, probs, lam) * u),
+                 )(omega)
+    codes = ecl.assign(w, omega, probs, lam)
+    for i in range(4):
+        bi = ((codes >> i) & 1).astype(jnp.float32)
+        np.testing.assert_allclose(g[i], jnp.sum(u * bi), rtol=1e-4)
+
+
+def test_fake_quant_output_in_codebook():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(40, 24)), jnp.float32)
+    omega = bp.init_omega_from_weights(w)
+    probs = jnp.full((16,), 1 / 16, jnp.float32)
+    wq = qat.fake_quant(w, omega, probs, 0.02)
+    book = np.asarray(bp.codebook(omega))
+    dists = np.abs(np.asarray(wq)[..., None] - book).min(-1)
+    assert dists.max() < 1e-5
+
+
+def test_build_update_qstate_tree():
+    rng = np.random.default_rng(3)
+    params = {
+        "a": qat.make_quant_param(jnp.asarray(rng.normal(size=(3, 8, 4)),
+                                              jnp.float32)),
+        "norm": jnp.ones((7,), jnp.float32),
+    }
+    qs = qat.build_qstate(params)
+    assert qs["a"]["probs"].shape == (3, 16)
+    assert qs["norm"].shape == (7,)             # lead-dim placeholder
+    qs2 = qat.update_qstate(params, qs, lam=0.05, momentum=0.5)
+    s = np.asarray(qs2["a"]["probs"]).sum(-1)
+    np.testing.assert_allclose(s, 1.0, rtol=1e-5)
+    st = qat.stats(params, qs2, 0.05)
+    assert 0 <= float(st["sparsity"]) <= 1
+    assert 0 <= float(st["entropy_bits_per_weight"]) <= 4.0
+
+
+def test_freeze_tree_decode_matches_assign():
+    rng = np.random.default_rng(4)
+    params = {"lin": qat.make_quant_param(
+        jnp.asarray(rng.normal(size=(16, 8)), jnp.float32))}
+    qs = qat.build_qstate(params)
+    frozen = qat.freeze_tree(params, qs, 0.02)
+    codes = ecl.assign(params["lin"]["w"], params["lin"]["omega"],
+                       qs["lin"]["probs"], 0.02)
+    np.testing.assert_allclose(
+        qat.decode_frozen(frozen["lin"]),
+        bp.decode(codes, params["lin"]["omega"]), rtol=1e-6)
