@@ -7,6 +7,9 @@ fig9_pareto           Fig. 9   (EC4T vs EC2T accuracy↔sparsity fronts)
 fig11_entropy_bytes   Fig. 11  (entropy -> data-movement bytes)
 acm_vs_mac            §III-A   (multiply counts + HBM bytes + kernel check)
 serving_roofline      Tables VI-VIII analogue (from dry-run artifacts)
+fused_serving         §V pipeline analogue (megakernel vs per-layer
+                      wall-clock; also writes BENCH_fused_serving.json at
+                      the repo root for cross-PR perf tracking)
 """
 from __future__ import annotations
 
@@ -24,14 +27,15 @@ def main(argv=None):
     steps = 60 if args.fast else 200
 
     from benchmarks import (bench_acm_vs_mac, bench_compression,
-                            bench_entropy_energy, bench_pareto,
-                            bench_serving_roofline)
+                            bench_entropy_energy, bench_fused_serving,
+                            bench_pareto, bench_serving_roofline)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
         "fig9_pareto": lambda: bench_pareto.run(steps=steps),
         "fig11_entropy_bytes": lambda: bench_entropy_energy.run(steps=steps),
         "serving_roofline": lambda: bench_serving_roofline.run(),
+        "fused_serving": lambda: bench_fused_serving.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

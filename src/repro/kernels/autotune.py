@@ -1,0 +1,210 @@
+"""Shape-aware block-size autotuner for the FantastIC4 Pallas kernels.
+
+The seed kernels ran every shape with hard-coded ``block_m=128 / block_n=256
+/ block_k=512``; paper-shaped layers (512×512 down to 128×12) and serving
+batches (1…256) leave most of those tiles as padding.  This module picks
+per-shape blocks instead, in three tiers:
+
+1. **memory cache** — a dict keyed by ``(backend, M, K, N, dtype, fused)``.
+2. **persistent JSON cache** — survives processes, so the timed sweep runs
+   once per shape per host.  Location: ``$FANTASTIC4_AUTOTUNE_CACHE`` or
+   ``~/.cache/fantastic4/autotune.json``.
+3. **resolution** — on a real accelerator a *timed candidate sweep* (the
+   caller supplies ``measure``, a ``BlockConfig -> seconds`` closure running
+   the actual kernel; AttentionEngine-style empirical tuning); in
+   interpret/CPU mode a *pure heuristic* (timing the interpreter is
+   meaningless), which clamps blocks to the padded problem dims so small
+   layers stop paying for 128×256×512 tiles.
+
+``ops.fantastic4_matmul`` / ``ops.fantastic4_mlp_fused`` consult this module
+whenever a block size is left as ``None`` — the default for every entry
+point (serving launcher, benchmarks, models), so all of them exercise the
+same tuned configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Dict, Iterable, Optional, Sequence
+
+import jax
+
+ENV_CACHE = "FANTASTIC4_AUTOTUNE_CACHE"
+
+# sublane/lane granularity of a f32 TPU tile; block dims are clamped to
+# multiples of these so padding stays inside one tile.
+SUBLANE = 8
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    block_m: int
+    block_n: int
+    block_k: int
+    source: str = "heuristic"          # "heuristic" | "sweep" | "cache"
+
+    def as_tuple(self) -> tuple:
+        return (self.block_m, self.block_n, self.block_k)
+
+    def same_blocks(self, other: "BlockConfig") -> bool:
+        return self.as_tuple() == other.as_tuple()
+
+
+_lock = threading.Lock()
+_memory: Dict[str, BlockConfig] = {}
+_disk_loaded_for: Optional[str] = None
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-max(v, 1) // mult) * mult
+
+
+def cache_path() -> str:
+    return os.environ.get(ENV_CACHE) or os.path.join(
+        os.path.expanduser("~"), ".cache", "fantastic4", "autotune.json")
+
+
+def cache_key(m: int, k: int, n: int, *, dtype: str, fused: bool,
+              backend: str, extra: str = "") -> str:
+    """``extra`` disambiguates problems that share (M, K, N) — e.g. a fused
+    stack's intermediate widths, which (M, K₀, N_last) alone cannot see."""
+    tail = f"|{extra}" if extra else ""
+    return f"{backend}|m{m}|k{k}|n{n}|{dtype}|fused{int(fused)}{tail}"
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process cache (tests; the JSON file is untouched)."""
+    global _disk_loaded_for
+    with _lock:
+        _memory.clear()
+        _disk_loaded_for = None
+
+
+def _load_disk_locked() -> None:
+    global _disk_loaded_for
+    path = cache_path()
+    if _disk_loaded_for == path:
+        return
+    _disk_loaded_for = path
+    if not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return
+    for key, v in raw.items():
+        if key not in _memory:
+            _memory[key] = BlockConfig(int(v["block_m"]), int(v["block_n"]),
+                                       int(v["block_k"]),
+                                       source=v.get("source", "cache"))
+
+
+def _save_disk_locked() -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {key: {"block_m": c.block_m, "block_n": c.block_n,
+                     "block_k": c.block_k, "source": c.source}
+               for key, c in sorted(_memory.items())}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+
+
+def heuristic_blocks(m: int, k: int, n: int, *, fused: bool = False,
+                     backend: Optional[str] = None) -> BlockConfig:
+    """Shape-clamped blocks, no timing.
+
+    The guiding costs: (a) never tile past the (tile-rounded) problem dims —
+    a 128-wide layer must not pay for a 256-wide block of padding; (b) on a
+    real TPU keep x-tile + packed-tile + decoded-W-tile + acc inside a
+    conservative VMEM slice; (c) in interpret mode grid steps are the cost,
+    so take whole (rounded) dims up to a cap.  Fused kernels tile only over
+    M (weights/activations are VMEM-resident), so block_n/block_k are the
+    rounded full dims.
+    """
+    backend = backend or jax.default_backend()
+    mp = _round_up(m, SUBLANE)
+    np_ = _round_up(n, LANE)
+    kp = _round_up(k, LANE)
+    if fused or backend != "tpu":
+        # one grid axis (fused) / interpreter (CPU): minimise grid steps.
+        return BlockConfig(min(mp, 256), min(np_, 1024), min(kp, 2048))
+    # TPU per-layer kernel: MXU-friendly tiles clamped to the problem.
+    bm = min(mp, 128)
+    bn = min(np_, 256)
+    bk = min(kp, 512)
+    # keep x(bm,bk)f32 + packed(bk/2,bn)u8 + W(bk,bn)f32 + acc(bm,bn)f32
+    # comfortably under a ~4 MiB working-set slice of VMEM.
+    def _bytes(bm, bn, bk):
+        return 4 * bm * bk + bk * bn // 2 + 4 * bk * bn + 4 * bm * bn
+    while _bytes(bm, bn, bk) > 4 << 20 and bk > LANE:
+        bk //= 2
+    while _bytes(bm, bn, bk) > 4 << 20 and bn > LANE:
+        bn //= 2
+    return BlockConfig(bm, bn, bk)
+
+
+def candidate_blocks(m: int, k: int, n: int, *, fused: bool = False
+                     ) -> Sequence[BlockConfig]:
+    """Candidate grid for the timed sweep (deduped, shape-clamped)."""
+    mp, np_, kp = _round_up(m, SUBLANE), _round_up(n, LANE), _round_up(k, LANE)
+    bms = sorted({min(mp, v) for v in (32, 64, 128, 256)})
+    if fused:
+        return [BlockConfig(bm, min(np_, 1024), min(kp, 2048), source="sweep")
+                for bm in bms]
+    bns = sorted({min(np_, v) for v in (128, 256, 512)})
+    bks = sorted({min(kp, v) for v in (128, 256, 512, 1024)})
+    return [BlockConfig(bm, bn, bk, source="sweep")
+            for bm in bms for bn in bns for bk in bks]
+
+
+def get_block_config(m: int, k: int, n: int, *,
+                     dtype: str = "float32", fused: bool = False,
+                     backend: Optional[str] = None,
+                     measure: Optional[Callable[[BlockConfig], float]] = None,
+                     candidates: Optional[Iterable[BlockConfig]] = None,
+                     extra: str = "",
+                     persist: bool = True) -> BlockConfig:
+    """Resolve blocks for one problem shape (cache → sweep → heuristic).
+
+    ``measure`` runs one candidate and returns seconds (``inf`` = candidate
+    failed to compile/run); when omitted — the interpret/CPU path — the
+    heuristic answers directly.  Results land in the memory cache and, when
+    ``persist``, the JSON cache, so a warm call never re-measures.
+
+    Callers running in interpret mode must pass ``backend="interpret"``:
+    keying those heuristic answers under the real backend would permanently
+    mask the timed sweep for the same shape on actual hardware.
+    """
+    backend = backend or jax.default_backend()
+    key = cache_key(m, k, n, dtype=dtype, fused=fused, backend=backend,
+                    extra=extra)
+    with _lock:
+        _load_disk_locked()
+        hit = _memory.get(key)
+    if hit is not None:
+        return hit
+    if measure is not None:
+        cands = list(candidates if candidates is not None
+                     else candidate_blocks(m, k, n, fused=fused))
+        timed = [(measure(c), i) for i, c in enumerate(cands)]
+        best_t, best_i = min(timed)
+        if best_t != float("inf"):
+            cfg = dataclasses.replace(cands[best_i], source="sweep")
+        else:
+            cfg = heuristic_blocks(m, k, n, fused=fused, backend=backend)
+    else:
+        cfg = heuristic_blocks(m, k, n, fused=fused, backend=backend)
+    with _lock:
+        _memory[key] = cfg
+        if persist:
+            try:
+                _save_disk_locked()
+            except OSError:
+                pass                      # read-only FS: memory cache only
+    return cfg

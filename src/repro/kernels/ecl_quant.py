@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import COMPILER_PARAMS
+
 
 def _kernel(w_ref, omega_ref, pen_ref, codes_ref, what_ref):
     w = w_ref[...].astype(jnp.float32)
@@ -84,7 +86,7 @@ def ecl_quant_pallas(w: jax.Array, omega: jax.Array, penalty: jax.Array,
             jax.ShapeDtypeStruct((rp, cp), jnp.uint8),
             jax.ShapeDtypeStruct((rp, cp), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(wp, omega2, pen2)

@@ -1,0 +1,201 @@
+"""Pallas TPU megakernel: a whole FantastIC4 MLP stack in one ``pallas_call``.
+
+The paper's hardware win (§V) is a *pipelined* datapath: activations never
+leave the chip between FC layers while the 4-bit weights stream in.  The
+per-layer kernel already fuses the epilogue, but chaining L ``pallas_call``s
+still round-trips every (M, N) activation through HBM L−1 times.  At 4
+bits/weight the paper-shaped stacks fit in VMEM whole (MLP-GSC, the largest,
+packs to ~0.4 MiB), so this kernel keeps the *activations* resident instead:
+
+    HBM                      VMEM (one grid step, batch tile i)
+    ────                     ──────────────────────────────────────────────
+    x[i·bm:(i+1)·bm, :] ───▶ act₀ ─┐
+    packed W₁ … W_L ───────▶ (all  │ decode Σωᵢ·Bᵢ → W_l, MXU matmul,
+    ω, α₁, b, α₂ per layer ─▶ L at │ epilogue ×α₁ +b ReLU ×α₂ — result
+                              once)│ written to the act scratch, read
+    out[i·bm:(i+1)·bm, :] ◀─ act_L ┘ back as the next layer's input
+
+Only the first input tile and the last output tile touch HBM per grid step;
+inter-layer activations exist solely as kernel values, which Pallas keeps
+on-chip by construction (kernel intermediates cannot spill to HBM), with
+the final activation parking in a ``(block_m, max_width)`` VMEM scratch
+before the single HBM store.  ``fused_mlp_vmem_bytes`` budgets that
+activation working set either way.  The grid is 1-D over batch tiles
+(weights use constant index maps, so they are fetched once and revisited).
+
+Layer dims are zero-padded to ``DIM_ALIGN`` multiples: zero *codes* decode
+to zero *weights* (code 0 has no set bit-planes), and padded epilogue
+columns carry α₁ = b = 0, so padding is exactly absorbed — layer l+1's
+padded K rows meet zero weights, and the final slice drops the rest.
+
+``fused_mlp_fits`` estimates the VMEM working set; callers fall back to the
+per-layer kernel when a stack exceeds the budget (e.g. a >VMEM embedding
+projection) — the software analogue of the paper's "fits the FPGA's on-chip
+SRAM" precondition.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import COMPILER_PARAMS
+
+# layer dims are padded to this multiple (f32 lane width) before entering
+# the kernel; keeps every in-kernel slice tile-aligned.
+DIM_ALIGN = 128
+# conservative per-core budget: 16 MiB VMEM minus pipelining headroom.
+VMEM_BUDGET_BYTES = 12 << 20
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-max(v, 1) // mult) * mult
+
+
+def padded_shapes(shapes: Sequence[Tuple[int, int]],
+                  dim_align: int = DIM_ALIGN) -> Tuple[Tuple[int, int], ...]:
+    return tuple((_round_up(k, dim_align), _round_up(n, dim_align))
+                 for k, n in shapes)
+
+
+def fused_mlp_vmem_bytes(shapes: Sequence[Tuple[int, int]],
+                         block_m: int = 128,
+                         dim_align: int = DIM_ALIGN) -> int:
+    """Working-set estimate for one grid step (bytes).
+
+    packed codes for all layers + the largest decoded W tile + the x tile,
+    activation scratch, output tile and epilogue vectors; ×2 on the
+    HBM-fetched operands for the pipeline's double buffering.
+    """
+    ps = padded_shapes(shapes, dim_align)
+    packed = sum(kp // 2 * np_ for kp, np_ in ps)          # uint8
+    epilogue = sum(2 * 4 * np_ + 4 * 4 + 4 for _, np_ in ps)
+    decoded = max(4 * kp * np_ for kp, np_ in ps)
+    max_w = max([ps[0][0]] + [np_ for _, np_ in ps])
+    x_tile = 4 * block_m * ps[0][0]
+    out_tile = 4 * block_m * ps[-1][1]
+    act = 4 * block_m * max_w
+    return 2 * (packed + epilogue + x_tile + out_tile) + decoded + act
+
+
+def fused_mlp_fits(shapes: Sequence[Tuple[int, int]], *,
+                   block_m: int = 128,
+                   budget_bytes: int = VMEM_BUDGET_BYTES,
+                   dim_align: int = DIM_ALIGN) -> bool:
+    """True when the whole stack's working set fits the VMEM budget."""
+    if not shapes:
+        return False
+    return fused_mlp_vmem_bytes(shapes, block_m, dim_align) <= budget_bytes
+
+
+def _decode_tile(packed: jax.Array, omega_ref) -> jax.Array:
+    """(kp//2, np) uint8 codes -> (kp, np) f32 W = Σ_i ω_i B_i."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    codes = jnp.stack([lo, hi], axis=1)
+    codes = codes.reshape(packed.shape[0] * 2, packed.shape[1])
+    w = jnp.zeros(codes.shape, jnp.float32)
+    for i in range(4):
+        bit = ((codes >> i) & 1).astype(jnp.float32)
+        w = w + omega_ref[0, i] * bit
+    return w
+
+
+def _kernel(*refs, activations: Tuple[Optional[str], ...]):
+    n_layers = len(activations)
+    x_ref = refs[0]
+    layer_refs = refs[1:1 + 5 * n_layers]
+    o_ref = refs[1 + 5 * n_layers]
+    act_ref = refs[2 + 5 * n_layers]          # (bm, max_width) VMEM scratch
+
+    cur = x_ref[...].astype(jnp.float32)
+    for l in range(n_layers):
+        packed_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref = \
+            layer_refs[5 * l:5 * l + 5]
+        w = _decode_tile(packed_ref[...], omega_ref)
+        y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
+        y = y * alpha1_ref[...] + bias_ref[...]
+        if activations[l] == "relu":
+            y = jnp.maximum(y, 0.0)
+        cur = y * alpha2_ref[0, 0]            # feeds the next layer's MXU op
+    # the last activation parks in the VMEM scratch before the single HBM
+    # store; every earlier one only ever existed as on-chip kernel values
+    # (Pallas intermediates cannot spill to HBM).
+    act_ref[:, :cur.shape[1]] = cur
+    o_ref[...] = act_ref[:, :cur.shape[1]].astype(o_ref.dtype)
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shapes", "activations", "out_dtype", "block_m",
+                     "interpret", "dim_align"))
+def fantastic4_fused_mlp_pallas(
+        x: jax.Array,
+        packed: Tuple[jax.Array, ...],
+        omega: Tuple[jax.Array, ...],
+        alpha1: Tuple[jax.Array, ...],
+        bias: Tuple[jax.Array, ...],
+        alpha2: Tuple[jax.Array, ...],
+        *, shapes: Tuple[Tuple[int, int], ...],
+        activations: Tuple[Optional[str], ...],
+        out_dtype=None, block_m: int = 128,
+        interpret: bool = False,
+        dim_align: int = DIM_ALIGN) -> jax.Array:
+    """x:(M, K₀) · per-layer packed codes -> (M, N_L) in one pallas_call.
+
+    ``shapes[l] = (K_l, N_l)`` are the *unpadded* layer dims (``K_{l+1} ==
+    N_l``); ``packed[l]`` is ``(ceil(K_l/2), N_l)`` uint8 row-pair codes.
+    """
+    n_layers = len(shapes)
+    assert n_layers >= 1
+    assert len(activations) == n_layers
+    m, k0 = x.shape
+    assert k0 == shapes[0][0], (x.shape, shapes)
+    for l in range(1, n_layers):
+        assert shapes[l][0] == shapes[l - 1][1], shapes
+    out_dtype = out_dtype or x.dtype
+
+    ps = padded_shapes(shapes, dim_align)
+    bm = min(block_m, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    xp = _pad2(x, mp, ps[0][0])
+
+    operands = [xp]
+    in_specs = [pl.BlockSpec((bm, ps[0][0]), lambda i: (i, 0))]
+    for l, ((kp, np_), (k, n)) in enumerate(zip(ps, shapes)):
+        operands += [
+            _pad2(packed[l], kp // 2, np_),
+            omega[l].reshape(1, 4).astype(jnp.float32),
+            _pad2(alpha1[l].reshape(1, -1).astype(jnp.float32), 1, np_),
+            _pad2(bias[l].reshape(1, -1).astype(jnp.float32), 1, np_),
+            alpha2[l].reshape(1, 1).astype(jnp.float32),
+        ]
+        in_specs += [
+            pl.BlockSpec((kp // 2, np_), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ]
+
+    n_last_p = ps[-1][1]
+    max_width = max([ps[0][0]] + [np_ for _, np_ in ps])
+    out = pl.pallas_call(
+        functools.partial(_kernel, activations=tuple(activations)),
+        grid=(mp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, n_last_p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n_last_p), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, max_width), jnp.float32)],
+        compiler_params=COMPILER_PARAMS(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :shapes[-1][1]]

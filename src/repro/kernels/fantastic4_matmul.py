@@ -16,6 +16,19 @@ Layouts / tiling:
   out     (M, N)     accumulated in an f32 VMEM scratch across the K grid.
 
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"), M/N parallel.
+
+Relation to the fused serving megakernel (fantastic4_fused_mlp.py): this
+kernel fuses *within* one layer, so a served L-layer stack still round-trips
+the (M, N) activation through HBM L−1 times:
+
+    per-layer:  HBM ─x─▶ [L₁] ─▶ HBM ─▶ [L₂] ─▶ HBM ─▶ … ─▶ [L_n] ─▶ HBM
+    fused:      HBM ─x─▶ [L₁ ▸ L₂ ▸ … ▸ L_n] ─▶ HBM   (acts in VMEM scratch)
+
+The megakernel is the default serving path whenever the whole stack's
+packed weights + activation scratch fit the VMEM budget (all paper MLPs
+do at 4 bits/weight); this kernel is the fallback for oversized layers and
+the building block for everything non-MLP.  Block sizes default to the
+shape-aware autotuner (autotune.py) via ops.fantastic4_matmul.
 """
 from __future__ import annotations
 
@@ -26,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import COMPILER_PARAMS
 
 
 def _kernel(x_ref, w_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref,
@@ -112,7 +127,7 @@ def fantastic4_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp, omega, alpha1, bias, alpha2)

@@ -5,21 +5,65 @@ they execute in ``interpret=True`` mode so every test validates the actual
 kernel body against the pure-jnp oracles in ``ref.py``. ``use_kernel=False``
 selects the oracle path (used by the models' default serving path on CPU,
 where interpret-mode would be needlessly slow for large layers).
+
+Block sizes left as ``None`` are resolved by the shape-aware autotuner
+(``autotune.py``): a timed candidate sweep on a real TPU backend, a pure
+heuristic in interpret/CPU mode, both behind a persistent JSON cache — so
+every entry point (models, launchers, benchmarks) runs the same tuned
+configuration instead of the old hard-coded 128/256/512 defaults.
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .ecl_quant import ecl_quant_pallas
+from .fantastic4_fused_mlp import (VMEM_BUDGET_BYTES,
+                                   fantastic4_fused_mlp_pallas,
+                                   fused_mlp_fits)
 from .fantastic4_matmul import fantastic4_matmul_pallas
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _timeit(fn, repeats: int = 3) -> float:
+    """Median wall-clock of ``fn()`` after one warm-up (compile) call."""
+    try:
+        jax.block_until_ready(fn())
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+    except Exception:
+        return float("inf")               # candidate failed to compile/run
+
+
+def _resolve_blocks(m: int, k: int, n: int, *, dtype, interpret: bool,
+                    block_m, block_n, block_k,
+                    measure=None) -> autotune.BlockConfig:
+    """Fill ``None`` blocks from the autotuner; explicit values win.
+
+    Interpret-mode answers are keyed under backend "interpret" so they
+    never shadow a real backend's timed sweep for the same shape.
+    """
+    if None not in (block_m, block_n, block_k):
+        return autotune.BlockConfig(block_m, block_n, block_k,
+                                    source="explicit")
+    cfg = autotune.get_block_config(
+        m, k, n, dtype=str(dtype), fused=False,
+        backend="interpret" if interpret else None,
+        measure=measure if not interpret else None)
+    return autotune.BlockConfig(block_m or cfg.block_m,
+                                block_n or cfg.block_n,
+                                block_k or cfg.block_k, source=cfg.source)
 
 
 def fantastic4_matmul(x: jax.Array, packed: jax.Array, omega: jax.Array,
@@ -30,12 +74,14 @@ def fantastic4_matmul(x: jax.Array, packed: jax.Array, omega: jax.Array,
                       out_dtype=None,
                       use_kernel: bool = True,
                       interpret: Optional[bool] = None,
-                      block_m: int = 128, block_n: int = 256,
-                      block_k: int = 512) -> jax.Array:
+                      block_m: Optional[int] = None,
+                      block_n: Optional[int] = None,
+                      block_k: Optional[int] = None) -> jax.Array:
     """Quantized linear y = epilogue(x @ decode(packed, omega)).
 
     x: (M, K); packed: (K//2, N) uint8 (row-pair packed); omega: (4,).
     bias/alpha1: (N,) or None; alpha2: scalar or None.
+    block_*: None -> autotuned per shape (see module docstring).
     """
     n = packed.shape[1]
     if not use_kernel:
@@ -46,11 +92,100 @@ def fantastic4_matmul(x: jax.Array, packed: jax.Array, omega: jax.Array,
     alpha1 = jnp.ones((n,), jnp.float32) if alpha1 is None else alpha1
     bias = jnp.zeros((n,), jnp.float32) if bias is None else bias
     alpha2 = jnp.ones((), jnp.float32) if alpha2 is None else jnp.asarray(alpha2)
+
+    def _measure(cfg: autotune.BlockConfig) -> float:
+        return _timeit(lambda: fantastic4_matmul_pallas(
+            x, packed, omega, alpha1, bias, alpha2,
+            activation=activation, out_dtype=out_dtype or x.dtype,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
+            interpret=interpret))
+
+    cfg = _resolve_blocks(x.shape[0], x.shape[1], n, dtype=x.dtype,
+                          interpret=interpret, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          measure=_measure)
     return fantastic4_matmul_pallas(
         x, packed, omega, alpha1, bias, alpha2,
         activation=activation, out_dtype=out_dtype or x.dtype,
-        block_m=block_m, block_n=block_n, block_k=block_k,
+        block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
         interpret=interpret)
+
+
+def fantastic4_mlp_chain(x: jax.Array, layers: Sequence[dict], *,
+                         use_kernel: bool = True,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Chained per-layer serving over a frozen pack's layer list (kernel or
+    oracle per ``use_kernel``) — the unfused path and the megakernel's
+    over-budget fallback."""
+    for layer in layers:
+        if layer["shape"][0] % 2:
+            # odd K: the pack carries one zero code row — mirror it on x
+            x = jnp.pad(x, ((0, 0), (0, 1)))
+        x = fantastic4_matmul(
+            x, layer["packed"], layer["omega"], bias=layer["bias"],
+            alpha1=layer["alpha1"], alpha2=layer["alpha2"],
+            activation=layer.get("activation"), use_kernel=use_kernel,
+            interpret=interpret)
+    return x
+
+
+def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
+                         use_kernel: bool = True,
+                         interpret: Optional[bool] = None,
+                         out_dtype=None,
+                         block_m: Optional[int] = None,
+                         vmem_budget_bytes: int = VMEM_BUDGET_BYTES
+                         ) -> jax.Array:
+    """Whole-stack serving: one megakernel launch instead of L.
+
+    ``layers`` is the frozen pack's layer list: each entry carries ``packed``
+    (ceil(K/2), N) uint8, ``omega`` (4,), ``alpha1``/``bias`` (N,),
+    ``alpha2`` scalar, ``shape`` (K, N) and ``activation``.  Falls back to
+    the chained per-layer kernel when the stack's VMEM working set exceeds
+    ``vmem_budget_bytes`` (see ``fantastic4_fused_mlp.fused_mlp_fits``).
+    """
+    shapes = tuple(tuple(l["shape"]) for l in layers)
+    activations = tuple(l.get("activation") for l in layers)
+    interpret = _default_interpret() if interpret is None else interpret
+    m, k0 = x.shape
+    n_last = shapes[-1][1]
+
+    def _measure(cfg: autotune.BlockConfig) -> float:
+        return _timeit(lambda: _call_fused(cfg.block_m))
+
+    def _call_fused(bm: int) -> jax.Array:
+        # NB: no jnp.asarray here — pack entries are already device arrays
+        # and per-array asarray dominates the wrapper's dispatch cost.
+        return fantastic4_fused_mlp_pallas(
+            x,
+            tuple(l["packed"] for l in layers),
+            tuple(l["omega"] for l in layers),
+            tuple(l["alpha1"] for l in layers),
+            tuple(l["bias"] for l in layers),
+            tuple(l["alpha2"] for l in layers),
+            shapes=shapes, activations=activations,
+            out_dtype=out_dtype or x.dtype, block_m=bm,
+            interpret=interpret)
+
+    # fits check first (conservatively at the largest candidate block_m):
+    # an over-budget stack must not pay for a fused-candidate sweep whose
+    # result would be thrown away.
+    fits = fused_mlp_fits(shapes, block_m=block_m or 256,
+                          budget_bytes=vmem_budget_bytes)
+    if use_kernel and fits and block_m is None:
+        cfg = autotune.get_block_config(
+            m, k0, n_last, dtype=str(x.dtype), fused=True,
+            backend="interpret" if interpret else None,
+            # (M, K₀, N_last) alone cannot distinguish two stacks with the
+            # same ends (MLP-GSC vs MLP-HR): key the hidden widths too.
+            extra="stack" + "x".join(str(n) for _, n in shapes),
+            measure=_measure if not interpret else None)
+        block_m = cfg.block_m
+    if not use_kernel or not fits:
+        y = fantastic4_mlp_chain(x, layers, use_kernel=use_kernel,
+                                 interpret=interpret)
+        return y.astype(out_dtype or y.dtype)
+    return _call_fused(block_m)
 
 
 def ecl_quant(w: jax.Array, omega: jax.Array, penalty: jax.Array,

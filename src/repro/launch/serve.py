@@ -8,6 +8,14 @@ Loads (or initialises) a model, freezes it to the packed-int4 serving form
 jitted prefill over the prompt batch and a jitted single-token decode loop.
 Requests are batched: the decode step advances every sequence in lockstep
 (continuous batching's inner loop; slot management would sit above this).
+
+Paper MLP archs (``--arch mlp-gsc | mlp-hr | lenet-300-100``) take the
+classification serving path instead: freeze to the packed-int4 pack and run
+the fused serving megakernel (one ``pallas_call`` for the whole stack,
+activations VMEM-resident; ``--no-fused`` selects the chained per-layer
+kernel).  Block sizes come from the shape-aware autotuner in both paths, so
+the launcher, models and benchmarks all exercise the same tuned
+configuration.
 """
 from __future__ import annotations
 
@@ -19,9 +27,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
+from ..configs.paper_mlps import MLPS
 from ..core import qat
 from ..nn import transformer as T
 from ..nn.module import QuantCtx
+
+
+def serve_mlp(args):
+    """Frozen paper-MLP serving: fused megakernel vs per-layer kernel."""
+    from ..models import mlp as M
+
+    cfg = MLPS[args.arch]
+    key = jax.random.PRNGKey(0)
+    params, bn = M.mlp_init(key, cfg)
+    qs = qat.build_qstate(params)
+    pack = M.freeze_mlp(params, qs, bn, lam=cfg.lam)
+    summ = M.pack_compression_summary(pack)
+    print(f"{cfg.name}: {len(pack['layers'])} layers frozen to "
+          f"{summ['compressed_bytes']} bytes "
+          f"({summ['compression_ratio']:.1f}x vs fp32), "
+          f"formats {summ['formats']}")
+
+    b = args.batch
+    x = jax.random.normal(key, (b, cfg.d_in), jnp.float32)
+
+    def _run():
+        return M.mlp_serve(pack, x, use_kernel=True, fused=args.fused)
+
+    y = jax.block_until_ready(_run())         # compile (+ autotune) warm-up
+    t0 = time.time()
+    iters = max(args.iters, 1)
+    for _ in range(iters):
+        y = _run()
+    jax.block_until_ready(y)
+    dt = (time.time() - t0) / iters
+    mode = "fused megakernel" if args.fused else "per-layer kernel"
+    print(f"{mode}: {dt*1e3:.2f} ms/batch  "
+          f"({b/max(dt, 1e-12):.0f} samples/s, batch {b})")
+    print("logits[0]:", np.asarray(y[0]).round(3).tolist())
+    return y
 
 
 def main(argv=None):
@@ -31,7 +75,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=10,
+                    help="timed iterations (MLP serving path)")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="MLP path: whole-stack megakernel vs per-layer")
     args = ap.parse_args(argv)
+
+    if args.arch in MLPS:
+        return serve_mlp(args)
 
     cfg = get_config(args.arch)
     if args.smoke:

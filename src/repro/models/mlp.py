@@ -14,10 +14,28 @@ This is the direct reproduction path.  Three phases:
 
   and encode each layer's codes in its *cheapest* format (CSR / bitmask /
   dense4 — contribution 4, Table II's CR column).
-* **serve** — run the packed codes through the ``fantastic4_matmul`` Pallas
-  kernel (VMEM bit-plane decode + MXU matmul + fused epilogue) or the
-  pure-jnp oracle; optional int8 activation mode mirrors the paper's 8-bit
-  activation FPGA configuration.
+* **serve** — run the packed codes through the Pallas kernels (VMEM
+  bit-plane decode + MXU matmul + fused epilogue) or the pure-jnp oracle;
+  optional int8 activation mode mirrors the paper's 8-bit activation FPGA
+  configuration.
+
+  The default kernel path (``mlp_serve(..., fused=True)``) is the
+  *megakernel*: the entire stack executes inside one ``pallas_call`` with
+  activations resident in VMEM between layers (kernel values cannot spill
+  to HBM) — the software analogue of the paper's pipelined float unit,
+  where only the input batch tile and the final logits touch HBM:
+
+      HBM:   x tile ─▶ │ L₁ ─▶ L₂ ─▶ … ─▶ L_n │ ─▶ logits tile
+      VMEM:            │  all packed weights,  │
+                       │  act scratch (bm, W)  │
+
+  Per-layer inside the bar: decode ``W = Σ ωᵢBᵢ`` from the 4-bit codes,
+  MXU matmul, ×α₁ +b ReLU ×α₂ — writing into the activation scratch that
+  the next layer reads.  When the stack's working set exceeds the VMEM
+  budget (``kernels.fantastic4_fused_mlp.fused_mlp_fits``) the call falls
+  back to the chained per-layer kernel, which round-trips activations
+  through HBM but handles arbitrarily large layers.  Block sizes come from
+  the shape-aware autotuner (``kernels.autotune``) unless pinned.
 """
 from __future__ import annotations
 
@@ -149,15 +167,24 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
 
 
 def mlp_serve(pack: dict, x: jax.Array, *, use_kernel: bool = True,
-              interpret: Optional[bool] = None) -> jax.Array:
-    """End-to-end inference on the frozen pack (kernel or oracle path)."""
-    for layer in pack["layers"]:
-        x = kops.fantastic4_matmul(
-            x.astype(jnp.float32), layer["packed"], layer["omega"],
-            bias=layer["bias"], alpha1=layer["alpha1"],
-            alpha2=layer["alpha2"], activation=layer["activation"],
-            use_kernel=use_kernel, interpret=interpret)
-    return x
+              fused: bool = True, interpret: Optional[bool] = None,
+              block_m: Optional[int] = None) -> jax.Array:
+    """End-to-end inference on the frozen pack.
+
+    ``use_kernel=True, fused=True`` (default) runs the whole stack as one
+    megakernel launch with VMEM-resident activations (falling back to the
+    per-layer kernel when it exceeds the VMEM budget); ``fused=False``
+    chains the per-layer kernel; ``use_kernel=False`` chains the pure-jnp
+    oracle.  ``block_m=None`` defers to the autotuner.
+    """
+    x = x.astype(jnp.float32)
+    if use_kernel and fused:
+        return kops.fantastic4_mlp_fused(
+            x, pack["layers"], use_kernel=True, interpret=interpret,
+            block_m=block_m)
+    return kops.fantastic4_mlp_chain(x, pack["layers"],
+                                     use_kernel=use_kernel,
+                                     interpret=interpret)
 
 
 def pack_compression_summary(pack: dict) -> dict:

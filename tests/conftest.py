@@ -7,6 +7,17 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.fixture(autouse=True)
+def _isolate_autotune_cache(tmp_path, monkeypatch):
+    """Keep every test's block-autotuner resolution away from the user's
+    persistent ~/.cache JSON (kernel paths consult it implicitly)."""
+    from repro.kernels import autotune
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    yield
+    autotune.clear_memory_cache()
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N fake host devices.
 

@@ -1,6 +1,9 @@
 """ECL assignment properties: optimality, entropy/sparsity vs lambda."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bitplanes as bp, ecl

@@ -1,6 +1,9 @@
 """CSR / bitmask / dense4 codecs: lossless roundtrip (property), size
 accounting, per-layer format selection (paper contribution 4)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import formats

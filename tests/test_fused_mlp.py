@@ -1,0 +1,137 @@
+"""Fused serving megakernel vs the chained per-layer oracle.
+
+Every paper stack (MLP-GSC, MLP-HR, LeNet-300-100 — the latter has
+odd/unpadded dims: 784 in, 300/100/10 out), batch=1 and odd batches, plus
+the VMEM-budget fallback and a trained freeze->serve end-to-end check.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_mlps import MLPS
+from repro.core import bitplanes as bp
+from repro.kernels import ops, ref
+from repro.kernels.fantastic4_fused_mlp import (fused_mlp_fits,
+                                                fused_mlp_vmem_bytes)
+from repro.models import mlp as M
+
+# (K, N) chains: the three paper stacks + a deliberately odd/unpadded one.
+STACKS = {name: (cfg.d_in,) + tuple(cfg.features) for name, cfg in MLPS.items()}
+STACKS["odd"] = (33, 130, 72, 7)
+
+
+def _rand_pack(dims, seed=0, scale=None):
+    """Synthetic frozen pack with BN-realistic magnitudes (activations stay
+    O(1), as freeze_mlp's folded constants make them)."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        codes = rng.integers(0, 16, size=(k + (k % 2), n)).astype(np.uint8)
+        if k % 2:
+            codes[-1] = 0
+        s = scale if scale is not None else 1.0 / np.sqrt(k)
+        layers.append({
+            "packed": bp.pack_codes_rows(jnp.asarray(codes)),
+            "omega": jnp.asarray(rng.normal(size=4) * s, jnp.float32),
+            "alpha1": jnp.asarray(rng.normal(size=n) * 0.5, jnp.float32),
+            "bias": jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32),
+            "alpha2": jnp.asarray(np.float32(rng.uniform(0.5, 1.5))),
+            "shape": (k, n),
+            "activation": "relu" if i < len(dims) - 2 else None,
+        })
+    return {"layers": layers, "act_bits": None}
+
+
+def _oracle(pack, x):
+    for l in pack["layers"]:
+        if l["shape"][0] % 2:
+            # odd K: the pack carries one zero code row — mirror it on x
+            x = jnp.pad(x, ((0, 0), (0, 1)))
+        x = ref.fantastic4_matmul_ref(
+            x, l["packed"], l["omega"], bias=l["bias"], alpha1=l["alpha1"],
+            alpha2=l["alpha2"], activation=l["activation"],
+            out_dtype=jnp.float32)
+    return x
+
+
+@pytest.mark.parametrize("stack", sorted(STACKS))
+@pytest.mark.parametrize("batch", [1, 5, 64])
+def test_fused_matches_per_layer_oracle(stack, batch):
+    dims = STACKS[stack]
+    # deterministic seed (hash() varies per interpreter run); rtol covers
+    # the occasional pack whose activations drift past O(1), where f32
+    # accumulation-order noise exceeds any fixed absolute gate.
+    pack = _rand_pack(dims, seed=sorted(STACKS).index(stack) * 100 + batch)
+    rng = np.random.default_rng(batch)
+    x = jnp.asarray(rng.normal(size=(batch, dims[0])), jnp.float32)
+    y_fused = M.mlp_serve(pack, x, use_kernel=True, fused=True,
+                          interpret=True)
+    y_ref = _oracle(pack, x)
+    assert y_fused.shape == (batch, dims[-1])
+    np.testing.assert_allclose(y_fused, y_ref, atol=1e-3, rtol=1e-5)
+
+
+def test_fused_matches_per_layer_kernel_path():
+    dims = STACKS["mlp-hr"]
+    pack = _rand_pack(dims, seed=7)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, dims[0])),
+                    jnp.float32)
+    y_fused = M.mlp_serve(pack, x, fused=True, interpret=True)
+    y_chain = M.mlp_serve(pack, x, fused=False, interpret=True,
+                          block_m=None)
+    np.testing.assert_allclose(y_fused, y_chain, atol=1e-3, rtol=1e-4)
+
+
+def test_odd_k_serves_on_every_path():
+    """Odd-K packs work on fused, per-layer-kernel AND oracle mlp_serve
+    paths (each mirrors the pack's zero code row with a zero x column)."""
+    pack = _rand_pack(STACKS["odd"], seed=11)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(3, 33)),
+                    jnp.float32)
+    y_ref = _oracle(pack, x)
+    for kwargs in ({"fused": True}, {"fused": False},
+                   {"use_kernel": False}):
+        y = M.mlp_serve(pack, x, interpret=True, **kwargs)
+        np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-4,
+                                   err_msg=str(kwargs))
+
+
+def test_vmem_fallback_triggers_and_matches():
+    """A 1-byte budget forces the per-layer fallback; result is unchanged."""
+    dims = STACKS["odd"]
+    pack = _rand_pack(dims, seed=3)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(4, dims[0])),
+                    jnp.float32)
+    shapes = tuple(l["shape"] for l in pack["layers"])
+    assert fused_mlp_fits(shapes)
+    assert not fused_mlp_fits(shapes, budget_bytes=1)
+    y_fb = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                    vmem_budget_bytes=1)
+    y_ref = _oracle(pack, x)
+    np.testing.assert_allclose(y_fb, y_ref, atol=1e-3, rtol=1e-4)
+
+
+def test_vmem_estimate_scales_with_stack():
+    small = fused_mlp_vmem_bytes(((128, 128),))
+    big = fused_mlp_vmem_bytes(((512, 512), (512, 512), (512, 256)))
+    assert 0 < small < big
+    # all paper stacks fit the default budget at 4 bits/weight
+    for dims in STACKS.values():
+        shapes = tuple(zip(dims[:-1], dims[1:]))
+        assert fused_mlp_fits(shapes), dims
+
+
+def test_frozen_pack_serves_fused():
+    """freeze_mlp -> mlp_serve(fused) == oracle serve on a real pack."""
+    import jax
+    from repro.core import qat
+    cfg = MLPS["lenet-300-100"]
+    params, bn = M.mlp_init(jax.random.PRNGKey(0), cfg)
+    qs = qat.build_qstate(params)
+    pack = M.freeze_mlp(params, qs, bn, lam=0.02)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(9, cfg.d_in)),
+                    jnp.float32)
+    y_fused = M.mlp_serve(pack, x, use_kernel=True, fused=True,
+                          interpret=True)
+    y_oracle = M.mlp_serve(pack, x, use_kernel=False)
+    assert float(jnp.max(jnp.abs(y_fused - y_oracle))) < 1e-3

@@ -1,6 +1,9 @@
 """Entropy-coded (canonical Huffman) format: lossless roundtrip, size ≈
 entropy, and selection dominance in the low-entropy regime EC4T creates."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ecl, formats
