@@ -34,6 +34,23 @@ REPO_ROOT = os.path.dirname(os.path.dirname(RESULTS))
 ROOT_JSON = os.path.join(REPO_ROOT, "BENCH_fused_serving.json")
 
 
+def merge_root_json(section: dict) -> None:
+    """Read-merge-write ``section`` into the repo-root perf-trajectory
+    file: this bench owns the fp32 ``rows``, bench_int8_fused owns
+    ``int8_rows``, and either may run alone (``--only ...``)."""
+    merged = {}
+    if os.path.exists(ROOT_JSON):
+        try:
+            with open(ROOT_JSON) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged.update(section)
+    with open(ROOT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"wrote {ROOT_JSON}")
+
+
 def _rand_pack(cfg, seed=0):
     """Synthetic frozen pack at BN-realistic magnitudes (no training — the
     benchmark measures the serving path, not EC4T)."""
@@ -111,9 +128,7 @@ def run(fast: bool = False):
                "fused_not_slower_at_64": all(
                    r["speedup"] >= 0.95 for r in rows if r["batch"] == 64)}
     save("fused_serving", payload)
-    with open(ROOT_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {ROOT_JSON}")
+    merge_root_json(payload)
     return payload
 
 

@@ -1,0 +1,111 @@
+"""int8 serving datapath: fp32-fused vs int8-per-layer vs int8-fused.
+
+The paper's FPGA engine (§V, §VI-C) runs the whole MLP with 8-bit
+inter-layer activations and never spills them off-chip.  PR 1 fused the
+fp32 path; this benchmark tracks the int8 analogue for each paper stack and
+batch in {1, 16, 64, 256}:
+
+* ``fp32_fused_ms``  — ``mlp_serve(fused=True)``: the PR-1 megakernel.
+* ``int8_layer_ms``  — ``mlp_serve_int8(fused=False)``: L launches, every
+  quantized activation round-trips HBM.
+* ``int8_fused_ms``  — ``mlp_serve_int8(fused=True)``: one launch, the
+  int8 re-quantization happens in VMEM between resident layers.
+
+All paths run the actual Pallas kernel bodies (interpret mode off-TPU) with
+autotuned blocks.  A bit-exactness gate (int8 fused == int8 per-layer, the
+§VI-C contract) guards every row.
+
+Extends the repo-root ``BENCH_fused_serving.json`` (written by
+bench_fused_serving) with an ``int8_rows`` section so the cross-PR perf
+trajectory covers both datapaths; also writes
+results/bench/int8_fused.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fused_serving import (BATCHES, _rand_pack,
+                                            merge_root_json)
+from benchmarks.common import save
+from repro.configs.paper_mlps import MLP_GSC, MLP_HR
+from repro.models import mlp as M
+
+
+def _best_of(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())               # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def run(fast: bool = False):
+    repeats = 5 if fast else 15
+    rows = []
+    for cfg in (MLP_GSC, MLP_HR):
+        pack = _rand_pack(cfg)
+        calib = M.calibrate_act_scales(
+            pack, jnp.asarray(np.random.default_rng(0).normal(
+                size=(64, cfg.d_in)), jnp.float32))
+        for batch in BATCHES:
+            rng = np.random.default_rng(batch)
+            x = jnp.asarray(rng.normal(size=(batch, cfg.d_in)), jnp.float32)
+
+            y_fused = M.mlp_serve_int8(pack, calib, x, fused=True)
+            y_layer = M.mlp_serve_int8(pack, calib, x, fused=False)
+            # §VI-C contract: the fused int8 datapath reproduces the
+            # per-layer chain exactly (shared scale-folding arithmetic).
+            # Bitwise holds when the per-layer kernel accumulates K in one
+            # block — always true in interpret/CPU mode; a TPU block_k
+            # split of a wide layer can move a sum by one ulp and flip a
+            # quantization boundary, so there the gate is relative.
+            bit_exact = bool(np.array_equal(np.asarray(y_fused),
+                                            np.asarray(y_layer)))
+            if jax.default_backend() == "tpu":
+                np.testing.assert_allclose(y_fused, y_layer,
+                                           rtol=1e-3, atol=1e-3)
+            else:
+                assert bit_exact, (cfg.name, batch)
+
+            t_f32 = _best_of(lambda: M.mlp_serve(pack, x, fused=True),
+                             repeats)
+            t_i8l = _best_of(lambda: M.mlp_serve_int8(pack, calib, x,
+                                                      fused=False), repeats)
+            t_i8f = _best_of(lambda: M.mlp_serve_int8(pack, calib, x,
+                                                      fused=True), repeats)
+            row = {"model": cfg.name, "batch": batch,
+                   "fp32_fused_ms": t_f32 * 1e3,
+                   "int8_layer_ms": t_i8l * 1e3,
+                   "int8_fused_ms": t_i8f * 1e3,
+                   "int8_fused_speedup_vs_layer": t_i8l / max(t_i8f, 1e-12),
+                   "bit_exact_vs_per_layer": bit_exact}
+            rows.append(row)
+            print(f"{cfg.name:12s} b={batch:<4d} fp32-fused "
+                  f"{row['fp32_fused_ms']:8.2f} ms  int8-layer "
+                  f"{row['int8_layer_ms']:8.2f} ms  int8-fused "
+                  f"{row['int8_fused_ms']:8.2f} ms  "
+                  f"({row['int8_fused_speedup_vs_layer']:.2f}x vs layer)",
+                  flush=True)
+
+    summary = {
+        "backend": jax.default_backend(),
+        "batches": list(BATCHES),
+        "int8_rows": rows,
+        "int8_fused_not_slower_at_16plus": all(
+            r["int8_fused_speedup_vs_layer"] >= 0.95
+            for r in rows if r["batch"] >= 16),
+    }
+    save("int8_fused", summary)
+    # merge into the repo-root perf-trajectory file alongside the fp32 rows
+    merge_root_json(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

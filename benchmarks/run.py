@@ -10,6 +10,9 @@ serving_roofline      Tables VI-VIII analogue (from dry-run artifacts)
 fused_serving         §V pipeline analogue (megakernel vs per-layer
                       wall-clock; also writes BENCH_fused_serving.json at
                       the repo root for cross-PR perf tracking)
+int8_fused            §VI-C analogue (int8 inter-layer activations:
+                      fp32-fused vs int8-per-layer vs int8-fused; extends
+                      BENCH_fused_serving.json with int8_rows)
 """
 from __future__ import annotations
 
@@ -28,7 +31,8 @@ def main(argv=None):
 
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
-                            bench_pareto, bench_serving_roofline)
+                            bench_int8_fused, bench_pareto,
+                            bench_serving_roofline)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -36,6 +40,7 @@ def main(argv=None):
         "fig11_entropy_bytes": lambda: bench_entropy_energy.run(steps=steps),
         "serving_roofline": lambda: bench_serving_roofline.run(),
         "fused_serving": lambda: bench_fused_serving.run(fast=args.fast),
+        "int8_fused": lambda: bench_int8_fused.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 gate + fast benchmark refresh, with a wall-clock budget.
+#
+#   scripts/ci.sh                 # full: pytest then benchmarks (budgeted)
+#   CI_BENCH_BUDGET_S=300 scripts/ci.sh
+#   CI_SKIP_BENCH=1 scripts/ci.sh # tests only
+#
+# The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode and
+# rewrites BENCH_fused_serving.json at the repo root (fp32 rows + int8_rows),
+# so every PR leaves the cross-PR perf trajectory current.  A benchmark
+# overrun (budget exceeded) fails CI loudly rather than silently shipping a
+# stale perf file.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${CI_SKIP_BENCH:-0}" != "1" ]]; then
+    budget="${CI_BENCH_BUDGET_S:-1200}"
+    echo "== benchmarks (--fast, budget ${budget}s) =="
+    timeout --signal=INT "$budget" python -m benchmarks.run --fast
+fi
+
+echo "CI OK"

@@ -1,0 +1,53 @@
+"""Version-compat shims for JAX API drift.
+
+Same pattern as ``kernels.COMPILER_PARAMS`` (pltpu.TPUCompilerParams →
+pltpu.CompilerParams): resolve the symbol once at import, adapt keyword
+renames, and have every call site import from here instead of touching the
+moved API directly.
+
+* ``shard_map`` — newer JAX exposes ``jax.shard_map`` with a ``check_vma``
+  kwarg; older releases only have ``jax.experimental.shard_map.shard_map``
+  with the same knob spelled ``check_rep``.
+* ``cost_analysis`` — ``compiled.cost_analysis()`` returns a dict on newer
+  JAX but a one-element list of dicts (per program) on older releases.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+if hasattr(jax, "shard_map"):                       # newer JAX
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                               # e.g. 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` across the rename; ``check_vma`` maps onto the
+    installed spelling (``check_rep`` on older releases).
+
+    On old releases an unspecified check defaults to ``check_rep=False``:
+    the replication-rewrite transpose there chokes on symbolic-Zero
+    cotangents (``'Zero' object has no attribute 'reshape'``) whenever a
+    shard-mapped function has an output the loss doesn't use (e.g. a MoE
+    aux scalar); the unrewritten path differentiates fine.
+    """
+    if check_vma is None:
+        kwargs = {"check_rep": False} if _CHECK_KW == "check_rep" else {}
+    else:
+        kwargs = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def cost_analysis(compiled: Any) -> dict:
+    """``compiled.cost_analysis()`` normalised to a flat dict (possibly
+    empty — callers use ``.get`` with defaults either way)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}

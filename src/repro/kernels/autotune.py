@@ -5,7 +5,13 @@ The seed kernels ran every shape with hard-coded ``block_m=128 / block_n=256
 batches (1…256) leave most of those tiles as padding.  This module picks
 per-shape blocks instead, in three tiers:
 
-1. **memory cache** — a dict keyed by ``(backend, M, K, N, dtype, fused)``.
+1. **memory cache** — a dict keyed by
+   ``(backend, M, K, N, dtype, fused, act_dtype)``; ``act_dtype`` is the
+   serving path's inter-layer activation dtype (the fused kernel's int8
+   mode has a different body — extra quantize/cast per layer — so its best
+   block must not shadow the fp32 sweep for the same shape).  Cache files
+   written before this field existed are migrated on load: their keys are
+   re-interpreted as ``act_dtype=float32`` entries.
 2. **persistent JSON cache** — survives processes, so the timed sweep runs
    once per shape per host.  Location: ``$FANTASTIC4_AUTOTUNE_CACHE`` or
    ``~/.cache/fantastic4/autotune.json``.
@@ -68,11 +74,28 @@ def cache_path() -> str:
 
 
 def cache_key(m: int, k: int, n: int, *, dtype: str, fused: bool,
-              backend: str, extra: str = "") -> str:
+              backend: str, act_dtype: str = "float32",
+              extra: str = "") -> str:
     """``extra`` disambiguates problems that share (M, K, N) — e.g. a fused
     stack's intermediate widths, which (M, K₀, N_last) alone cannot see."""
     tail = f"|{extra}" if extra else ""
-    return f"{backend}|m{m}|k{k}|n{n}|{dtype}|fused{int(fused)}{tail}"
+    return (f"{backend}|m{m}|k{k}|n{n}|{dtype}|fused{int(fused)}"
+            f"|act{act_dtype}{tail}")
+
+
+def _migrate_key(key: str) -> str:
+    """Rewrite a pre-act_dtype cache key to the current format.
+
+    Old keys read ``backend|m..|k..|n..|dtype|fusedX[|extra]``; the act
+    segment slots in after ``fusedX`` as ``actfloat32`` (the only act dtype
+    that existed then).  Current-format keys pass through unchanged."""
+    segs = key.split("|")
+    for i, seg in enumerate(segs):
+        if seg.startswith("fused") and seg[5:].isdigit():
+            if i + 1 < len(segs) and segs[i + 1].startswith("act"):
+                return key
+            return "|".join(segs[:i + 1] + ["actfloat32"] + segs[i + 1:])
+    return key
 
 
 def clear_memory_cache() -> None:
@@ -97,10 +120,15 @@ def _load_disk_locked() -> None:
     except (OSError, ValueError):
         return
     for key, v in raw.items():
+        try:
+            cfg = BlockConfig(int(v["block_m"]), int(v["block_n"]),
+                              int(v["block_k"]),
+                              source=v.get("source", "cache"))
+        except (KeyError, TypeError, ValueError):
+            continue                     # stale/corrupt entry: ignore
+        key = _migrate_key(key)          # pre-act_dtype files -> actfloat32
         if key not in _memory:
-            _memory[key] = BlockConfig(int(v["block_m"]), int(v["block_n"]),
-                                       int(v["block_k"]),
-                                       source=v.get("source", "cache"))
+            _memory[key] = cfg
 
 
 def _save_disk_locked() -> None:
@@ -168,6 +196,7 @@ def get_block_config(m: int, k: int, n: int, *,
                      backend: Optional[str] = None,
                      measure: Optional[Callable[[BlockConfig], float]] = None,
                      candidates: Optional[Iterable[BlockConfig]] = None,
+                     act_dtype: str = "float32",
                      extra: str = "",
                      persist: bool = True) -> BlockConfig:
     """Resolve blocks for one problem shape (cache → sweep → heuristic).
@@ -183,7 +212,7 @@ def get_block_config(m: int, k: int, n: int, *,
     """
     backend = backend or jax.default_backend()
     key = cache_key(m, k, n, dtype=dtype, fused=fused, backend=backend,
-                    extra=extra)
+                    act_dtype=act_dtype, extra=extra)
     with _lock:
         _load_disk_locked()
         hit = _memory.get(key)

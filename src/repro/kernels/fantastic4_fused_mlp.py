@@ -11,7 +11,7 @@ packs to ~0.4 MiB), so this kernel keeps the *activations* resident instead:
     ────                     ──────────────────────────────────────────────
     x[i·bm:(i+1)·bm, :] ───▶ act₀ ─┐
     packed W₁ … W_L ───────▶ (all  │ decode Σωᵢ·Bᵢ → W_l, MXU matmul,
-    ω, α₁, b, α₂ per layer ─▶ L at │ epilogue ×α₁ +b ReLU ×α₂ — result
+    ω, α₁, b, scale per l ──▶ L at │ epilogue ×α₁ +b ReLU ×scale — result
                               once)│ written to the act scratch, read
     out[i·bm:(i+1)·bm, :] ◀─ act_L ┘ back as the next layer's input
 
@@ -23,10 +23,31 @@ before the single HBM store.  ``fused_mlp_vmem_bytes`` budgets that
 activation working set either way.  The grid is 1-D over batch tiles
 (weights use constant index maps, so they are fetched once and revisited).
 
+Two orthogonal variants on top of the PR-1 fp32 path:
+
+* ``act_dtype="int8"`` — the paper's §VI-C FPGA configuration (8-bit
+  inter-layer activations).  Each non-final layer's epilogue emits
+  ``round(y / s_l)`` clipped to [−127, 127] and *cast to int8* before the
+  value feeds the next layer's MXU op; the caller folds ``s_{l−1}`` into
+  layer l's α₁ exactly as the per-layer ``mlp_serve_int8`` chain does, so
+  the two paths agree on the quantized grid bit for bit.  The per-layer
+  ``scale`` operand carries the quantization scale s_l instead of α₂
+  (which the int8 serving path never uses; the final layer returns raw
+  float logits).
+* ``n_halves=2`` — double-buffered batch tile, emulating the paper's
+  pipelined row processing: the (bm, ·) tile splits into two row groups
+  that traverse the stack on a skewed schedule (group 1 runs layer l while
+  group 0 runs layer l+1), so decode/MXU work on consecutive layers can
+  overlap instead of serialising per layer.  Row groups are independent
+  (each output row depends only on its input row), so results are
+  unchanged.
+
 Layer dims are zero-padded to ``DIM_ALIGN`` multiples: zero *codes* decode
 to zero *weights* (code 0 has no set bit-planes), and padded epilogue
 columns carry α₁ = b = 0, so padding is exactly absorbed — layer l+1's
-padded K rows meet zero weights, and the final slice drops the rest.
+padded K rows meet zero weights, and the final slice drops the rest.  In
+int8 mode padded columns quantize to round(0/s) = 0, preserving the
+invariant.
 
 ``fused_mlp_fits`` estimates the VMEM working set; callers fall back to the
 per-layer kernel when a stack exceeds the budget (e.g. a >VMEM embedding
@@ -64,32 +85,45 @@ def padded_shapes(shapes: Sequence[Tuple[int, int]],
 
 def fused_mlp_vmem_bytes(shapes: Sequence[Tuple[int, int]],
                          block_m: int = 128,
-                         dim_align: int = DIM_ALIGN) -> int:
+                         dim_align: int = DIM_ALIGN,
+                         act_dtype: str = "float32",
+                         double_buffer: bool = False) -> int:
     """Working-set estimate for one grid step (bytes).
 
     packed codes for all layers + the largest decoded W tile + the x tile,
     activation scratch, output tile and epilogue vectors; ×2 on the
-    HBM-fetched operands for the pipeline's double buffering.
+    HBM-fetched operands for the pipeline's double buffering.  int8 mode
+    adds the quantized copy of the activation tile (1 byte/elem) that each
+    epilogue materialises before the next layer's MXU op; the
+    double-buffered schedule keeps up to two decoded W tiles live (layer l
+    serves row group 1 one tick after group 0).
     """
     ps = padded_shapes(shapes, dim_align)
     packed = sum(kp // 2 * np_ for kp, np_ in ps)          # uint8
     epilogue = sum(2 * 4 * np_ + 4 * 4 + 4 for _, np_ in ps)
     decoded = max(4 * kp * np_ for kp, np_ in ps)
+    if double_buffer:
+        decoded *= 2
     max_w = max([ps[0][0]] + [np_ for _, np_ in ps])
     x_tile = 4 * block_m * ps[0][0]
     out_tile = 4 * block_m * ps[-1][1]
     act = 4 * block_m * max_w
+    if act_dtype == "int8":
+        act += block_m * max_w
     return 2 * (packed + epilogue + x_tile + out_tile) + decoded + act
 
 
 def fused_mlp_fits(shapes: Sequence[Tuple[int, int]], *,
                    block_m: int = 128,
                    budget_bytes: int = VMEM_BUDGET_BYTES,
-                   dim_align: int = DIM_ALIGN) -> bool:
+                   dim_align: int = DIM_ALIGN,
+                   act_dtype: str = "float32",
+                   double_buffer: bool = False) -> bool:
     """True when the whole stack's working set fits the VMEM budget."""
     if not shapes:
         return False
-    return fused_mlp_vmem_bytes(shapes, block_m, dim_align) <= budget_bytes
+    return fused_mlp_vmem_bytes(shapes, block_m, dim_align,
+                                act_dtype, double_buffer) <= budget_bytes
 
 
 def _decode_tile(packed: jax.Array, omega_ref) -> jax.Array:
@@ -105,28 +139,67 @@ def _decode_tile(packed: jax.Array, omega_ref) -> jax.Array:
     return w
 
 
-def _kernel(*refs, activations: Tuple[Optional[str], ...]):
+def _kernel(*refs, activations: Tuple[Optional[str], ...],
+            act_dtype: str, n_halves: int):
     n_layers = len(activations)
     x_ref = refs[0]
     layer_refs = refs[1:1 + 5 * n_layers]
     o_ref = refs[1 + 5 * n_layers]
     act_ref = refs[2 + 5 * n_layers]          # (bm, max_width) VMEM scratch
+    int8_acts = act_dtype == "int8"
 
-    cur = x_ref[...].astype(jnp.float32)
-    for l in range(n_layers):
-        packed_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref = \
+    # Each layer's weight tile is decoded once and shared across row
+    # groups: in the skewed schedule layer l serves group 0 at tick l and
+    # group 1 at tick l+1, so the decoded tile stays live for exactly one
+    # extra tick (≤2 decoded tiles concurrently) instead of being decoded
+    # per group.  The python-level dict is static — the compiler sees one
+    # _decode_tile per layer either way.
+    decoded = {}
+
+    def apply_layer(cur: jax.Array, l: int, last_use: bool) -> jax.Array:
+        packed_ref, omega_ref, alpha1_ref, bias_ref, scale_ref = \
             layer_refs[5 * l:5 * l + 5]
-        w = _decode_tile(packed_ref[...], omega_ref)
+        if l not in decoded:
+            decoded[l] = _decode_tile(packed_ref[...], omega_ref)
+        w = decoded[l]
+        if last_use:
+            del decoded[l]
         y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
         y = y * alpha1_ref[...] + bias_ref[...]
         if activations[l] == "relu":
             y = jnp.maximum(y, 0.0)
-        cur = y * alpha2_ref[0, 0]            # feeds the next layer's MXU op
+        if int8_acts:
+            if l < n_layers - 1:
+                # §VI-C re-quantization: the activation leaves the layer as
+                # a true int8 value (the float32 round-trip is exact on the
+                # [-127, 127] grid, and mirrors the per-layer chain's math
+                # term for term so both paths agree bitwise).
+                q = jnp.clip(jnp.round(y / scale_ref[0, 0]), -127.0, 127.0)
+                y = q.astype(jnp.int8).astype(jnp.float32)
+        else:
+            y = y * scale_ref[0, 0]           # fp32 epilogue: ×α₂
+        return y
+
+    x = x_ref[...].astype(jnp.float32)
+    bm = x.shape[0]
+    rows = bm // n_halves
+    halves = [x[h * rows:(h + 1) * rows, :] for h in range(n_halves)]
+    # Skewed schedule (trivial for n_halves=1): at tick t, row group h runs
+    # layer t−h, so group 1 streams through layer l while group 0 is already
+    # on layer l+1 — the paper's pipelined rows, §V.
+    for t in range(n_layers + n_halves - 1):
+        for h in range(n_halves):
+            l = t - h
+            if 0 <= l < n_layers:
+                halves[h] = apply_layer(halves[h], l,
+                                        last_use=h == n_halves - 1)
     # the last activation parks in the VMEM scratch before the single HBM
     # store; every earlier one only ever existed as on-chip kernel values
     # (Pallas intermediates cannot spill to HBM).
-    act_ref[:, :cur.shape[1]] = cur
-    o_ref[...] = act_ref[:, :cur.shape[1]].astype(o_ref.dtype)
+    width = halves[0].shape[1]
+    for h in range(n_halves):
+        act_ref[h * rows:(h + 1) * rows, :width] = halves[h]
+    o_ref[...] = act_ref[:, :width].astype(o_ref.dtype)
 
 
 def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
@@ -136,24 +209,36 @@ def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("shapes", "activations", "out_dtype", "block_m",
-                     "interpret", "dim_align"))
+                     "interpret", "dim_align", "act_dtype", "double_buffer"))
 def fantastic4_fused_mlp_pallas(
         x: jax.Array,
         packed: Tuple[jax.Array, ...],
         omega: Tuple[jax.Array, ...],
         alpha1: Tuple[jax.Array, ...],
         bias: Tuple[jax.Array, ...],
-        alpha2: Tuple[jax.Array, ...],
+        scale: Tuple[jax.Array, ...],
         *, shapes: Tuple[Tuple[int, int], ...],
         activations: Tuple[Optional[str], ...],
         out_dtype=None, block_m: int = 128,
         interpret: bool = False,
-        dim_align: int = DIM_ALIGN) -> jax.Array:
+        dim_align: int = DIM_ALIGN,
+        act_dtype: str = "float32",
+        double_buffer: bool = False) -> jax.Array:
     """x:(M, K₀) · per-layer packed codes -> (M, N_L) in one pallas_call.
 
     ``shapes[l] = (K_l, N_l)`` are the *unpadded* layer dims (``K_{l+1} ==
     N_l``); ``packed[l]`` is ``(ceil(K_l/2), N_l)`` uint8 row-pair codes.
+
+    ``scale[l]`` is a scalar whose meaning depends on ``act_dtype``: the
+    fp32 epilogue's α₂ multiplier, or the int8 mode's activation
+    quantization scale s_l (the final layer's entry is ignored there — the
+    logits stay float).  In int8 mode the caller must already have folded
+    s_{l−1} into ``alpha1[l]``, exactly as the per-layer serving chain
+    does.  ``double_buffer`` splits the batch tile into two row groups on
+    the skewed schedule described in the module docstring (it needs two
+    full sublane groups, so it engages only when the tile has ≥16 rows).
     """
+    assert act_dtype in ("float32", "int8"), act_dtype
     n_layers = len(shapes)
     assert n_layers >= 1
     assert len(activations) == n_layers
@@ -165,6 +250,8 @@ def fantastic4_fused_mlp_pallas(
 
     ps = padded_shapes(shapes, dim_align)
     bm = min(block_m, _round_up(m, 8))
+    # two row groups need two whole f32 sublane tiles
+    n_halves = 2 if double_buffer and bm % 16 == 0 else 1
     mp = _round_up(m, bm)
     xp = _pad2(x, mp, ps[0][0])
 
@@ -176,7 +263,7 @@ def fantastic4_fused_mlp_pallas(
             omega[l].reshape(1, 4).astype(jnp.float32),
             _pad2(alpha1[l].reshape(1, -1).astype(jnp.float32), 1, np_),
             _pad2(bias[l].reshape(1, -1).astype(jnp.float32), 1, np_),
-            alpha2[l].reshape(1, 1).astype(jnp.float32),
+            scale[l].reshape(1, 1).astype(jnp.float32),
         ]
         in_specs += [
             pl.BlockSpec((kp // 2, np_), lambda i: (0, 0)),
@@ -189,7 +276,8 @@ def fantastic4_fused_mlp_pallas(
     n_last_p = ps[-1][1]
     max_width = max([ps[0][0]] + [np_ for _, np_ in ps])
     out = pl.pallas_call(
-        functools.partial(_kernel, activations=tuple(activations)),
+        functools.partial(_kernel, activations=tuple(activations),
+                          act_dtype=act_dtype, n_halves=n_halves),
         grid=(mp // bm,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, n_last_p), lambda i: (i, 0)),

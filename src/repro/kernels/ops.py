@@ -129,11 +129,80 @@ def fantastic4_mlp_chain(x: jax.Array, layers: Sequence[dict], *,
     return x
 
 
+def fantastic4_mlp_chain_int8(x: jax.Array, layers: Sequence[dict],
+                              act_scales: Sequence[float], *,
+                              use_kernel: bool = True,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Per-layer int8-activation serving chain (paper §VI-C).
+
+    Layer i emits ``round(y/s_i)`` clipped to int8; layer i+1 folds s_i
+    into its alpha1.  This is both ``mlp_serve_int8``'s unfused path and
+    the int8 megakernel's over-budget fallback — one implementation, so
+    the fused kernel's bit-exactness contract has a single ground truth.
+    """
+    n = len(layers)
+    xq = x.astype(jnp.float32)
+    in_scale = 1.0
+    for i, layer in enumerate(layers):
+        if layer["shape"][0] % 2:
+            # odd K: the pack carries one zero code row — mirror it on x
+            xq = jnp.pad(xq, ((0, 0), (0, 1)))
+        alpha1 = layer["alpha1"] * in_scale      # de-quantize inputs
+        y = fantastic4_matmul(
+            xq, layer["packed"], layer["omega"], bias=layer["bias"],
+            alpha1=alpha1, alpha2=None, activation=layer.get("activation"),
+            use_kernel=use_kernel, interpret=interpret)
+        if i < n - 1:
+            s = act_scales[i]
+            xq = jnp.clip(jnp.round(y / s), -127, 127)
+            xq = xq.astype(jnp.int8).astype(jnp.float32)
+            in_scale = s
+        else:
+            xq = y
+    return xq
+
+
+# folded int8 serving operands, memoized per (layers, act_scales) identity:
+# re-folding alpha1·s and L scalar conversions on every call is exactly the
+# per-call wrapper dispatch cost the megakernel path avoids for the pack
+# arrays (see the NB in _call_fused).  Values keep strong refs to the keyed
+# objects, so their id()s cannot be recycled while the entry lives; a
+# frozen pack's arrays are never mutated in place.
+_INT8_FOLD_CACHE: dict = {}
+_INT8_FOLD_CACHE_MAX = 32
+
+
+def _int8_folded_operands(layers: Sequence[dict],
+                          act_scales: Sequence[float]) -> tuple:
+    key = (id(layers), id(act_scales))
+    hit = _INT8_FOLD_CACHE.get(key)
+    if hit is not None and hit[0] is layers and hit[1] is act_scales:
+        return hit[2], hit[3]
+    # fold s_{l-1} into alpha1_l — same expression as the per-layer chain
+    # (fantastic4_mlp_chain_int8), so the arrays are bitwise identical on
+    # both paths; the per-layer scale operand carries s_l (final layer:
+    # sentinel 1.0, logits stay float).
+    alpha1s = tuple(
+        l["alpha1"] * (1.0 if i == 0 else act_scales[i - 1])
+        for i, l in enumerate(layers))
+    scales = tuple(
+        jnp.asarray(act_scales[i] if i < len(layers) - 1 else 1.0,
+                    jnp.float32)
+        for i in range(len(layers)))
+    if len(_INT8_FOLD_CACHE) >= _INT8_FOLD_CACHE_MAX:
+        _INT8_FOLD_CACHE.pop(next(iter(_INT8_FOLD_CACHE)))
+    _INT8_FOLD_CACHE[key] = (layers, act_scales, alpha1s, scales)
+    return alpha1s, scales
+
+
 def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
                          use_kernel: bool = True,
                          interpret: Optional[bool] = None,
                          out_dtype=None,
                          block_m: Optional[int] = None,
+                         act_dtype: str = "float32",
+                         act_scales: Optional[Sequence[float]] = None,
+                         double_buffer: bool = False,
                          vmem_budget_bytes: int = VMEM_BUDGET_BYTES
                          ) -> jax.Array:
     """Whole-stack serving: one megakernel launch instead of L.
@@ -143,12 +212,34 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
     ``alpha2`` scalar, ``shape`` (K, N) and ``activation``.  Falls back to
     the chained per-layer kernel when the stack's VMEM working set exceeds
     ``vmem_budget_bytes`` (see ``fantastic4_fused_mlp.fused_mlp_fits``).
+
+    ``act_dtype="int8"`` runs the paper's §VI-C configuration end-to-end
+    inside the kernel: inter-layer activations are re-quantized to int8 in
+    VMEM (``act_scales``, one scale per layer boundary, from
+    ``calibrate_act_scales``), with each layer's alpha1 absorbing the
+    previous scale — folded here exactly as the per-layer chain folds it,
+    so fused and chained int8 agree on the quantized grid bit for bit
+    whenever the per-layer kernel accumulates K in a single block (always
+    true in interpret/CPU mode, where the heuristic takes whole dims; a
+    TPU block_k split of a wide layer can move a sum by one ulp and flip
+    a quantization boundary, leaving grid-level-but-not-bitwise
+    agreement).  ``double_buffer`` enables the two-row-group pipelined
+    variant.
     """
     shapes = tuple(tuple(l["shape"]) for l in layers)
     activations = tuple(l.get("activation") for l in layers)
     interpret = _default_interpret() if interpret is None else interpret
     m, k0 = x.shape
     n_last = shapes[-1][1]
+
+    if act_dtype == "int8":
+        if act_scales is None or len(act_scales) < len(layers) - 1:
+            raise ValueError("act_dtype='int8' needs act_scales with one "
+                             "entry per layer boundary")
+        alpha1s, scales = _int8_folded_operands(layers, act_scales)
+    else:
+        alpha1s = tuple(l["alpha1"] for l in layers)
+        scales = tuple(l["alpha2"] for l in layers)
 
     def _measure(cfg: autotune.BlockConfig) -> float:
         return _timeit(lambda: _call_fused(cfg.block_m))
@@ -160,30 +251,38 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
             x,
             tuple(l["packed"] for l in layers),
             tuple(l["omega"] for l in layers),
-            tuple(l["alpha1"] for l in layers),
+            alpha1s,
             tuple(l["bias"] for l in layers),
-            tuple(l["alpha2"] for l in layers),
+            scales,
             shapes=shapes, activations=activations,
             out_dtype=out_dtype or x.dtype, block_m=bm,
-            interpret=interpret)
+            interpret=interpret, act_dtype=act_dtype,
+            double_buffer=double_buffer)
 
     # fits check first (conservatively at the largest candidate block_m):
     # an over-budget stack must not pay for a fused-candidate sweep whose
     # result would be thrown away.
     fits = fused_mlp_fits(shapes, block_m=block_m or 256,
-                          budget_bytes=vmem_budget_bytes)
+                          budget_bytes=vmem_budget_bytes,
+                          act_dtype=act_dtype, double_buffer=double_buffer)
     if use_kernel and fits and block_m is None:
         cfg = autotune.get_block_config(
             m, k0, n_last, dtype=str(x.dtype), fused=True,
             backend="interpret" if interpret else None,
+            act_dtype=act_dtype,
             # (M, K₀, N_last) alone cannot distinguish two stacks with the
             # same ends (MLP-GSC vs MLP-HR): key the hidden widths too.
             extra="stack" + "x".join(str(n) for _, n in shapes),
             measure=_measure if not interpret else None)
         block_m = cfg.block_m
     if not use_kernel or not fits:
-        y = fantastic4_mlp_chain(x, layers, use_kernel=use_kernel,
-                                 interpret=interpret)
+        if act_dtype == "int8":
+            y = fantastic4_mlp_chain_int8(x, layers, act_scales,
+                                          use_kernel=use_kernel,
+                                          interpret=interpret)
+        else:
+            y = fantastic4_mlp_chain(x, layers, use_kernel=use_kernel,
+                                     interpret=interpret)
         return y.astype(out_dtype or y.dtype)
     return _call_fused(block_m)
 

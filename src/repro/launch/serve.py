@@ -13,9 +13,12 @@ Paper MLP archs (``--arch mlp-gsc | mlp-hr | lenet-300-100``) take the
 classification serving path instead: freeze to the packed-int4 pack and run
 the fused serving megakernel (one ``pallas_call`` for the whole stack,
 activations VMEM-resident; ``--no-fused`` selects the chained per-layer
-kernel).  Block sizes come from the shape-aware autotuner in both paths, so
-the launcher, models and benchmarks all exercise the same tuned
-configuration.
+kernel).  ``--int8`` serves the paper's §VI-C configuration — 8-bit
+inter-layer activations re-quantized inside the megakernel (calibration on
+a synthetic batch), still one launch per batch; ``--double-buffer`` adds
+the pipelined two-row-group variant.  Block sizes come from the
+shape-aware autotuner in both paths, so the launcher, models and
+benchmarks all exercise the same tuned configuration.
 """
 from __future__ import annotations
 
@@ -51,8 +54,16 @@ def serve_mlp(args):
     b = args.batch
     x = jax.random.normal(key, (b, cfg.d_in), jnp.float32)
 
-    def _run():
-        return M.mlp_serve(pack, x, use_kernel=True, fused=args.fused)
+    if args.int8:
+        calib = M.calibrate_act_scales(pack, x)
+
+        def _run():
+            return M.mlp_serve_int8(pack, calib, x, fused=args.fused,
+                                    double_buffer=args.double_buffer)
+    else:
+        def _run():
+            return M.mlp_serve(pack, x, use_kernel=True, fused=args.fused,
+                               double_buffer=args.double_buffer)
 
     y = jax.block_until_ready(_run())         # compile (+ autotune) warm-up
     t0 = time.time()
@@ -62,6 +73,17 @@ def serve_mlp(args):
     jax.block_until_ready(y)
     dt = (time.time() - t0) / iters
     mode = "fused megakernel" if args.fused else "per-layer kernel"
+    if args.int8:
+        mode += " (int8 activations)"
+    if args.double_buffer:
+        # only the fused megakernel has the pipelined variant, and it
+        # needs two full sublane groups per batch tile — don't label a
+        # run that silently ran single-buffered.
+        if args.fused and b >= 16:
+            mode += " (double-buffered)"
+        else:
+            print("note: --double-buffer ignored (needs --fused and a "
+                  "batch tile of >=16 rows)")
     print(f"{mode}: {dt*1e3:.2f} ms/batch  "
           f"({b/max(dt, 1e-12):.0f} samples/s, batch {b})")
     print("logits[0]:", np.asarray(y[0]).round(3).tolist())
@@ -80,6 +102,10 @@ def main(argv=None):
     ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="MLP path: whole-stack megakernel vs per-layer")
+    ap.add_argument("--int8", action="store_true",
+                    help="MLP path: int8 inter-layer activations (§VI-C)")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="MLP path: pipelined two-row-group megakernel")
     args = ap.parse_args(argv)
 
     if args.arch in MLPS:

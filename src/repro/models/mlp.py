@@ -168,20 +168,22 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
 
 def mlp_serve(pack: dict, x: jax.Array, *, use_kernel: bool = True,
               fused: bool = True, interpret: Optional[bool] = None,
-              block_m: Optional[int] = None) -> jax.Array:
+              block_m: Optional[int] = None,
+              double_buffer: bool = False) -> jax.Array:
     """End-to-end inference on the frozen pack.
 
     ``use_kernel=True, fused=True`` (default) runs the whole stack as one
     megakernel launch with VMEM-resident activations (falling back to the
     per-layer kernel when it exceeds the VMEM budget); ``fused=False``
     chains the per-layer kernel; ``use_kernel=False`` chains the pure-jnp
-    oracle.  ``block_m=None`` defers to the autotuner.
+    oracle.  ``block_m=None`` defers to the autotuner; ``double_buffer``
+    selects the megakernel's pipelined two-row-group variant.
     """
     x = x.astype(jnp.float32)
     if use_kernel and fused:
         return kops.fantastic4_mlp_fused(
             x, pack["layers"], use_kernel=True, interpret=interpret,
-            block_m=block_m)
+            block_m=block_m, double_buffer=double_buffer)
     return kops.fantastic4_mlp_chain(x, pack["layers"],
                                      use_kernel=use_kernel,
                                      interpret=interpret)
@@ -219,6 +221,9 @@ def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
     scales = []
     x = x_calib.astype(jnp.float32)
     for layer in pack["layers"]:
+        if layer["shape"][0] % 2:
+            # odd K: the pack carries one zero code row — mirror it on x
+            x = jnp.pad(x, ((0, 0), (0, 1)))
         y = kops.fantastic4_matmul(
             x, layer["packed"], layer["omega"], bias=layer["bias"],
             alpha1=layer["alpha1"], alpha2=None,
@@ -230,28 +235,36 @@ def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
 
 
 def mlp_serve_int8(pack: dict, calib: dict, x: jax.Array, *,
-                   use_kernel: bool = False,
-                   interpret: Optional[bool] = None) -> jax.Array:
+                   use_kernel: bool = True,
+                   fused: bool = True,
+                   interpret: Optional[bool] = None,
+                   block_m: Optional[int] = None,
+                   double_buffer: bool = False) -> jax.Array:
     """Serving with int8 inter-layer activations (paper §VI-C: 8-bit
     activations, 16-bit basis weights, fp scaling).
 
     Layer i emits round(y/s_i) clipped to int8; layer i+1 folds s_i into
     its alpha1 — the FantastIC4 ACM datapath never sees floats between
     layers except through the two alpha multipliers, exactly the §V
-    pipeline.  The final layer returns float logits."""
+    pipeline.  The final layer returns float logits.
+
+    ``use_kernel=True, fused=True`` (default) runs the whole int8 datapath
+    inside the megakernel — the activations are re-quantized to int8 in
+    VMEM and never touch HBM between layers, the full §V/§VI-C engine —
+    falling back to the per-layer chain past the VMEM budget.  The fused
+    and chained paths share the scale-folding arithmetic term for term and
+    agree bit-for-bit whenever the per-layer kernel takes K in one block
+    (always the case in interpret/CPU mode; a TPU block_k split of a wide
+    layer can flip a quantization boundary by one ulp — see
+    ``ops.fantastic4_mlp_fused``).
+    """
     scales = calib["act_scales"]
-    n = len(pack["layers"])
-    xq = x.astype(jnp.float32)
-    in_scale = 1.0
-    for i, layer in enumerate(pack["layers"]):
-        alpha1 = layer["alpha1"] * in_scale      # de-quantize inputs
-        y = kops.fantastic4_matmul(
-            xq, layer["packed"], layer["omega"], bias=layer["bias"],
-            alpha1=alpha1, alpha2=None, activation=layer["activation"],
-            use_kernel=use_kernel, interpret=interpret)
-        if i < n - 1:
-            xq = jnp.clip(jnp.round(y / scales[i]), -127, 127)
-            in_scale = scales[i]
-        else:
-            xq = y
-    return xq
+    x = x.astype(jnp.float32)
+    if use_kernel and fused:
+        return kops.fantastic4_mlp_fused(
+            x, pack["layers"], use_kernel=True, interpret=interpret,
+            block_m=block_m, act_dtype="int8", act_scales=scales,
+            double_buffer=double_buffer)
+    return kops.fantastic4_mlp_chain_int8(
+        x, pack["layers"], scales, use_kernel=use_kernel,
+        interpret=interpret)

@@ -93,6 +93,85 @@ def test_interpret_mode_does_not_poison_backend_key(tuner_cache):
     assert swept.source == "sweep"
 
 
+def test_act_dtype_distinguishes_entries(tuner_cache):
+    """The int8 fused kernel has a different body (per-layer quantize);
+    its tuned blocks must not share a slot with the fp32 sweep."""
+    a = autotune.cache_key(64, 512, 12, dtype="float32", fused=True,
+                           backend="tpu", act_dtype="float32")
+    b = autotune.cache_key(64, 512, 12, dtype="float32", fused=True,
+                           backend="tpu", act_dtype="int8")
+    assert a != b
+    autotune.get_block_config(64, 512, 12, dtype="float32", fused=True,
+                              backend="tpu", act_dtype="float32")
+    autotune.get_block_config(64, 512, 12, dtype="float32", fused=True,
+                              backend="tpu", act_dtype="int8")
+    raw = json.loads(tuner_cache.read_text())
+    assert len(raw) == 2
+
+
+def test_stale_pre_act_dtype_cache_is_migrated(tuner_cache):
+    """A PR-1-era JSON (keys without the act segment) must load cleanly:
+    its entries resurface under act_dtype=float32 instead of crashing or
+    being re-swept."""
+    old_key = "tpu|m64|k512|n256|float32|fused0"
+    old_fused = "tpu|m64|k512|n12|float32|fused1|stack512x256x12"
+    tuner_cache.write_text(json.dumps({
+        old_key: {"block_m": 32, "block_n": 128, "block_k": 256,
+                  "source": "sweep"},
+        old_fused: {"block_m": 64, "block_n": 1024, "block_k": 2048,
+                    "source": "sweep"},
+        "corrupt-entry": {"nope": 1},          # ignored, not fatal
+    }))
+    autotune.clear_memory_cache()
+    measured = []
+    cfg = autotune.get_block_config(64, 512, 256, dtype="float32",
+                                    fused=False, backend="tpu",
+                                    measure=lambda c: measured.append(c)
+                                    or 1.0)
+    assert not measured, "migrated entry must hit, not re-sweep"
+    assert cfg.as_tuple() == (32, 128, 256)
+    cfg2 = autotune.get_block_config(64, 512, 12, dtype="float32",
+                                     fused=True, backend="tpu",
+                                     extra="stack512x256x12",
+                                     measure=lambda c: measured.append(c)
+                                     or 1.0)
+    assert not measured
+    assert cfg2.as_tuple() == (64, 1024, 2048)
+    # int8 lookups for the same shape/backend do NOT inherit the migrated
+    # fp32 entry: the sweep must run afresh
+    int8_measured = []
+    int8_cfg = autotune.get_block_config(
+        64, 512, 12, dtype="float32", fused=True, backend="tpu",
+        act_dtype="int8", extra="stack512x256x12",
+        measure=lambda c: int8_measured.append(c) or 1.0)
+    assert int8_measured, "int8 key must not hit the migrated fp32 entry"
+    assert int8_cfg.source == "sweep"
+
+
+def test_migrate_key_roundtrip():
+    new = autotune.cache_key(8, 16, 32, dtype="float32", fused=True,
+                             backend="cpu", act_dtype="int8", extra="e")
+    assert autotune._migrate_key(new) == new       # current format: no-op
+    old = "cpu|m8|k16|n32|float32|fused1|e"
+    assert autotune._migrate_key(old) == \
+        "cpu|m8|k16|n32|float32|fused1|actfloat32|e"
+
+
+def test_interpret_mode_act_dtype_keys_do_not_mask_backend(tuner_cache):
+    """Interpret-mode int8 answers stay under backend="interpret" — the
+    real backend's int8 sweep must still run later."""
+    autotune.get_block_config(64, 512, 12, dtype="float32", fused=True,
+                              backend="interpret", act_dtype="int8")
+    measured = []
+    swept = autotune.get_block_config(64, 512, 12, dtype="float32",
+                                      fused=True, backend="tpu",
+                                      act_dtype="int8",
+                                      measure=lambda c: measured.append(c)
+                                      or 1.0)
+    assert measured, "tpu int8 key must still sweep"
+    assert swept.source == "sweep"
+
+
 def test_heuristic_clamps_to_problem_dims():
     cfg = autotune.heuristic_blocks(1, 784, 12, backend="tpu")
     assert cfg.block_m == 8               # batch 1 -> one f32 sublane tile

@@ -42,3 +42,19 @@ def test_int8_kernel_matches_oracle():
     y_k = M.mlp_serve_int8(pack, calib, x[:8], use_kernel=True,
                            interpret=True)
     np.testing.assert_allclose(y_k, y_o, atol=1e-2, rtol=1e-2)
+
+
+def test_int8_fused_bit_exact_with_per_layer_on_trained_pack():
+    """The megakernel's int8 datapath == the per-layer chain, bitwise, on a
+    real frozen pack (synthetic-pack coverage lives in
+    test_serving_parity)."""
+    pack, x = _frozen_pack()
+    calib = M.calibrate_act_scales(pack, x)
+    y_fused = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True)
+    y_layer = M.mlp_serve_int8(pack, calib, x, use_kernel=True,
+                               fused=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_layer))
+    # double-buffered variant is the same datapath on a skewed schedule
+    y_db = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True,
+                            double_buffer=True)
+    np.testing.assert_array_equal(np.asarray(y_db), np.asarray(y_fused))

@@ -60,6 +60,37 @@ def test_ec4t_training_learns_and_compresses():
     np.testing.assert_allclose(y_serve, y_eval, atol=1e-2, rtol=1e-2)
 
 
+def test_freeze_mlp_odd_k_int8_fused_regression():
+    """freeze_mlp's odd-K zero-row padding survives the int8 fused route.
+
+    PR 1 only exercised the fp32 paths on odd-K packs; the int8 megakernel
+    must absorb the padded code row the same way (zero codes decode to
+    zero weights; the padded x column is zero), and stay bit-exact with
+    the per-layer int8 chain.  Odd d_in AND odd hidden widths.
+    """
+    cfg = MLPConfig("odd-mlp", (65, 33, 5), d_in=17)
+    params, bn = M.mlp_init(jax.random.PRNGKey(3), cfg)
+    qs = qat.build_qstate(params)
+    x = jnp.asarray(np.random.default_rng(8).normal(
+        size=(12, cfg.d_in)), jnp.float32)
+    ctx = QuantCtx(quant=True, lam=0.02, compute_dtype=jnp.float32)
+    _, bn = M.mlp_apply(params, qs, bn, x, ctx, train=True)
+    pack = M.freeze_mlp(params, qs, bn, lam=0.02)
+    assert all(l["shape"][0] % 2 for l in pack["layers"])   # all odd K
+
+    calib = M.calibrate_act_scales(pack, x)
+    i8_fused = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True)
+    i8_layer = M.mlp_serve_int8(pack, calib, x, use_kernel=True,
+                                fused=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i8_fused), np.asarray(i8_layer))
+
+    # int8 still tracks the fp32 serving path on the frozen pack
+    y32 = M.mlp_serve(pack, x, use_kernel=False)
+    rel = float(jnp.linalg.norm(i8_fused - y32)
+                / max(float(jnp.linalg.norm(y32)), 1e-6))
+    assert rel < 0.05, rel
+
+
 def test_lambda_sweep_pareto():
     """Fig. 9 mechanism: increasing lambda increases sparsity monotonically
     while accuracy degrades gracefully (stays above chance here)."""

@@ -1,0 +1,156 @@
+"""Cross-path serving parity harness (PR 2 tentpole test).
+
+Five serving paths exist for a frozen pack and they must not drift:
+
+    fp32:  oracle chain │ per-layer kernel │ fused megakernel
+    int8:  oracle chain │ per-layer kernel │ fused megakernel
+
+plus the double-buffered megakernel variant and the VMEM-overflow fallback
+of each fused path.  Contracts checked here:
+
+* fp32 paths agree with the pure-jnp oracle to close tolerance (f32
+  accumulation noise only).
+* int8 *kernel* paths agree **exactly**: fused == per-layer chain ==
+  double-buffered == over-budget fallback, bit for bit — they share the
+  scale-folding arithmetic term for term (the §VI-C contract; asserted
+  with ``assert_array_equal``).  The int8 oracle is a different fp
+  implementation, so a quantization-boundary flip is possible there; it
+  gets a relative gate instead.
+* the fallback path engages (budget=1) and changes nothing.
+
+The sweep is hypothesis-driven when hypothesis is installed; a
+deterministic seeded sweep over random widths (odd-K included) and batches
+{1, 16, 256} always runs, so the harness is tier-1 either way.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_mlps import MLPS
+from repro.core import bitplanes as bp
+from repro.kernels import ops
+from repro.models import mlp as M
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _rand_pack(dims, seed=0):
+    """Synthetic frozen pack at BN-realistic magnitudes (activations O(1),
+    as freeze_mlp's folded constants make them)."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        codes = rng.integers(0, 16, size=(k + (k % 2), n)).astype(np.uint8)
+        if k % 2:
+            codes[-1] = 0         # pack invariant: odd K pads a zero row
+        layers.append({
+            "packed": bp.pack_codes_rows(jnp.asarray(codes)),
+            "omega": jnp.asarray(rng.normal(size=4) / np.sqrt(k), jnp.float32),
+            "alpha1": jnp.asarray(rng.normal(size=n) * 0.5, jnp.float32),
+            "bias": jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32),
+            "alpha2": jnp.asarray(np.float32(1.0)),
+            "shape": (k, n),
+            "activation": "relu" if i < len(dims) - 2 else None,
+        })
+    return {"layers": layers, "act_bits": None}
+
+
+def _check_parity(dims, batch, seed):
+    pack = _rand_pack(dims, seed=seed)
+    x = jnp.asarray(np.random.default_rng(seed + 1).normal(
+        size=(batch, dims[0])), jnp.float32)
+    calib = M.calibrate_act_scales(pack, x)
+
+    # ---- fp32 paths vs oracle
+    y_oracle = M.mlp_serve(pack, x, use_kernel=False)
+    y_layer = M.mlp_serve(pack, x, fused=False, interpret=True)
+    y_fused = M.mlp_serve(pack, x, fused=True, interpret=True)
+    y_db = M.mlp_serve(pack, x, fused=True, interpret=True,
+                       double_buffer=True)
+    for name, y in (("per-layer", y_layer), ("fused", y_fused),
+                    ("double-buffer", y_db)):
+        np.testing.assert_allclose(
+            y, y_oracle, atol=1e-3, rtol=1e-4,
+            err_msg=f"fp32 {name} drifted from oracle ({dims}, b={batch})")
+
+    # ---- int8 kernel paths: exact agreement on the quantized datapath
+    i8_layer = M.mlp_serve_int8(pack, calib, x, use_kernel=True,
+                                fused=False, interpret=True)
+    i8_fused = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True)
+    i8_db = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True,
+                             double_buffer=True)
+    np.testing.assert_array_equal(
+        np.asarray(i8_fused), np.asarray(i8_layer),
+        err_msg=f"int8 fused != per-layer chain ({dims}, b={batch})")
+    np.testing.assert_array_equal(
+        np.asarray(i8_db), np.asarray(i8_fused),
+        err_msg=f"int8 double-buffer != fused ({dims}, b={batch})")
+
+    # ---- int8 oracle: different fp implementation — relative gate only
+    # (a quantization-boundary flip is legitimate there)
+    i8_oracle = M.mlp_serve_int8(pack, calib, x, use_kernel=False)
+    denom = max(float(jnp.max(jnp.abs(i8_oracle))), 1e-6)
+    rel = float(jnp.max(jnp.abs(i8_oracle - i8_layer))) / denom
+    assert rel < 5e-3, (dims, batch, rel)
+
+    # ---- int8 tracks fp32 (the paper's 'without harming prediction')
+    rel8 = float(jnp.linalg.norm(i8_fused - y_oracle)
+                 / max(float(jnp.linalg.norm(y_oracle)), 1e-6))
+    assert rel8 < 0.1, (dims, batch, rel8)
+
+    # ---- VMEM-overflow fallback: engages and changes nothing
+    fb32 = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                    vmem_budget_bytes=1)
+    np.testing.assert_array_equal(np.asarray(fb32), np.asarray(y_layer))
+    fb8 = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                   act_dtype="int8",
+                                   act_scales=calib["act_scales"],
+                                   vmem_budget_bytes=1)
+    np.testing.assert_array_equal(np.asarray(fb8), np.asarray(i8_layer))
+
+
+# deterministic hypothesis-style sweep: random widths (odd-K included in
+# half the stacks by construction), always present in tier-1.
+_SWEEP_RNG = np.random.default_rng(20260730)
+_RANDOM_STACKS = []
+for _case in range(4):
+    _depth = int(_SWEEP_RNG.integers(2, 5))
+    _dims = tuple(int(v) for v in _SWEEP_RNG.integers(5, 160, size=_depth + 1))
+    _RANDOM_STACKS.append(_dims)
+_RANDOM_STACKS.append((33, 129, 71, 7))       # guaranteed odd-K everywhere
+
+
+@pytest.mark.parametrize("dims", _RANDOM_STACKS,
+                         ids=["x".join(map(str, d)) for d in _RANDOM_STACKS])
+@pytest.mark.parametrize("batch", [1, 16])
+def test_parity_random_widths(dims, batch):
+    _check_parity(dims, batch, seed=sum(dims) + batch)
+
+
+@pytest.mark.parametrize("stack", sorted(MLPS))
+@pytest.mark.parametrize("batch", [1, 16, 256])
+def test_parity_paper_stacks(stack, batch):
+    """Acceptance gate: every paper stack, batches 1-256, all paths."""
+    dims = (MLPS[stack].d_in,) + tuple(MLPS[stack].features)
+    _check_parity(dims, batch, seed=sorted(MLPS).index(stack) * 100 + batch)
+
+
+def test_large_batch_random_odd_k():
+    """batch=256 on a random odd-K stack (kept to one case — interpret
+    mode makes big batches expensive; the paper stacks above cover 256)."""
+    _check_parity((47, 96, 13), batch=256, seed=12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(2, 4).flatmap(
+               lambda depth: st.tuples(*[st.integers(4, 140)
+                                         for _ in range(depth + 1)])),
+           st.sampled_from([1, 16, 256]),
+           st.integers(0, 2 ** 16))
+    def test_parity_hypothesis(dims, batch, seed):
+        _check_parity(tuple(dims), batch, seed)
