@@ -2,14 +2,17 @@
 
 For each paper MLP stack and batch in {1, 16, 64, 256}:
 
-* ``per_layer_ms`` — ``mlp_serve(fused=False)``: L ``pallas_call`` launches,
-  every inter-layer activation round-trips HBM.
-* ``fused_ms``     — ``mlp_serve(fused=True)``: one megakernel launch,
-  activations resident in VMEM scratch.
+* ``per_layer_ms`` — the ``mode="per_layer"`` plan: L ``pallas_call``
+  launches, every inter-layer activation round-trips HBM.
+* ``fused_ms``     — the ``mode="fused"`` plan: one megakernel launch,
+  activations resident in VMEM scratch (the batch≤8 bucket rides the
+  weight-stationary latency schedule).
 
-Both paths run the *actual Pallas kernel body* (interpret mode off-TPU) with
-autotuned blocks, so the comparison is launch-count + data-movement, apples
-to apples.  A correctness check against the jnp oracle gates every row.
+Both paths flow through ``serving.ExecutionPlan`` — the same resolution
+(autotuned blocks, VMEM-fit, bucket entries) every other entry point uses —
+and run the *actual Pallas kernel body* (interpret mode off-TPU), so the
+comparison is launch-count + data-movement, apples to apples.  A
+correctness check against the jnp-oracle plan gates every row.
 
 Writes results/bench/fused_serving.json and — so the perf trajectory is
 tracked from this PR onward — ``BENCH_fused_serving.json`` at the repo root.
@@ -25,9 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS, save
+from repro import serving
 from repro.configs.paper_mlps import MLP_GSC, MLP_HR
 from repro.core import bitplanes as bp
-from repro.models import mlp as M
 
 BATCHES = (1, 16, 64, 256)
 REPO_ROOT = os.path.dirname(os.path.dirname(RESULTS))
@@ -97,19 +100,22 @@ def run(fast: bool = False):
     rows = []
     for cfg in (MLP_GSC, MLP_HR):
         pack = _rand_pack(cfg)
+        plan_fused = serving.build_plan(pack, mode="fused")
+        plan_layer = serving.build_plan(pack, mode="per_layer")
+        plan_oracle = serving.build_plan(pack, mode="oracle")
         for batch in BATCHES:
             rng = np.random.default_rng(batch)
             x = jnp.asarray(rng.normal(size=(batch, cfg.d_in)), jnp.float32)
-            y_f = M.mlp_serve(pack, x, fused=True)
-            y_o = M.mlp_serve(pack, x, use_kernel=False)
+            y_f = plan_fused.run(x)
+            y_o = plan_oracle.run(x)
             err = float(jnp.max(jnp.abs(y_f - y_o)))
             # mixed gate: 1e-3 absolute for O(1) logits, relative slack for
             # packs whose activations drift larger (f32 accumulation noise)
             assert err < 1e-3 + 1e-5 * float(jnp.max(jnp.abs(y_o))), \
                 (cfg.name, batch, err)
             t_layer, t_fused = _time_pair(
-                lambda: M.mlp_serve(pack, x, fused=False),
-                lambda: M.mlp_serve(pack, x, fused=True), repeats)
+                lambda: plan_layer.run(x),
+                lambda: plan_fused.run(x), repeats)
             row = {"model": cfg.name, "batch": batch,
                    "per_layer_ms": t_layer * 1e3,
                    "fused_ms": t_fused * 1e3,

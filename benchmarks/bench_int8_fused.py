@@ -5,15 +5,16 @@ inter-layer activations and never spills them off-chip.  PR 1 fused the
 fp32 path; this benchmark tracks the int8 analogue for each paper stack and
 batch in {1, 16, 64, 256}:
 
-* ``fp32_fused_ms``  — ``mlp_serve(fused=True)``: the PR-1 megakernel.
-* ``int8_layer_ms``  — ``mlp_serve_int8(fused=False)``: L launches, every
-  quantized activation round-trips HBM.
-* ``int8_fused_ms``  — ``mlp_serve_int8(fused=True)``: one launch, the
+* ``fp32_fused_ms``  — the fp32 ``mode="fused"`` plan: the PR-1 megakernel.
+* ``int8_layer_ms``  — the int8 ``mode="per_layer"`` plan: L launches,
+  every quantized activation round-trips HBM.
+* ``int8_fused_ms``  — the int8 ``mode="fused"`` plan: one launch, the
   int8 re-quantization happens in VMEM between resident layers.
 
-All paths run the actual Pallas kernel bodies (interpret mode off-TPU) with
-autotuned blocks.  A bit-exactness gate (int8 fused == int8 per-layer, the
-§VI-C contract) guards every row.
+All paths flow through ``serving.ExecutionPlan`` (mode, blocks and the
+one-time int8 calibration resolved at plan build) and run the actual
+Pallas kernel bodies (interpret mode off-TPU).  A bit-exactness gate (int8
+fused == int8 per-layer, the §VI-C contract) guards every row.
 
 Extends the repo-root ``BENCH_fused_serving.json`` (written by
 bench_fused_serving) with an ``int8_rows`` section so the cross-PR perf
@@ -31,8 +32,8 @@ import numpy as np
 from benchmarks.bench_fused_serving import (BATCHES, _rand_pack,
                                             merge_root_json)
 from benchmarks.common import save
+from repro import serving
 from repro.configs.paper_mlps import MLP_GSC, MLP_HR
-from repro.models import mlp as M
 
 
 def _best_of(fn, repeats: int) -> float:
@@ -50,15 +51,20 @@ def run(fast: bool = False):
     rows = []
     for cfg in (MLP_GSC, MLP_HR):
         pack = _rand_pack(cfg)
-        calib = M.calibrate_act_scales(
-            pack, jnp.asarray(np.random.default_rng(0).normal(
-                size=(64, cfg.d_in)), jnp.float32))
+        calib_x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(64, cfg.d_in)), jnp.float32)
+        calib = serving.calibrate_act_scales(pack, calib_x)
+        plan_f32 = serving.build_plan(pack, mode="fused")
+        plan_i8f = serving.build_plan(pack, mode="fused", act_dtype="int8",
+                                      calib=calib)
+        plan_i8l = serving.build_plan(pack, mode="per_layer",
+                                      act_dtype="int8", calib=calib)
         for batch in BATCHES:
             rng = np.random.default_rng(batch)
             x = jnp.asarray(rng.normal(size=(batch, cfg.d_in)), jnp.float32)
 
-            y_fused = M.mlp_serve_int8(pack, calib, x, fused=True)
-            y_layer = M.mlp_serve_int8(pack, calib, x, fused=False)
+            y_fused = plan_i8f.run(x)
+            y_layer = plan_i8l.run(x)
             # §VI-C contract: the fused int8 datapath reproduces the
             # per-layer chain exactly (shared scale-folding arithmetic).
             # Bitwise holds when the per-layer kernel accumulates K in one
@@ -73,12 +79,9 @@ def run(fast: bool = False):
             else:
                 assert bit_exact, (cfg.name, batch)
 
-            t_f32 = _best_of(lambda: M.mlp_serve(pack, x, fused=True),
-                             repeats)
-            t_i8l = _best_of(lambda: M.mlp_serve_int8(pack, calib, x,
-                                                      fused=False), repeats)
-            t_i8f = _best_of(lambda: M.mlp_serve_int8(pack, calib, x,
-                                                      fused=True), repeats)
+            t_f32 = _best_of(lambda: plan_f32.run(x), repeats)
+            t_i8l = _best_of(lambda: plan_i8l.run(x), repeats)
+            t_i8f = _best_of(lambda: plan_i8f.run(x), repeats)
             row = {"model": cfg.name, "batch": batch,
                    "fp32_fused_ms": t_f32 * 1e3,
                    "int8_layer_ms": t_i8l * 1e3,

@@ -13,6 +13,10 @@ fused_serving         §V pipeline analogue (megakernel vs per-layer
 int8_fused            §VI-C analogue (int8 inter-layer activations:
                       fp32-fused vs int8-per-layer vs int8-fused; extends
                       BENCH_fused_serving.json with int8_rows)
+serving_engine        ragged Poisson arrivals through the micro-batched
+                      serving engine vs naive per-request launches;
+                      extends BENCH_fused_serving.json with
+                      serving_engine_rows
 """
 from __future__ import annotations
 
@@ -32,7 +36,7 @@ def main(argv=None):
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
                             bench_int8_fused, bench_pareto,
-                            bench_serving_roofline)
+                            bench_serving_engine, bench_serving_roofline)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -41,6 +45,7 @@ def main(argv=None):
         "serving_roofline": lambda: bench_serving_roofline.run(),
         "fused_serving": lambda: bench_fused_serving.run(fast=args.fast),
         "int8_fused": lambda: bench_int8_fused.run(fast=args.fast),
+        "serving_engine": lambda: bench_serving_engine.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -1,49 +1,76 @@
-"""Quickstart: the FantastIC4 pipeline on one weight matrix in ~60 lines.
+"""Quickstart: the FantastIC4 pipeline end to end in ~80 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. ECL-quantize a weight matrix to 16 subset-sum centroids (4 bit-planes
+1. ECL-quantize weight matrices to 16 subset-sum centroids (4 bit-planes
    × 4 basis values ω — paper eq. 1),
 2. pick the cheapest lossless format (CSR / bitmask / dense4),
-3. run the ACM matmul through the Pallas kernel (interpret mode on CPU)
-   and check it against the fp32 reference.
+3. freeze them into a serving pack and resolve a ``serving.ExecutionPlan``
+   (mode, autotuned blocks, VMEM fit — decided once, not per call),
+4. serve a batch through the plan and ragged requests through the
+   micro-batcher (queue → bucket → plan), checking both against the
+   pure-jnp oracle plan.
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax.numpy as jnp
 
+from repro import serving
 from repro.core import bitplanes, ecl, formats
-from repro.kernels import ops
 
 rng = np.random.default_rng(0)
 
-# --- a "trained" weight matrix: heavy-tailed (laplacian), like real
-# post-training weight distributions, so low-entropy coding has zeros to find
-w = jnp.asarray(rng.laplace(size=(256, 128)) * 0.03, jnp.float32)
-omega = bitplanes.init_omega_from_weights(w)          # 4 basis centroids
-print("basis centroids ω:", np.asarray(omega))
+# --- "trained" weights: heavy-tailed (laplacian), like real post-training
+# weight distributions, so low-entropy coding has zeros to find
+DIMS = (256, 128, 10)                      # a 2-layer MLP stack
+layers = []
+for i, (k, n) in enumerate(zip(DIMS[:-1], DIMS[1:])):
+    w = jnp.asarray(rng.laplace(size=(k, n)) * 0.03, jnp.float32)
+    omega = bitplanes.init_omega_from_weights(w)   # 4 basis centroids
+    codes, probs = ecl.ecl_fit(w, omega, lam=0.5, iters=12)
+    sparsity = float(ecl.sparsity(codes))
+    entropy = float(ecl.entropy_bits(ecl.histogram(codes)))
+    print(f"layer {i}: sparsity {sparsity:.1%}, entropy {entropy:.2f} "
+          f"bits/weight (vs 4.0 uncoded)")
 
-# --- entropy-constrained assignment (λ controls the size↔accuracy trade)
-codes, probs = ecl.ecl_fit(w, omega, lam=0.5, iters=12)
-sparsity = float(ecl.sparsity(codes))
-entropy = float(ecl.entropy_bits(ecl.histogram(codes)))
-print(f"sparsity {sparsity:.1%}, entropy {entropy:.2f} bits/weight "
-      f"(vs 4.0 uncoded)")
+    # --- multiple lossless formats; the cheapest wins (contribution 4)
+    best = formats.select_format(np.asarray(codes))
+    cr = formats.compression_ratio(np.asarray(codes))
+    print(f"  selected {best}: {cr:.1f}x smaller than fp32")
 
-# --- multiple lossless formats; the cheapest wins (paper contribution 4)
-for fmt in formats.FORMATS:
-    ct = formats.encode(np.asarray(codes), fmt)
-    assert np.array_equal(formats.decode(ct), np.asarray(codes))
-    print(f"  {fmt:8s}: {ct.size_bytes:6d} bytes")
-best = formats.select_format(np.asarray(codes))
-cr = formats.compression_ratio(np.asarray(codes))
-print(f"selected {best}: {cr:.1f}x smaller than fp32")
+    layers.append({
+        "packed": bitplanes.pack_codes_rows(codes),
+        "omega": omega.astype(jnp.float32),
+        "alpha1": jnp.ones((n,), jnp.float32),
+        "bias": jnp.zeros((n,), jnp.float32),
+        "alpha2": jnp.asarray(np.float32(1.0)),
+        "shape": (k, n),
+        "activation": "relu" if i < len(DIMS) - 2 else None,
+    })
+pack = {"layers": layers, "act_bits": None}
 
-# --- ACM execution: packed 4-bit codes -> Pallas kernel (VMEM decode + MXU)
-x = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
-packed = bitplanes.pack_codes_rows(codes)
-y = ops.fantastic4_matmul(x, packed, omega, activation="relu",
-                          use_kernel=True, interpret=True)
-y_ref = jnp.maximum(x @ bitplanes.decode(codes, omega), 0.0)
-np.testing.assert_allclose(y, y_ref, atol=1e-4)
-print("Pallas ACM kernel matches reference ✓  (output", y.shape, ")")
+# --- ONE execution plan per pack: resolves kernel schedule per batch
+# bucket (weight-stationary ≤8 rows, batch-tiled megakernel above),
+# autotuned block sizes and the VMEM-fit fallback up front.
+plan = serving.build_plan(pack, mode="auto")
+oracle = serving.build_plan(pack, mode="oracle")
+d = plan.describe()
+print(f"plan: {d['resolved_mode']} (buckets {d['bucket_sizes']}, "
+      f"block_m {d['block_m']}), batch 1 -> {plan.mode_label(1)}")
+
+x = jnp.asarray(rng.normal(size=(8, DIMS[0])), jnp.float32)
+y = plan.run(x)
+np.testing.assert_allclose(y, oracle.run(x), atol=1e-4)
+print("Pallas serving plan matches oracle ✓  (output", y.shape, ")")
+
+# --- ragged traffic through the micro-batcher: requests of 1-4 rows
+# coalesce into one power-of-two bucket launch, results scatter back.
+batcher = serving.MicroBatcher(plan)
+reqs = [jnp.asarray(rng.normal(size=(r, DIMS[0])), jnp.float32)
+        for r in (1, 4, 2, 1)]
+outs = batcher.serve(reqs)
+for req, out in zip(reqs, outs):
+    np.testing.assert_allclose(out, oracle.run(req), atol=1e-4)
+st = batcher.stats
+print(f"micro-batcher served {st['requests']} ragged requests "
+      f"({st['rows']} rows) in {st['flushes']} launch(es), bucket hist "
+      f"{st['bucket_hist']} ✓")

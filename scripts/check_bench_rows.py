@@ -1,0 +1,70 @@
+"""Guard the cross-PR perf trajectory: BENCH_fused_serving.json must never
+lose rows a previous run had.
+
+    python scripts/check_bench_rows.py snapshot ROWS_FILE   # before benches
+    python scripts/check_bench_rows.py check ROWS_FILE      # after benches
+
+``snapshot`` records the identity of every row present in the current
+repo-root JSON (per section: fp32 ``rows`` and ``int8_rows`` keyed by
+(model, batch), ``serving_engine_rows`` by (model, load)).  ``check``
+fails loudly if any recorded identity is missing afterwards — a benchmark
+that silently stopped emitting a section would otherwise ship a shrunken
+perf file and break the PR-over-PR comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fused_serving.json")
+
+SECTIONS = {
+    "rows": ("model", "batch"),
+    "int8_rows": ("model", "batch"),
+    "serving_engine_rows": ("model", "load"),
+}
+
+
+def row_ids(path: str = ROOT_JSON) -> list:
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except ValueError:
+        return []
+    ids = []
+    for section, keys in SECTIONS.items():
+        for row in data.get(section, []):
+            ids.append([section] + [row.get(k) for k in keys])
+    return ids
+
+
+def main(argv) -> int:
+    if len(argv) != 3 or argv[1] not in ("snapshot", "check"):
+        print(__doc__)
+        return 2
+    cmd, rows_file = argv[1], argv[2]
+    if cmd == "snapshot":
+        with open(rows_file, "w") as f:
+            json.dump(row_ids(), f)
+        print(f"snapshotted {len(row_ids())} bench rows -> {rows_file}")
+        return 0
+    with open(rows_file) as f:
+        before = [tuple(r) for r in json.load(f)]
+    after = {tuple(r) for r in row_ids()}
+    missing = [r for r in before if r not in after]
+    if missing:
+        print("BENCH_fused_serving.json lost previously present rows:")
+        for r in missing:
+            print(f"  {r}")
+        return 1
+    print(f"bench rows OK ({len(before)} preserved, "
+          f"{len(after) - len(set(before))} new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -5,11 +5,13 @@
 #   CI_BENCH_BUDGET_S=300 scripts/ci.sh
 #   CI_SKIP_BENCH=1 scripts/ci.sh # tests only
 #
-# The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode and
-# rewrites BENCH_fused_serving.json at the repo root (fp32 rows + int8_rows),
-# so every PR leaves the cross-PR perf trajectory current.  A benchmark
-# overrun (budget exceeded) fails CI loudly rather than silently shipping a
-# stale perf file.
+# The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode —
+# including bench_serving_engine (ragged-arrival engine vs naive) — and
+# rewrites BENCH_fused_serving.json at the repo root (fp32 rows + int8_rows
+# + serving_engine_rows), so every PR leaves the cross-PR perf trajectory
+# current.  A benchmark overrun (budget exceeded) fails CI loudly rather
+# than silently shipping a stale perf file, and scripts/check_bench_rows.py
+# fails the run if the refreshed JSON lost rows a previous run had.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,8 +22,13 @@ python -m pytest -x -q
 
 if [[ "${CI_SKIP_BENCH:-0}" != "1" ]]; then
     budget="${CI_BENCH_BUDGET_S:-1200}"
+    rows_snapshot="$(mktemp)"
+    trap 'rm -f "$rows_snapshot"' EXIT
+    python scripts/check_bench_rows.py snapshot "$rows_snapshot"
     echo "== benchmarks (--fast, budget ${budget}s) =="
     timeout --signal=INT "$budget" python -m benchmarks.run --fast
+    echo "== bench row-loss guard =="
+    python scripts/check_bench_rows.py check "$rows_snapshot"
 fi
 
 echo "CI OK"

@@ -177,6 +177,96 @@ def heuristic_blocks(m: int, k: int, n: int, *, fused: bool = False,
     return BlockConfig(bm, bn, bk)
 
 
+def heuristic_elementwise_blocks(r: int, c: int, *,
+                                 backend: Optional[str] = None
+                                 ) -> BlockConfig:
+    """Shape-clamped tiles for 2-D elementwise kernels (``ecl_quant``).
+
+    ``block_k`` is meaningless for an elementwise grid and is pinned to 0
+    (the sentinel the cache key carries).  Costs mirror
+    :func:`heuristic_blocks`: clamp to the (tile-rounded) problem, minimise
+    grid steps in interpret mode, and on TPU keep the w/codes/w_hat tiles
+    (4 + 1 + 4 bytes per element) inside a conservative VMEM slice.
+    """
+    backend = backend or jax.default_backend()
+    rp = _round_up(r, SUBLANE)
+    cp = _round_up(c, LANE)
+    if backend != "tpu":
+        return BlockConfig(min(rp, 512), min(cp, 1024), 0)
+    br, bc = min(rp, 256), min(cp, 512)
+    while 9 * br * bc > (4 << 20) and bc > LANE:
+        bc //= 2
+    while 9 * br * bc > (4 << 20) and br > SUBLANE:
+        br //= 2
+    return BlockConfig(br, bc, 0)
+
+
+def candidate_elementwise_blocks(r: int, c: int) -> Sequence[BlockConfig]:
+    """Candidate (block_r, block_c) grid for the elementwise timed sweep."""
+    rp, cp = _round_up(r, SUBLANE), _round_up(c, LANE)
+    brs = sorted({min(rp, v) for v in (64, 128, 256, 512)})
+    bcs = sorted({min(cp, v) for v in (128, 256, 512, 1024)})
+    return [BlockConfig(br, bc, 0, source="sweep")
+            for br in brs for bc in bcs]
+
+
+def _resolve_and_cache(key: str, *,
+                       measure: Optional[Callable[[BlockConfig], float]],
+                       candidates: Callable[[], Iterable[BlockConfig]],
+                       heuristic: Callable[[], BlockConfig],
+                       persist: bool) -> BlockConfig:
+    """Shared cache → timed-sweep → heuristic tiering (one implementation
+    for the matmul and elementwise entry points).  ``candidates`` and
+    ``heuristic`` are thunks so neither is built on a cache hit."""
+    with _lock:
+        _load_disk_locked()
+        hit = _memory.get(key)
+    if hit is not None:
+        return hit
+    if measure is not None:
+        cands = list(candidates())
+        timed = [(measure(c), i) for i, c in enumerate(cands)]
+        best_t, best_i = min(timed)
+        if best_t != float("inf"):
+            cfg = dataclasses.replace(cands[best_i], source="sweep")
+        else:
+            cfg = heuristic()
+    else:
+        cfg = heuristic()
+    with _lock:
+        _memory[key] = cfg
+        if persist:
+            try:
+                _save_disk_locked()
+            except OSError:
+                pass                      # read-only FS: memory cache only
+    return cfg
+
+
+def get_elementwise_config(r: int, c: int, *,
+                           dtype: str = "float32",
+                           backend: Optional[str] = None,
+                           measure: Optional[
+                               Callable[[BlockConfig], float]] = None,
+                           op: str = "eclquant",
+                           persist: bool = True) -> BlockConfig:
+    """Resolve (block_r, block_c) for a 2-D elementwise kernel.
+
+    Same cache → sweep → heuristic tiering as :func:`get_block_config`;
+    entries live in the same store under ``k=0`` plus an ``op`` extra, so
+    they can never collide with a matmul shape's blocks.
+    """
+    backend = backend or jax.default_backend()
+    return _resolve_and_cache(
+        cache_key(r, 0, c, dtype=dtype, fused=False, backend=backend,
+                  extra=op),
+        measure=measure,
+        candidates=lambda: candidate_elementwise_blocks(r, c),
+        heuristic=lambda: heuristic_elementwise_blocks(r, c,
+                                                       backend=backend),
+        persist=persist)
+
+
 def candidate_blocks(m: int, k: int, n: int, *, fused: bool = False
                      ) -> Sequence[BlockConfig]:
     """Candidate grid for the timed sweep (deduped, shape-clamped)."""
@@ -211,29 +301,12 @@ def get_block_config(m: int, k: int, n: int, *,
     mask the timed sweep for the same shape on actual hardware.
     """
     backend = backend or jax.default_backend()
-    key = cache_key(m, k, n, dtype=dtype, fused=fused, backend=backend,
-                    act_dtype=act_dtype, extra=extra)
-    with _lock:
-        _load_disk_locked()
-        hit = _memory.get(key)
-    if hit is not None:
-        return hit
-    if measure is not None:
-        cands = list(candidates if candidates is not None
-                     else candidate_blocks(m, k, n, fused=fused))
-        timed = [(measure(c), i) for i, c in enumerate(cands)]
-        best_t, best_i = min(timed)
-        if best_t != float("inf"):
-            cfg = dataclasses.replace(cands[best_i], source="sweep")
-        else:
-            cfg = heuristic_blocks(m, k, n, fused=fused, backend=backend)
-    else:
-        cfg = heuristic_blocks(m, k, n, fused=fused, backend=backend)
-    with _lock:
-        _memory[key] = cfg
-        if persist:
-            try:
-                _save_disk_locked()
-            except OSError:
-                pass                      # read-only FS: memory cache only
-    return cfg
+    return _resolve_and_cache(
+        cache_key(m, k, n, dtype=dtype, fused=fused, backend=backend,
+                  act_dtype=act_dtype, extra=extra),
+        measure=measure,
+        candidates=lambda: (candidates if candidates is not None
+                            else candidate_blocks(m, k, n, fused=fused)),
+        heuristic=lambda: heuristic_blocks(m, k, n, fused=fused,
+                                           backend=backend),
+        persist=persist)

@@ -53,6 +53,27 @@ invariant.
 per-layer kernel when a stack exceeds the budget (e.g. a >VMEM embedding
 projection) — the software analogue of the paper's "fits the FPGA's on-chip
 SRAM" precondition.
+
+A third schedule serves the latency path (batch=1 bucket of the serving
+engine): the **weight-stationary** variant
+(``fantastic4_fused_mlp_ws_pallas``).  The batch-tiled megakernel above
+keeps *all* layer weights VMEM-resident and streams batch tiles past them;
+with a single-row batch there is nothing left to stream, so holding the
+whole stack on-chip only inflates the working set.  The ws variant flips
+the dataflow: the grid runs over *layers* (sequential ``"arbitrary"``
+semantics), the tiny activation tile is the resident operand (a VMEM
+scratch carried across grid steps), and each grid step fetches exactly one
+layer's packed codes — every weight byte crosses HBM→VMEM once per
+inference and is the stationary operand of its own step while the
+activation hops through the scratch.  Layer operands are stacked into
+uniform ``(L, D/2, D)`` / ``(L, 1, D)`` arrays (D = the stack's widest
+padded dim) so one ``BlockSpec`` indexed by the layer id can address them;
+zero-padded codes decode to zero weights and padded epilogue columns carry
+α₁ = b = 0, so the uniform width is exactly absorbed (padded columns stay
+0.0 through relu and int8 re-quantization alike).  Per-step VMEM is one
+layer's codes + one decoded tile instead of the whole stack, so the ws
+schedule also serves stacks whose *total* packed size busts the megakernel
+budget, still in one launch.
 """
 from __future__ import annotations
 
@@ -286,4 +307,170 @@ def fantastic4_fused_mlp_pallas(
         compiler_params=COMPILER_PARAMS(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*operands)
+    return out[:m, :shapes[-1][1]]
+
+
+# ------------------------------------------------ weight-stationary variant
+
+def ws_width(shapes: Sequence[Tuple[int, int]],
+             dim_align: int = DIM_ALIGN) -> int:
+    """Uniform stacked-operand width D: the stack's widest padded dim."""
+    ps = padded_shapes(shapes, dim_align)
+    return max([ps[0][0]] + [np_ for _, np_ in ps])
+
+
+def ws_mlp_vmem_bytes(shapes: Sequence[Tuple[int, int]], rows: int = 8,
+                      dim_align: int = DIM_ALIGN,
+                      act_dtype: str = "float32") -> int:
+    """Per-grid-step working set of the weight-stationary schedule (bytes).
+
+    One layer's packed (D/2, D) block + its decoded (D, D) tile + the
+    resident (rows, D) activation scratch and x/out tiles; ×2 on the
+    streamed per-layer operands for pipelining double buffers.  Unlike
+    ``fused_mlp_vmem_bytes`` this does not scale with L — the whole point
+    of the schedule.
+    """
+    d = ws_width(shapes, dim_align)
+    rp = _round_up(rows, 8)
+    packed = d // 2 * d                              # uint8, one layer
+    vectors = 2 * 4 * d + 4 * 4 + 4 * 4              # α₁/b + ω + meta
+    decoded = 4 * d * d
+    act = 4 * rp * d
+    x_tile = 4 * rp * d
+    out_tile = 4 * rp * d
+    if act_dtype == "int8":
+        act += rp * d
+    return 2 * (packed + vectors) + decoded + act + x_tile + out_tile
+
+
+def ws_mlp_fits(shapes: Sequence[Tuple[int, int]], *, rows: int = 8,
+                budget_bytes: int = VMEM_BUDGET_BYTES,
+                dim_align: int = DIM_ALIGN,
+                act_dtype: str = "float32") -> bool:
+    if not shapes:
+        return False
+    return ws_mlp_vmem_bytes(shapes, rows, dim_align,
+                             act_dtype) <= budget_bytes
+
+
+def build_ws_operands(packed: Sequence[jax.Array],
+                      omega: Sequence[jax.Array],
+                      alpha1: Sequence[jax.Array],
+                      bias: Sequence[jax.Array],
+                      scale: Sequence[jax.Array],
+                      *, shapes: Sequence[Tuple[int, int]],
+                      activations: Sequence[Optional[str]],
+                      act_dtype: str = "float32",
+                      dim_align: int = DIM_ALIGN) -> tuple:
+    """Stack per-layer operands into the ws kernel's uniform-width arrays.
+
+    Returns ``(packed (L, D/2, D) u8, omega (L, 1, 4), alpha1 (L, 1, D),
+    bias (L, 1, D), meta (L, 1, 4))`` where ``meta[l] = [scale_l,
+    relu_flag, quant_flag, 0]`` — the activation/re-quantization choices
+    become data so one kernel body can serve every grid step (the layer id
+    is a traced ``program_id``).  Do this once per frozen pack, not per
+    call: the serving plan caches the result.
+    """
+    n_layers = len(shapes)
+    d = ws_width(shapes, dim_align)
+    pk, om, a1, bi, me = [], [], [], [], []
+    for l in range(n_layers):
+        pk.append(_pad2(packed[l], d // 2, d))
+        om.append(omega[l].reshape(1, 4).astype(jnp.float32))
+        a1.append(_pad2(alpha1[l].reshape(1, -1).astype(jnp.float32), 1, d))
+        bi.append(_pad2(bias[l].reshape(1, -1).astype(jnp.float32), 1, d))
+        relu_f = 1.0 if activations[l] == "relu" else 0.0
+        quant_f = 1.0 if (act_dtype == "int8" and l < n_layers - 1) else 0.0
+        me.append(jnp.asarray(
+            [[float(jnp.asarray(scale[l]).reshape(())), relu_f, quant_f,
+              0.0]], jnp.float32))
+    return (jnp.stack(pk), jnp.stack(om), jnp.stack(a1), jnp.stack(bi),
+            jnp.stack(me))
+
+
+def _ws_kernel(x_ref, packed_ref, omega_ref, alpha1_ref, bias_ref, meta_ref,
+               o_ref, act_ref, *, act_dtype: str, n_layers: int):
+    l = pl.program_id(0)
+
+    @pl.when(l == 0)
+    def _():
+        act_ref[...] = x_ref[...].astype(jnp.float32)
+
+    cur = act_ref[...]
+    w = _decode_tile(packed_ref[0], omega_ref[0])
+    y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
+    y = y * alpha1_ref[0] + bias_ref[0]
+    # activation/quantization flags are per-layer *data* (meta operand):
+    # the layer id is traced, so the branch cannot be a python conditional.
+    y = jnp.where(meta_ref[0, 0, 1] > 0, jnp.maximum(y, 0.0), y)
+    s = meta_ref[0, 0, 0]
+    if act_dtype == "int8":
+        q = jnp.clip(jnp.round(y / s), -127.0, 127.0)
+        yq = q.astype(jnp.int8).astype(jnp.float32)
+        y = jnp.where(meta_ref[0, 0, 2] > 0, yq, y)
+    else:
+        y = y * s
+    act_ref[...] = y
+
+    @pl.when(l == n_layers - 1)
+    def _():
+        o_ref[...] = act_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shapes", "activations", "out_dtype", "interpret",
+                     "dim_align", "act_dtype"))
+def fantastic4_fused_mlp_ws_pallas(
+        x: jax.Array,
+        packed_stack: jax.Array,
+        omega_stack: jax.Array,
+        alpha1_stack: jax.Array,
+        bias_stack: jax.Array,
+        meta_stack: jax.Array,
+        *, shapes: Tuple[Tuple[int, int], ...],
+        activations: Tuple[Optional[str], ...],
+        out_dtype=None,
+        interpret: bool = False,
+        dim_align: int = DIM_ALIGN,
+        act_dtype: str = "float32") -> jax.Array:
+    """Weight-stationary whole-stack serving: grid over layers, activation
+    resident in scratch, one layer's weights fetched per step.
+
+    Operands come pre-stacked from ``build_ws_operands`` (uniform width D).
+    The batch is not tiled — the whole (rounded) batch rides in the scratch
+    — so this is the latency schedule for small row counts (the serving
+    plan selects it for the batch≤8 bucket).  The grid must run in order
+    (``"arbitrary"`` semantics): step l reads the activation step l−1
+    wrote.
+    """
+    assert act_dtype in ("float32", "int8"), act_dtype
+    n_layers = len(shapes)
+    assert n_layers >= 1
+    assert packed_stack.shape[0] == n_layers
+    m, k0 = x.shape
+    assert k0 == shapes[0][0], (x.shape, shapes)
+    out_dtype = out_dtype or x.dtype
+    d = ws_width(shapes, dim_align)
+    mp = _round_up(m, 8)
+    xp = _pad2(x, mp, d)
+
+    out = pl.pallas_call(
+        functools.partial(_ws_kernel, act_dtype=act_dtype,
+                          n_layers=n_layers),
+        grid=(n_layers,),
+        in_specs=[
+            pl.BlockSpec((mp, d), lambda l: (0, 0)),
+            pl.BlockSpec((1, d // 2, d), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, 4), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda l: (l, 0, 0)),
+            pl.BlockSpec((1, 1, 4), lambda l: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mp, d), lambda l: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), out_dtype),
+        scratch_shapes=[pltpu.VMEM((mp, d), jnp.float32)],
+        compiler_params=COMPILER_PARAMS(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(xp, packed_stack, omega_stack, alpha1_stack, bias_stack, meta_stack)
     return out[:m, :shapes[-1][1]]

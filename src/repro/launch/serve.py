@@ -10,15 +10,17 @@ Requests are batched: the decode step advances every sequence in lockstep
 (continuous batching's inner loop; slot management would sit above this).
 
 Paper MLP archs (``--arch mlp-gsc | mlp-hr | lenet-300-100``) take the
-classification serving path instead: freeze to the packed-int4 pack and run
-the fused serving megakernel (one ``pallas_call`` for the whole stack,
-activations VMEM-resident; ``--no-fused`` selects the chained per-layer
-kernel).  ``--int8`` serves the paper's §VI-C configuration — 8-bit
-inter-layer activations re-quantized inside the megakernel (calibration on
-a synthetic batch), still one launch per batch; ``--double-buffer`` adds
-the pipelined two-row-group variant.  Block sizes come from the
-shape-aware autotuner in both paths, so the launcher, models and
-benchmarks all exercise the same tuned configuration.
+classification serving path instead: freeze to the packed-int4 pack,
+resolve a ``serving.ExecutionPlan`` (mode, autotuned blocks, VMEM-fit
+fallback and — with ``--int8`` — activation calibration, all decided once
+up front) and run the batch through the plan's bucket entry.  The resolved
+plan is validated and printed *before* the timed run, and the run is
+labeled by what actually executed, not by the flags: a ``--double-buffer``
+request that cannot engage (no ≥16-row tile) or a stack that falls back
+past the VMEM budget surfaces as a plan note first.  ``--no-fused``
+selects the chained per-layer kernel; ``--engine`` additionally pushes the
+batch through the micro-batcher as single-row ragged requests (the
+continuous-batching path).
 """
 from __future__ import annotations
 
@@ -34,10 +36,11 @@ from ..configs.paper_mlps import MLPS
 from ..core import qat
 from ..nn import transformer as T
 from ..nn.module import QuantCtx
+from .. import serving
 
 
 def serve_mlp(args):
-    """Frozen paper-MLP serving: fused megakernel vs per-layer kernel."""
+    """Frozen paper-MLP serving through the unified serving engine."""
     from ..models import mlp as M
 
     cfg = MLPS[args.arch]
@@ -54,16 +57,29 @@ def serve_mlp(args):
     b = args.batch
     x = jax.random.normal(key, (b, cfg.d_in), jnp.float32)
 
-    if args.int8:
-        calib = M.calibrate_act_scales(pack, x)
+    plan = serving.build_plan(
+        pack,
+        mode="fused" if args.fused else "per_layer",
+        act_dtype="int8" if args.int8 else "float32",
+        double_buffer=args.double_buffer,
+        calib_x=x if args.int8 else None)
 
-        def _run():
-            return M.mlp_serve_int8(pack, calib, x, fused=args.fused,
-                                    double_buffer=args.double_buffer)
-    else:
-        def _run():
-            return M.mlp_serve(pack, x, use_kernel=True, fused=args.fused,
-                               double_buffer=args.double_buffer)
+    # resolved-plan report BEFORE anything is timed: the label below is
+    # what will actually execute for this batch, and every requested-but-
+    # not-engaged option surfaces as a note here, not after the numbers.
+    desc = plan.describe()
+    mode = plan.mode_label(b)
+    print(f"plan: requested {desc['requested_mode']}"
+          f"{' +double-buffer' if args.double_buffer else ''}"
+          f"{' +int8' if args.int8 else ''} -> resolved "
+          f"{desc['resolved_mode']} (batch {b}: {mode}; "
+          f"block_m {desc['block_m']} [{desc['block_source']}], "
+          f"buckets {desc['bucket_sizes']})")
+    for note in desc["notes"]:
+        print(f"note: {note}")
+
+    def _run():
+        return plan.run(x)
 
     y = jax.block_until_ready(_run())         # compile (+ autotune) warm-up
     t0 = time.time()
@@ -72,21 +88,30 @@ def serve_mlp(args):
         y = _run()
     jax.block_until_ready(y)
     dt = (time.time() - t0) / iters
-    mode = "fused megakernel" if args.fused else "per-layer kernel"
-    if args.int8:
-        mode += " (int8 activations)"
-    if args.double_buffer:
-        # only the fused megakernel has the pipelined variant, and it
-        # needs two full sublane groups per batch tile — don't label a
-        # run that silently ran single-buffered.
-        if args.fused and b >= 16:
-            mode += " (double-buffered)"
-        else:
-            print("note: --double-buffer ignored (needs --fused and a "
-                  "batch tile of >=16 rows)")
     print(f"{mode}: {dt*1e3:.2f} ms/batch  "
           f"({b/max(dt, 1e-12):.0f} samples/s, batch {b})")
     print("logits[0]:", np.asarray(y[0]).round(3).tolist())
+
+    if args.engine:
+        # ragged path: the same batch as b single-row requests through the
+        # queue -> bucket -> plan pipeline.  One untimed pass first — the
+        # timed number must be a serving figure, not a trace/compile one
+        # (bucket entries plus the submit/coalesce/scatter glue ops all
+        # compile on first use; the batch path above only warmed its own
+        # bucket).
+        jax.block_until_ready(
+            serving.MicroBatcher(plan).serve(list(x))[-1])
+        batcher = serving.MicroBatcher(plan)
+        t0 = time.time()
+        ys = batcher.serve(list(x))
+        jax.block_until_ready(ys[-1])
+        dt_e = time.time() - t0
+        st = batcher.stats
+        print(f"engine (ragged, {st['flushes']} flushes, bucket hist "
+              f"{st['bucket_hist']}): {dt_e*1e3:.2f} ms total "
+              f"({b/max(dt_e, 1e-12):.0f} samples/s)")
+        np.testing.assert_allclose(np.concatenate([np.asarray(v) for v in ys]),
+                                   np.asarray(y), atol=1e-5, rtol=1e-5)
     return y
 
 
@@ -106,6 +131,9 @@ def main(argv=None):
                     help="MLP path: int8 inter-layer activations (§VI-C)")
     ap.add_argument("--double-buffer", action="store_true",
                     help="MLP path: pipelined two-row-group megakernel")
+    ap.add_argument("--engine", action="store_true",
+                    help="MLP path: also serve the batch as ragged "
+                         "single-row requests through the micro-batcher")
     args = ap.parse_args(argv)
 
     if args.arch in MLPS:

@@ -1,0 +1,47 @@
+"""Identity-keyed memoization for frozen serving objects.
+
+Serving-path caches (folded int8 operands, stacked weight-stationary
+operands, execution plans) key on *object identity*: a frozen pack's
+arrays are never mutated in place, so ``id(pack)`` plus an ``is`` check is
+a correct and allocation-free cache key.  The subtle invariants live here
+once instead of at every cache site:
+
+* values hold **strong references** to the keyed objects, so their ids
+  cannot be recycled by the allocator while the entry lives;
+* a hit re-verifies every keyed object with ``is`` (two live objects can
+  never share an id, but a dead key's id can be reused — the strong refs
+  prevent that for *our* entries; the check keeps the contract explicit);
+* insertion-order eviction past ``max_entries`` bounds memory.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+MISS = object()        # sentinel: distinguishes "no entry" from value None
+
+
+class IdentityMemo:
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max_entries
+        self._entries: dict = {}
+
+    @staticmethod
+    def _key(objs: Sequence[Optional[object]], extra: Tuple) -> Tuple:
+        return (tuple(None if o is None else id(o) for o in objs)
+                + tuple(extra))
+
+    def get(self, objs: Sequence[Optional[object]], extra: Tuple = ()):
+        """Return the cached value, or :data:`MISS`."""
+        hit = self._entries.get(self._key(objs, extra))
+        if hit is None:
+            return MISS
+        held, value = hit
+        if all(h is o for h, o in zip(held, objs)):
+            return value
+        return MISS
+
+    def put(self, objs: Sequence[Optional[object]], extra: Tuple,
+            value) -> None:
+        if len(self._entries) >= self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[self._key(objs, extra)] = (tuple(objs), value)

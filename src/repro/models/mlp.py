@@ -47,7 +47,7 @@ import numpy as np
 
 from ..configs.paper_mlps import MLPConfig
 from ..core import acm, bitplanes, ecl, formats, qat
-from ..kernels import ops as kops
+from .. import serving
 from ..nn.module import QuantCtx
 
 
@@ -166,27 +166,47 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
     return {"layers": layers, "act_bits": act_bits}
 
 
+def _compat_plan(pack: dict, *, use_kernel: bool, fused: bool,
+                 act_dtype: str, calib: Optional[dict],
+                 interpret: Optional[bool], block_m: Optional[int],
+                 double_buffer: bool):
+    """Map the legacy keyword surface onto a (memoized) ExecutionPlan.
+
+    The historical contracts are preserved exactly: ``fused=True`` is the
+    batch-tiled megakernel at every batch size (``ws_bucket_rows=0`` — the
+    weight-stationary latency schedule is a *plan-level* choice, selected
+    by the serving engine's batch=1 bucket, not silently swapped under
+    callers that pinned the fused path and rely on its bit-exactness
+    contract vs the per-layer chain)."""
+    mode = "oracle" if not use_kernel else ("fused" if fused
+                                            else "per_layer")
+    return serving.get_plan(pack, mode=mode, act_dtype=act_dtype,
+                            calib=calib, double_buffer=double_buffer,
+                            interpret=interpret, block_m=block_m,
+                            ws_bucket_rows=0)
+
+
 def mlp_serve(pack: dict, x: jax.Array, *, use_kernel: bool = True,
               fused: bool = True, interpret: Optional[bool] = None,
               block_m: Optional[int] = None,
               double_buffer: bool = False) -> jax.Array:
     """End-to-end inference on the frozen pack.
 
-    ``use_kernel=True, fused=True`` (default) runs the whole stack as one
-    megakernel launch with VMEM-resident activations (falling back to the
-    per-layer kernel when it exceeds the VMEM budget); ``fused=False``
-    chains the per-layer kernel; ``use_kernel=False`` chains the pure-jnp
-    oracle.  ``block_m=None`` defers to the autotuner; ``double_buffer``
-    selects the megakernel's pipelined two-row-group variant.
+    Thin compatibility wrapper over ``serving.ExecutionPlan`` (which is
+    where mode/block/VMEM-fit resolution now lives): ``use_kernel=True,
+    fused=True`` (default) resolves to the megakernel plan (falling back
+    to the per-layer kernel when the stack exceeds the VMEM budget);
+    ``fused=False`` to the per-layer chain; ``use_kernel=False`` to the
+    pure-jnp oracle.  ``block_m=None`` defers to the autotuner;
+    ``double_buffer`` selects the pipelined two-row-group variant.  New
+    code should build a plan directly (``serving.build_plan``) and reuse
+    it.
     """
-    x = x.astype(jnp.float32)
-    if use_kernel and fused:
-        return kops.fantastic4_mlp_fused(
-            x, pack["layers"], use_kernel=True, interpret=interpret,
-            block_m=block_m, double_buffer=double_buffer)
-    return kops.fantastic4_mlp_chain(x, pack["layers"],
-                                     use_kernel=use_kernel,
-                                     interpret=interpret)
+    plan = _compat_plan(pack, use_kernel=use_kernel, fused=fused,
+                        act_dtype="float32", calib=None,
+                        interpret=interpret, block_m=block_m,
+                        double_buffer=double_buffer)
+    return plan.run(x)
 
 
 def pack_compression_summary(pack: dict) -> dict:
@@ -215,23 +235,10 @@ def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
 def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
     """Per-layer activation scales from a calibration batch — the paper's
-    8-bit-activation FPGA configuration.  alpha2 of layer i becomes the
-    re-quantization scale mapping the ReLU output onto the next layer's
-    int8 grid; the next layer's alpha1 absorbs the de-quantization."""
-    scales = []
-    x = x_calib.astype(jnp.float32)
-    for layer in pack["layers"]:
-        if layer["shape"][0] % 2:
-            # odd K: the pack carries one zero code row — mirror it on x
-            x = jnp.pad(x, ((0, 0), (0, 1)))
-        y = kops.fantastic4_matmul(
-            x, layer["packed"], layer["omega"], bias=layer["bias"],
-            alpha1=layer["alpha1"], alpha2=None,
-            activation=layer["activation"], use_kernel=False)
-        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-6) / 127.0
-        scales.append(float(s))
-        x = y
-    return {"act_scales": scales}
+    8-bit-activation FPGA configuration.  Delegates to the serving
+    engine's calibration (``serving.calibrate_act_scales``), which plans
+    run once at build time."""
+    return serving.calibrate_act_scales(pack, x_calib)
 
 
 def mlp_serve_int8(pack: dict, calib: dict, x: jax.Array, *,
@@ -248,23 +255,19 @@ def mlp_serve_int8(pack: dict, calib: dict, x: jax.Array, *,
     layers except through the two alpha multipliers, exactly the §V
     pipeline.  The final layer returns float logits.
 
-    ``use_kernel=True, fused=True`` (default) runs the whole int8 datapath
-    inside the megakernel — the activations are re-quantized to int8 in
-    VMEM and never touch HBM between layers, the full §V/§VI-C engine —
-    falling back to the per-layer chain past the VMEM budget.  The fused
-    and chained paths share the scale-folding arithmetic term for term and
-    agree bit-for-bit whenever the per-layer kernel takes K in one block
-    (always the case in interpret/CPU mode; a TPU block_k split of a wide
-    layer can flip a quantization boundary by one ulp — see
-    ``ops.fantastic4_mlp_fused``).
+    Compatibility wrapper over ``serving.ExecutionPlan`` with
+    ``act_dtype="int8"``.  ``use_kernel=True, fused=True`` (default) runs
+    the whole int8 datapath inside the megakernel — activations are
+    re-quantized to int8 in VMEM and never touch HBM between layers, the
+    full §V/§VI-C engine — falling back to the per-layer chain past the
+    VMEM budget.  The fused and chained paths share the scale-folding
+    arithmetic term for term and agree bit-for-bit whenever the per-layer
+    kernel takes K in one block (always the case in interpret/CPU mode; a
+    TPU block_k split of a wide layer can flip a quantization boundary by
+    one ulp — see ``ops.fantastic4_mlp_fused``).
     """
-    scales = calib["act_scales"]
-    x = x.astype(jnp.float32)
-    if use_kernel and fused:
-        return kops.fantastic4_mlp_fused(
-            x, pack["layers"], use_kernel=True, interpret=interpret,
-            block_m=block_m, act_dtype="int8", act_scales=scales,
-            double_buffer=double_buffer)
-    return kops.fantastic4_mlp_chain_int8(
-        x, pack["layers"], scales, use_kernel=use_kernel,
-        interpret=interpret)
+    plan = _compat_plan(pack, use_kernel=use_kernel, fused=fused,
+                        act_dtype="int8", calib=calib,
+                        interpret=interpret, block_m=block_m,
+                        double_buffer=double_buffer)
+    return plan.run(x)

@@ -1,0 +1,20 @@
+"""Unified serving engine: execution plans + tile-bucketed micro-batching.
+
+    queue ──▶ bucket ──▶ plan ──▶ kernel
+
+* :mod:`plans` — :class:`ExecutionPlan`: mode (fused fp32 / fused int8 /
+  double-buffered / weight-stationary / per-layer / oracle), autotuned
+  blocks, VMEM-fit fallback and int8 calibration resolved ONCE per frozen
+  pack, exposing jitted entry points per power-of-two batch bucket.
+* :mod:`batcher` — :class:`MicroBatcher`: FIFO request queue coalesced
+  into those buckets (full-tile flush, deadline-based partial flush),
+  results scattered back per request; :func:`replay` drives a ragged
+  arrival trace through it work-conservingly.
+
+Every serving entry point (``models.mlp.mlp_serve*``, ``launch.serve``,
+the benchmarks, the examples) flows through this package instead of
+threading mode keywords down to the kernels.
+"""
+from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
+                    build_plan, calibrate_act_scales, get_plan)
+from .batcher import Completion, MicroBatcher, replay         # noqa: F401

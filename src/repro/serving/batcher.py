@@ -1,0 +1,262 @@
+"""Request queue + tile-bucketed micro-batcher over an ExecutionPlan.
+
+FantastIC4's throughput story (§V: 2.45 TOPS on the GSC MLPs) assumes the
+execution units always see full row tiles; a serving frontend that launches
+the megakernel once per arriving request feeds it mostly padding.  The
+:class:`MicroBatcher` closes that gap — continuous batching at MLP scale:
+
+    requests ──▶ FIFO queue ──▶ coalesce into the plan's power-of-two
+    (ragged)                    row buckets (pad the remainder) ──▶ one
+                                bucket entry launch ──▶ scatter rows back
+                                per request
+
+Three flush triggers:
+
+* **full tile** — the queue holds enough rows for the largest bucket:
+  flush immediately (the megakernel sees a full ``block_m`` tile).
+* **deadline** — the oldest queued request has waited ``max_delay``:
+  flush a partial bucket rather than hold latency hostage to arrival rate.
+* **explicit** — ``flush()`` / ``run_one(force=True)`` drains regardless
+  (used by work-conserving drivers that flush whenever the engine is
+  idle, and at shutdown).
+
+Requests keep their rows contiguous (a multi-row request is never split
+across buckets) and results are scattered back by request id.  Because
+every row's output depends only on its own input row, a request served
+from a padded/coalesced bucket is bit-identical to the same request served
+alone through the same bucket entry — the padding-parity contract
+``tests/test_serving_engine.py`` enforces.
+
+The batcher is clock-agnostic: every method takes an explicit ``now`` (or
+falls back to ``time.monotonic``), so tests and the ragged-arrival
+benchmark can drive it on a virtual clock while the kernel launches are
+timed for real.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    x: jax.Array              # (rows, d_in)
+    rows: int
+    arrival: float
+    deadline: float
+
+
+@dataclasses.dataclass
+class Completion:
+    """One served request: scattered logits + queueing metadata."""
+    rid: int
+    y: jax.Array              # (rows, d_out)
+    arrival: float
+    bucket: int               # rows of the bucket that served it
+    batched_rows: int         # real rows sharing the launch
+
+
+class MicroBatcher:
+    """See module docstring.  ``max_bucket`` caps coalescing below the
+    plan's largest bucket (``max_bucket=1`` degenerates to naive
+    per-request serving — the benchmark baseline)."""
+
+    def __init__(self, plan, *, max_delay: float = 2e-3,
+                 max_bucket: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.plan = plan
+        self.max_delay = max_delay
+        top = max(plan.bucket_sizes)
+        self.max_bucket = min(max_bucket or top, top)
+        self.clock = clock
+        self._queue: Deque[_Pending] = collections.deque()
+        self._queued_rows = 0
+        self._results: Dict[int, Completion] = {}
+        self._next_rid = 0
+        self.stats = {"requests": 0, "rows": 0, "flushes": 0,
+                      "flushed_rows": 0, "padded_rows": 0,
+                      "bucket_hist": {}, "compute_s": 0.0}
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, x, now: Optional[float] = None) -> int:
+        """Queue one request (``(rows, d_in)`` or a single ``(d_in,)``
+        row); returns its request id."""
+        now = self.clock() if now is None else now
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.plan.d_in:
+            raise ValueError(f"request must be (rows, {self.plan.d_in}), "
+                             f"got {x.shape}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Pending(rid, x, x.shape[0], now,
+                                    now + self.max_delay))
+        self._queued_rows += x.shape[0]
+        self.stats["requests"] += 1
+        self.stats["rows"] += x.shape[0]
+        return rid
+
+    @property
+    def pending_rows(self) -> int:
+        return self._queued_rows
+
+    def next_deadline(self) -> Optional[float]:
+        return self._queue[0].deadline if self._queue else None
+
+    def oldest_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival if self._queue else None
+
+    # -------------------------------------------------------------- flush
+
+    def _take(self) -> List[_Pending]:
+        """Pop whole requests FIFO up to ``max_bucket`` rows (always at
+        least one request — an oversized request runs alone at exact
+        size rather than being split)."""
+        taken: List[_Pending] = []
+        rows = 0
+        while self._queue:
+            nxt = self._queue[0]
+            if taken and rows + nxt.rows > self.max_bucket:
+                break
+            taken.append(self._queue.popleft())
+            rows += nxt.rows
+            if rows >= self.max_bucket:
+                break
+        self._queued_rows -= rows
+        return taken
+
+    def run_one(self, now: Optional[float] = None
+                ) -> Tuple[List[Completion], int, float]:
+        """Serve one bucket now (no trigger checks — the caller decided).
+        Returns ``(completions, bucket_rows, compute_seconds)``; compute
+        time covers the blocking device round-trip for the whole bucket.
+        """
+        now = self.clock() if now is None else now
+        taken = self._take()
+        if not taken:
+            return [], 0, 0.0
+        rows = sum(p.rows for p in taken)
+        bucket = self.plan.bucket_for(rows)
+        padded = (bucket or rows) - rows
+        xb = jnp.concatenate([p.x for p in taken], axis=0) if len(taken) > 1 \
+            else taken[0].x
+        t0 = time.perf_counter()
+        if bucket is None:
+            y = self.plan.run(xb)                 # oversized: exact rows
+            bucket = rows
+        else:
+            if padded:
+                xb = jnp.pad(xb, ((0, padded), (0, 0)))
+            y = self.plan.entry(bucket)(xb)
+        y = jax.block_until_ready(y)
+        dt = time.perf_counter() - t0
+
+        out: List[Completion] = []
+        off = 0
+        for p in taken:
+            c = Completion(p.rid, y[off:off + p.rows], p.arrival, bucket,
+                           rows)
+            self._results[p.rid] = c
+            out.append(c)
+            off += p.rows
+        st = self.stats
+        st["flushes"] += 1
+        st["flushed_rows"] += rows
+        st["padded_rows"] += padded
+        st["bucket_hist"][bucket] = st["bucket_hist"].get(bucket, 0) + 1
+        st["compute_s"] += dt
+        return out, bucket, dt
+
+    def pump(self, now: Optional[float] = None,
+             force: bool = False) -> List[Completion]:
+        """Flush every bucket whose trigger has fired (full tile or
+        expired deadline; everything when ``force``)."""
+        now = self.clock() if now is None else now
+        done: List[Completion] = []
+        while self._queue:
+            full = self._queued_rows >= self.max_bucket
+            due = self._queue[0].deadline <= now
+            if not (full or due or force):
+                break
+            done.extend(self.run_one(now)[0])
+        return done
+
+    def flush(self, now: Optional[float] = None) -> List[Completion]:
+        return self.pump(now, force=True)
+
+    # ------------------------------------------------------------ results
+
+    def result(self, rid: int) -> Optional[Completion]:
+        """Pop a completed request's result (None while still queued)."""
+        return self._results.pop(rid, None)
+
+    def serve(self, xs: Sequence) -> List[jax.Array]:
+        """Synchronous convenience: submit every request, drain the queue,
+        return logits in submission order."""
+        rids = [self.submit(x) for x in xs]
+        self.flush()
+        return [self.result(r).y for r in rids]
+
+
+def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
+           max_delay: float = 2e-3, max_bucket: Optional[int] = None,
+           service_times: Optional[Dict[int, float]] = None) -> dict:
+    """Replay a ragged arrival trace through the engine, work-conserving:
+    the (single) execution stream starts a bucket as soon as it is free
+    and work is queued, absorbing every request that arrived by then —
+    continuous batching under backlog, immediate dispatch when idle.
+
+    ``arrivals`` are virtual timestamps (e.g. a Poisson process);
+    launches run for real on device.  When ``service_times`` maps bucket
+    rows → seconds (a pre-calibrated table), the virtual clock advances by
+    the table instead of the noisy live measurement — the live run still
+    produces (and scatters) every result.  Returns per-request latencies
+    and throughput over the virtual makespan.
+    """
+    order = np.argsort(np.asarray(arrivals), kind="stable")
+    batcher = MicroBatcher(plan, max_delay=max_delay, max_bucket=max_bucket)
+    todo = collections.deque(
+        (float(arrivals[i]), int(i)) for i in order)
+    completions: Dict[int, Completion] = {}
+    finish: Dict[int, float] = {}
+    rid_to_req: Dict[int, int] = {}
+    engine_free = 0.0
+    while todo or batcher.pending_rows:
+        if not batcher.pending_rows:
+            t_arr, i = todo.popleft()
+            rid_to_req[batcher.submit(xs[i], now=t_arr)] = i
+        start = max(engine_free, batcher.oldest_arrival())
+        # continuous batching: absorb everything that arrived by the time
+        # this bucket actually launches.
+        while todo and todo[0][0] <= start and \
+                batcher.pending_rows < batcher.max_bucket:
+            t_arr, i = todo.popleft()
+            rid_to_req[batcher.submit(xs[i], now=t_arr)] = i
+        done, bucket, dt = batcher.run_one(now=start)
+        if service_times is not None:
+            dt = service_times.get(bucket, dt)
+        engine_free = start + dt
+        for c in done:
+            completions[rid_to_req[c.rid]] = c
+            finish[rid_to_req[c.rid]] = engine_free
+    n = len(xs)
+    lat = np.asarray([finish[i] - float(arrivals[i]) for i in range(n)])
+    makespan = max(max(finish.values()), max(float(a) for a in arrivals))
+    return {
+        "results": [completions[i].y for i in range(n)],
+        "latency_mean_ms": float(lat.mean() * 1e3),
+        "latency_p95_ms": float(np.percentile(lat, 95) * 1e3),
+        "latency_max_ms": float(lat.max() * 1e3),
+        "makespan_s": float(makespan),
+        "throughput_rps": n / max(makespan, 1e-12),
+        "stats": batcher.stats,
+    }

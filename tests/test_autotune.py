@@ -188,6 +188,68 @@ def test_failed_candidates_fall_back_to_heuristic(tuner_cache):
     assert cfg.source == "heuristic"
 
 
+def test_elementwise_cache_key_distinct_from_matmul(tuner_cache):
+    """ecl_quant's (block_r, block_c) entries live under k=0 + an op extra:
+    they must never collide with a matmul shape's blocks (satellite
+    cache-key contract)."""
+    ew = autotune.cache_key(256, 0, 512, dtype="float32", fused=False,
+                            backend="tpu", extra="eclquant")
+    mm = autotune.cache_key(256, 0, 512, dtype="float32", fused=False,
+                            backend="tpu")
+    assert ew != mm
+    autotune.get_elementwise_config(256, 512, backend="tpu")
+    autotune.get_block_config(256, 0, 512, dtype="float32", fused=False,
+                              backend="tpu")
+    raw = json.loads(tuner_cache.read_text())
+    assert len(raw) == 2
+    assert ew in raw
+
+
+def test_elementwise_cold_sweep_persists_and_warm_hit(tuner_cache):
+    measured = []
+
+    def fake_measure(cfg):
+        measured.append(cfg)
+        return 1.0 / (cfg.block_m * 1e3 + cfg.block_n)
+
+    cold = autotune.get_elementwise_config(300, 700, backend="tpu",
+                                           measure=fake_measure)
+    assert measured and cold.source == "sweep"
+    assert cold.block_k == 0               # elementwise sentinel
+    autotune.clear_memory_cache()
+    warm = autotune.get_elementwise_config(
+        300, 700, backend="tpu",
+        measure=lambda c: measured.append(("again", c)) or 0.0)
+    assert not any(isinstance(m, tuple) for m in measured), \
+        "warm hit must not re-measure"
+    assert warm.same_blocks(cold)
+
+
+def test_elementwise_heuristic_clamps_to_problem():
+    cfg = autotune.heuristic_elementwise_blocks(5, 30, backend="tpu")
+    assert cfg.block_m == 8 and cfg.block_n == 128
+    big = autotune.heuristic_elementwise_blocks(4096, 4096, backend="tpu")
+    assert 9 * big.block_m * big.block_n <= 4 << 20
+
+
+def test_ecl_quant_autotuned_blocks_match_ref(tuner_cache):
+    """ops.ecl_quant with block_r/block_c=None (the new default) resolves
+    via the autotuner and stays bit-accurate vs the oracle."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(100, 30)), jnp.float32)
+    omega = jnp.asarray(rng.normal(size=4) * 0.3, jnp.float32)
+    probs = jnp.asarray(rng.dirichlet(np.ones(16)), jnp.float32)
+    penalty = 0.05 * -jnp.log2(jnp.clip(probs, 1e-8, 1.0))
+    ck, wk = ops.ecl_quant(w, omega, penalty, use_kernel=True,
+                           interpret=True)
+    cr, wr = ref.ecl_quant_ref(w, omega, penalty)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_allclose(wk, wr, atol=1e-5)
+    raw = json.loads(tuner_cache.read_text())
+    assert any("eclquant" in k for k in raw), \
+        "interpret-mode resolution must land under the eclquant key"
+
+
 def test_ops_autotuned_blocks_match_ref(tuner_cache):
     """fantastic4_matmul with block_*=None (autotuned) stays bit-accurate."""
     rng = np.random.default_rng(0)

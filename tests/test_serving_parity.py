@@ -5,8 +5,8 @@ Five serving paths exist for a frozen pack and they must not drift:
     fp32:  oracle chain │ per-layer kernel │ fused megakernel
     int8:  oracle chain │ per-layer kernel │ fused megakernel
 
-plus the double-buffered megakernel variant and the VMEM-overflow fallback
-of each fused path.  Contracts checked here:
+plus the double-buffered and weight-stationary megakernel variants and the
+VMEM-overflow fallback of each fused path.  Contracts checked here:
 
 * fp32 paths agree with the pure-jnp oracle to close tolerance (f32
   accumulation noise only).
@@ -15,7 +15,9 @@ of each fused path.  Contracts checked here:
   scale-folding arithmetic term for term (the §VI-C contract; asserted
   with ``assert_array_equal``).  The int8 oracle is a different fp
   implementation, so a quantization-boundary flip is possible there; it
-  gets a relative gate instead.
+  gets a relative gate instead.  The weight-stationary schedule's bitwise
+  anchor is the batch-tiled megakernel (identical decode + epilogue; only
+  the dataflow and K-padding width differ).
 * the fallback path engages (budget=1) and changes nothing.
 
 The sweep is hypothesis-driven when hypothesis is installed; a
@@ -77,18 +79,32 @@ def _check_parity(dims, batch, seed):
             y, y_oracle, atol=1e-3, rtol=1e-4,
             err_msg=f"fp32 {name} drifted from oracle ({dims}, b={batch})")
 
+    # ---- weight-stationary schedule (the engine's latency bucket)
+    y_ws = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                    weight_stationary=True)
+    np.testing.assert_allclose(
+        y_ws, y_oracle, atol=1e-3, rtol=1e-4,
+        err_msg=f"fp32 weight-stationary drifted ({dims}, b={batch})")
+
     # ---- int8 kernel paths: exact agreement on the quantized datapath
     i8_layer = M.mlp_serve_int8(pack, calib, x, use_kernel=True,
                                 fused=False, interpret=True)
     i8_fused = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True)
     i8_db = M.mlp_serve_int8(pack, calib, x, fused=True, interpret=True,
                              double_buffer=True)
+    i8_ws = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                     weight_stationary=True,
+                                     act_dtype="int8",
+                                     act_scales=calib["act_scales"])
     np.testing.assert_array_equal(
         np.asarray(i8_fused), np.asarray(i8_layer),
         err_msg=f"int8 fused != per-layer chain ({dims}, b={batch})")
     np.testing.assert_array_equal(
         np.asarray(i8_db), np.asarray(i8_fused),
         err_msg=f"int8 double-buffer != fused ({dims}, b={batch})")
+    np.testing.assert_array_equal(
+        np.asarray(i8_ws), np.asarray(i8_fused),
+        err_msg=f"int8 weight-stationary != fused ({dims}, b={batch})")
 
     # ---- int8 oracle: different fp implementation — relative gate only
     # (a quantization-boundary flip is legitimate there)

@@ -1,0 +1,173 @@
+"""ExecutionPlan: mode/bucket resolution, entry caching, and parity of the
+weight-stationary latency schedule against the batch-tiled megakernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.core import bitplanes as bp
+from repro.kernels import ops
+
+
+def _rand_pack(dims, seed=0):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        codes = rng.integers(0, 16, size=(k + (k % 2), n)).astype(np.uint8)
+        if k % 2:
+            codes[-1] = 0
+        layers.append({
+            "packed": bp.pack_codes_rows(jnp.asarray(codes)),
+            "omega": jnp.asarray(rng.normal(size=4) / np.sqrt(k), jnp.float32),
+            "alpha1": jnp.asarray(rng.normal(size=n) * 0.5, jnp.float32),
+            "bias": jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32),
+            "alpha2": jnp.asarray(np.float32(1.0)),
+            "shape": (k, n),
+            "activation": "relu" if i < len(dims) - 2 else None,
+        })
+    return {"layers": layers, "act_bits": None}
+
+
+DIMS = (33, 129, 71, 7)
+
+
+def test_auto_resolves_fused_and_buckets_are_pow2():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="auto", interpret=True)
+    d = plan.describe()
+    assert d["resolved_mode"] == "fused"
+    assert d["bucket_sizes"] == sorted(d["bucket_sizes"])
+    assert all(b & (b - 1) == 0 for b in d["bucket_sizes"])
+    assert d["bucket_sizes"][0] == 1
+    assert max(d["bucket_sizes"]) <= max(d["block_m"], 1)
+
+
+def test_vmem_overflow_resolves_to_per_layer_with_note():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused", interpret=True,
+                              vmem_budget_bytes=1)
+    d = plan.describe()
+    assert d["resolved_mode"] == "per_layer"
+    assert any("VMEM" in n for n in d["notes"])
+    # and it still serves correctly
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, DIMS[0])),
+                    jnp.float32)
+    oracle = serving.build_plan(_rand_pack(DIMS), mode="oracle")
+    np.testing.assert_allclose(plan.run(x), oracle.run(x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_bucket_paths_ws_db_and_plain():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused", interpret=True,
+                              double_buffer=True)
+    paths = plan.describe()["bucket_paths"]
+    assert paths[1] == "fused_ws" and paths[8] == "fused_ws"
+    assert paths[16] == "fused_db"
+    assert plan.path_for(9) in ("fused", "fused_db")
+    # batch label reflects the resolved bucket, not the request flags
+    assert "weight-stationary" in plan.mode_label(1)
+    assert "double-buffered" in plan.mode_label(16)
+
+
+def test_double_buffer_note_when_it_cannot_engage():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="per_layer",
+                              interpret=True, double_buffer=True)
+    assert any("double_buffer" in n for n in plan.notes)
+
+
+def test_run_pads_to_bucket_and_slices_back():
+    pack = _rand_pack(DIMS)
+    plan = serving.build_plan(pack, mode="fused", interpret=True)
+    oracle = serving.build_plan(pack, mode="oracle")
+    for m in (1, 3, 5, 8, 13):
+        x = jnp.asarray(np.random.default_rng(m).normal(size=(m, DIMS[0])),
+                        jnp.float32)
+        y = plan.run(x)
+        assert y.shape == (m, DIMS[-1])
+        np.testing.assert_allclose(y, oracle.run(x), atol=1e-3, rtol=1e-4)
+
+
+def test_entry_is_cached_and_shape_checked():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused", interpret=True)
+    assert plan.entry(4) is plan.entry(4)
+    with pytest.raises(KeyError):
+        plan.entry(3)                      # not a bucket
+    with pytest.raises(AssertionError):
+        plan.entry(4)(jnp.zeros((5, DIMS[0]), jnp.float32))
+
+
+def test_int8_calibration_happens_once_and_matches_chain():
+    pack = _rand_pack(DIMS, seed=3)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, DIMS[0])),
+                    jnp.float32)
+    calib = serving.calibrate_act_scales(pack, x)
+    plan = serving.build_plan(pack, mode="fused", act_dtype="int8",
+                              calib=calib, interpret=True)
+    y_plan = plan.run(x)
+    y_chain = ops.fantastic4_mlp_chain_int8(
+        x, pack["layers"], calib["act_scales"], use_kernel=True,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_chain))
+    # without calib, the plan self-calibrates on a synthetic batch + notes it
+    plan2 = serving.build_plan(pack, mode="fused", act_dtype="int8",
+                               interpret=True)
+    assert plan2.act_scales is not None
+    assert any("calibration" in n for n in plan2.notes)
+
+
+def test_ws_schedule_matches_batch_tiled_megakernel():
+    """The weight-stationary latency path reproduces the batch-tiled
+    megakernel: allclose on fp32, bit-for-bit on the int8 grid (they share
+    decode + epilogue arithmetic; only the dataflow differs)."""
+    for dims in (DIMS, (512, 512, 256, 12), (47, 96, 13)):
+        pack = _rand_pack(dims, seed=sum(dims))
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(4, dims[0])),
+                        jnp.float32)
+        calib = serving.calibrate_act_scales(pack, x)
+        y_ws = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                        weight_stationary=True)
+        y_mk = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True)
+        np.testing.assert_allclose(y_ws, y_mk, atol=1e-4, rtol=1e-5)
+        i_ws = ops.fantastic4_mlp_fused(
+            x, pack["layers"], interpret=True, weight_stationary=True,
+            act_dtype="int8", act_scales=calib["act_scales"])
+        i_mk = ops.fantastic4_mlp_fused(
+            x, pack["layers"], interpret=True,
+            act_dtype="int8", act_scales=calib["act_scales"])
+        np.testing.assert_array_equal(np.asarray(i_ws), np.asarray(i_mk),
+                                      err_msg=str(dims))
+
+
+def test_ws_overbudget_falls_back_to_chain():
+    pack = _rand_pack(DIMS, seed=5)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, DIMS[0])),
+                    jnp.float32)
+    y_fb = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                    weight_stationary=True,
+                                    vmem_budget_bytes=1)
+    y_ch = ops.fantastic4_mlp_chain(x, pack["layers"], use_kernel=True,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_fb), np.asarray(y_ch))
+
+
+def test_get_plan_memoizes_per_pack_and_config():
+    pack = _rand_pack(DIMS)
+    a = serving.get_plan(pack, mode="fused", interpret=True)
+    b = serving.get_plan(pack, mode="fused", interpret=True)
+    c = serving.get_plan(pack, mode="per_layer", interpret=True)
+    assert a is b
+    assert a is not c
+    other = _rand_pack(DIMS, seed=9)
+    assert serving.get_plan(other, mode="fused", interpret=True) is not a
+
+
+def test_compat_wrappers_flow_through_plans():
+    """mlp_serve/mlp_serve_int8 are thin shims over ExecutionPlan now —
+    same results, no mode keywords reaching the kernels directly."""
+    from repro.models import mlp as M
+    pack = _rand_pack(DIMS, seed=8)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(5, DIMS[0])),
+                    jnp.float32)
+    plan = serving.build_plan(pack, mode="fused", interpret=True,
+                              ws_bucket_rows=0)
+    np.testing.assert_array_equal(
+        np.asarray(M.mlp_serve(pack, x, interpret=True)),
+        np.asarray(plan.run(x)))
