@@ -5,14 +5,26 @@ For each paper MLP stack and batch in {1, 16, 64, 256}:
 * ``per_layer_ms`` — the ``mode="per_layer"`` plan: L ``pallas_call``
   launches, every inter-layer activation round-trips HBM.
 * ``fused_ms``     — the ``mode="fused"`` plan: one megakernel launch,
-  activations resident in VMEM scratch (the batch≤8 bucket rides the
-  weight-stationary latency schedule).
+  activations resident in VMEM scratch.  Every row carries a
+  ``schedule`` label (``"ws" | "batch_tiled" | "db" | "stream"``) naming
+  the kernel schedule the plan's bucket actually bound for that batch —
+  a b≤8 ``fused_ms`` number silently reflecting the ws path was exactly
+  the ambiguity the label removes.
 
 Both paths flow through ``serving.ExecutionPlan`` — the same resolution
-(autotuned blocks, VMEM-fit, bucket entries) every other entry point uses —
-and run the *actual Pallas kernel body* (interpret mode off-TPU), so the
-comparison is launch-count + data-movement, apples to apples.  A
-correctness check against the jnp-oracle plan gates every row.
+(autotuned blocks, per-bucket schedule binding, VMEM-fit, bucket entries)
+every other entry point uses — and run the *actual Pallas kernel body*
+(interpret mode off-TPU), so the comparison is launch-count +
+data-movement, apples to apples.  A correctness check against the
+jnp-oracle plan gates every row.
+
+A second section, ``schedule_rows``, is the measured per-(bucket,
+schedule) wall-clock table: every eligible schedule timed at every probe
+bucket, the data behind the plan's bucket→schedule bindings.  Off-TPU
+these numbers measure the *interpreter*, whose per-grid-step overhead
+penalises the layer-streamed schedules (ws, stream) — they are recorded
+to document the host's crossover, not as hardware truth (see README
+"Schedule selection" caveats).
 
 Writes results/bench/fused_serving.json and — so the perf trajectory is
 tracked from this PR onward — ``BENCH_fused_serving.json`` at the repo root.
@@ -95,14 +107,80 @@ def _time_pair(fn_a, fn_b, repeats: int) -> tuple:
     return min(ta), min(tb)
 
 
+# probe buckets for the measured per-(bucket, schedule) table: latency,
+# the ws-prior boundary, and two mid-size buckets where the streaming
+# schedule competes.
+SCHED_BUCKETS = (1, 8, 32, 128)
+
+
+def _best_of(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())               # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def schedule_table(cfg, pack, plan, repeats: int) -> list:
+    """Measured wall-clock of every eligible schedule at every probe
+    bucket — the data behind the plan's bucket→schedule bindings (and the
+    record of why a schedule did/didn't win on this host)."""
+    from repro.kernels import ops as kops
+
+    rows = []
+    for b in SCHED_BUCKETS:
+        if b not in plan.buckets:
+            continue
+        eligible = plan._eligible_schedules(b)
+        if not eligible:                 # nothing fits: per-layer bucket
+            continue
+        rng = np.random.default_rng(b)
+        x = jnp.asarray(rng.normal(size=(b, cfg.d_in)), jnp.float32)
+        bound = plan.buckets[b]
+        for sched in eligible:
+            if sched == "stream":
+                # probe the schedule in its streaming regime (≥2 batch
+                # tiles where the bucket allows), not as a one-tile
+                # degenerate case of ws.
+                bm = max(8, b // 2)
+            else:
+                bm = bound.block_m or min(b, plan.block_m or 128)
+            t = _best_of(lambda: kops.fantastic4_mlp_fused(
+                x, pack["layers"], use_kernel=True,
+                interpret=plan.interpret, block_m=bm,
+                schedule=sched), repeats)
+            rows.append({"model": cfg.name, "bucket": b,
+                         "schedule": sched, "block_m": bm,
+                         "ms": t * 1e3,
+                         "bound": sched == plan.schedule_for(b)})
+        won = plan.schedule_for(b)
+        best = min((r for r in rows if r["model"] == cfg.name
+                    and r["bucket"] == b), key=lambda r: r["ms"])
+        print(f"{cfg.name:12s} bucket={b:<4d} bound={won:12s} "
+              f"measured-best={best['schedule']:12s} "
+              f"({best['ms']:.2f} ms)", flush=True)
+    return rows
+
+
 def run(fast: bool = False):
     repeats = 5 if fast else 15
     rows = []
+    sched_rows = []
+    bucket_schedules = {}
     for cfg in (MLP_GSC, MLP_HR):
         pack = _rand_pack(cfg)
         plan_fused = serving.build_plan(pack, mode="fused")
         plan_layer = serving.build_plan(pack, mode="per_layer")
         plan_oracle = serving.build_plan(pack, mode="oracle")
+        desc = plan_fused.describe()
+        bucket_schedules[cfg.name] = {
+            "buckets": {str(b): s for b, s in
+                        desc["bucket_schedules"].items()},
+            "ws_crossover_rows": desc["ws_crossover_rows"],
+            "ws_prior_rows": desc["ws_prior_rows"],
+            "ws_prior_source": desc["ws_prior_source"]}
         for batch in BATCHES:
             rng = np.random.default_rng(batch)
             x = jnp.asarray(rng.normal(size=(batch, cfg.d_in)), jnp.float32)
@@ -117,6 +195,7 @@ def run(fast: bool = False):
                 lambda: plan_layer.run(x),
                 lambda: plan_fused.run(x), repeats)
             row = {"model": cfg.name, "batch": batch,
+                   "schedule": plan_fused.schedule_for(batch),
                    "per_layer_ms": t_layer * 1e3,
                    "fused_ms": t_fused * 1e3,
                    "speedup": t_layer / max(t_fused, 1e-12),
@@ -126,11 +205,21 @@ def run(fast: bool = False):
             rows.append(row)
             print(f"{cfg.name:12s} b={batch:<4d} per-layer "
                   f"{row['per_layer_ms']:8.2f} ms  fused "
-                  f"{row['fused_ms']:8.2f} ms  ({row['speedup']:.2f}x)  "
-                  f"err {err:.1e}", flush=True)
+                  f"{row['fused_ms']:8.2f} ms [{row['schedule']}]  "
+                  f"({row['speedup']:.2f}x)  err {err:.1e}", flush=True)
+        sched_rows.extend(schedule_table(cfg, pack, plan_fused,
+                                         repeats=3 if fast else 7))
 
     payload = {"backend": jax.default_backend(), "batches": list(BATCHES),
                "rows": rows,
+               "schedule_rows": sched_rows,
+               "bucket_schedules": bucket_schedules,
+               "schedule_caveat": (
+                   "off-TPU schedule_rows time the Pallas *interpreter*: "
+                   "per-grid-step overhead penalises the layer-streamed "
+                   "schedules (ws/stream), so their crossover here is a "
+                   "property of the host, not the hardware — re-tune on "
+                   "a real backend before trusting bindings"),
                "fused_not_slower_at_64": all(
                    r["speedup"] >= 0.95 for r in rows if r["batch"] == 64)}
     save("fused_serving", payload)

@@ -83,6 +83,9 @@ def run(fast: bool = False):
             t_i8l = _best_of(lambda: plan_i8l.run(x), repeats)
             t_i8f = _best_of(lambda: plan_i8f.run(x), repeats)
             row = {"model": cfg.name, "batch": batch,
+                   # the kernel schedule the int8 fused plan's bucket
+                   # actually bound for this batch (ws|batch_tiled|db|stream)
+                   "schedule": plan_i8f.schedule_for(batch),
                    "fp32_fused_ms": t_f32 * 1e3,
                    "int8_layer_ms": t_i8l * 1e3,
                    "int8_fused_ms": t_i8f * 1e3,
@@ -92,7 +95,7 @@ def run(fast: bool = False):
             print(f"{cfg.name:12s} b={batch:<4d} fp32-fused "
                   f"{row['fp32_fused_ms']:8.2f} ms  int8-layer "
                   f"{row['int8_layer_ms']:8.2f} ms  int8-fused "
-                  f"{row['int8_fused_ms']:8.2f} ms  "
+                  f"{row['int8_fused_ms']:8.2f} ms [{row['schedule']}]  "
                   f"({row['int8_fused_speedup_vs_layer']:.2f}x vs layer)",
                   flush=True)
 

@@ -74,6 +74,22 @@ def run(fast: bool = False):
     for cfg in (MLP_GSC, MLP_HR):
         pack = _rand_pack(cfg)
         plan = serving.build_plan(pack, mode="fused")
+        # same "print what actually executed" rule as launch/serve.py:
+        # the per-bucket schedule table of the resolved plan, BEFORE the
+        # replay is timed — the service-time table below is per bucket,
+        # so each number is only meaningful against its schedule.
+        desc = plan.describe()
+        bucket_schedules = {str(b): s for b, s in
+                            desc["bucket_schedules"].items()}
+        print(f"{cfg.name}: bucket -> schedule " + ", ".join(
+            f"{b}:{desc['bucket_schedules'][b]}"
+            f"[bm={desc['bucket_block_m'][b]},{desc['bucket_sources'][b]}]"
+            for b in desc["bucket_sizes"])
+            + f"; ws crossover {desc['ws_crossover_rows']} rows "
+              f"(prior {desc['ws_prior_rows']} "
+              f"[{desc['ws_prior_source']}])", flush=True)
+        for note in desc["notes"]:
+            print(f"{cfg.name}: note: {note}", flush=True)
         table = _service_table(plan, repeats=3 if fast else 5)
         t1 = table[1]
         xs = _requests(cfg, n_req, seed=7)
@@ -99,6 +115,7 @@ def run(fast: bool = False):
                 "model": cfg.name, "load": load,
                 "arrival_rps": lam, "requests": n_req,
                 "rows_total": total_rows,
+                "bucket_schedules": bucket_schedules,
                 "naive_throughput_rps": naive["throughput_rps"],
                 "engine_throughput_rps": engine["throughput_rps"],
                 "throughput_gain": engine["throughput_rps"]

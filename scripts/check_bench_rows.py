@@ -1,15 +1,32 @@
-"""Guard the cross-PR perf trajectory: BENCH_fused_serving.json must never
-lose rows a previous run had.
+"""Guard the cross-PR perf trajectory carried by BENCH_fused_serving.json.
 
     python scripts/check_bench_rows.py snapshot ROWS_FILE   # before benches
     python scripts/check_bench_rows.py check ROWS_FILE      # after benches
 
-``snapshot`` records the identity of every row present in the current
-repo-root JSON (per section: fp32 ``rows`` and ``int8_rows`` keyed by
-(model, batch), ``serving_engine_rows`` by (model, load)).  ``check``
-fails loudly if any recorded identity is missing afterwards — a benchmark
-that silently stopped emitting a section would otherwise ship a shrunken
-perf file and break the PR-over-PR comparison.
+``snapshot`` records, for every row present in the current repo-root JSON,
+its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
+(model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
+by (model, bucket, schedule)) and its guarded metric.  ``check`` then fails
+loudly if, after the benchmarks reran:
+
+* any recorded row identity is missing — a benchmark that silently stopped
+  emitting a section would ship a shrunken perf file and break the
+  PR-over-PR comparison;
+* any ``rows`` / ``int8_rows`` row lost its ``schedule`` label — the label
+  says which kernel schedule produced the number, without it a b≤8
+  ``fused_ms`` entry is ambiguous between the ws and batch-tiled paths;
+* any guarded metric regressed more than ``CI_BENCH_REGRESSION_PCT``
+  (default 25) percent against the snapshot.  The guarded metrics are the
+  rows' *self-normalized A/B ratios* (fused-vs-per-layer ``speedup``,
+  ``int8_fused_speedup_vs_layer``, engine-vs-naive ``throughput_gain``)
+  rather than absolute ms/rps: on a shared host absolute wall-clock
+  tracks machine load (and the engine's low-load throughput is
+  arrival-rate-bound by construction), while the ratios compare two
+  paths measured interleaved on the same host and are what the perf
+  trajectory actually promises.  Set the env var to 0 or less to disable
+  the regression leg (e.g. on a deliberately slower host); the row-loss
+  and label guards always run.  ``scripts/ci.sh`` widens the bound on
+  interpret hosts — see the measurement note there.
 """
 from __future__ import annotations
 
@@ -24,22 +41,106 @@ SECTIONS = {
     "rows": ("model", "batch"),
     "int8_rows": ("model", "batch"),
     "serving_engine_rows": ("model", "load"),
+    "schedule_rows": ("model", "bucket", "schedule"),
 }
 
+# guarded metric per section and the direction that counts as regression.
+# schedule_rows carries interpreter-grade timings recorded for
+# documentation, not hardware truth — identity-guarded only.
+METRICS = {
+    "rows": ("speedup", "higher_is_better"),
+    "int8_rows": ("int8_fused_speedup_vs_layer", "higher_is_better"),
+    "serving_engine_rows": ("throughput_gain", "higher_is_better"),
+}
 
-def row_ids(path: str = ROOT_JSON) -> list:
+# sections whose rows must name the kernel schedule that produced them
+LABELED = ("rows", "int8_rows")
+
+
+def _load(path: str = ROOT_JSON) -> dict:
     if not os.path.exists(path):
-        return []
+        return {}
     try:
         with open(path) as f:
-            data = json.load(f)
+            return json.load(f)
     except ValueError:
-        return []
-    ids = []
+        return {}
+
+
+def row_records(path: str = ROOT_JSON) -> list:
+    """[[section, *key_values, metric_or_None], ...] for every row."""
+    data = _load(path)
+    records = []
     for section, keys in SECTIONS.items():
+        metric = METRICS.get(section, (None,))[0]
         for row in data.get(section, []):
-            ids.append([section] + [row.get(k) for k in keys])
-    return ids
+            val = row.get(metric) if metric else None
+            records.append([section] + [row.get(k) for k in keys] + [val])
+    return records
+
+
+def regression_pct() -> float:
+    try:
+        return float(os.environ.get("CI_BENCH_REGRESSION_PCT", "25"))
+    except ValueError:
+        return 25.0
+
+
+def check(rows_file: str, path: str = ROOT_JSON) -> int:
+    with open(rows_file) as f:
+        before = json.load(f)
+    after = {tuple(r[:-1]): r[-1] for r in row_records(path)}
+    failures = []
+
+    for rec in before:
+        section = rec[0] if rec else None
+        if section not in SECTIONS:
+            continue                     # section retired: nothing to hold
+        if len(rec) == len(SECTIONS[section]) + 2:
+            rid, old_val = tuple(rec[:-1]), rec[-1]
+        else:
+            # pre-metric snapshot (older format): identity only
+            rid, old_val = tuple(rec), None
+        if rid not in after:
+            failures.append(f"lost row {rid}")
+            continue
+        pct = regression_pct()
+        if pct <= 0 or old_val is None or section not in METRICS:
+            continue
+        metric, direction = METRICS[section]
+        new_val = after[rid]
+        if not isinstance(old_val, (int, float)) or \
+                not isinstance(new_val, (int, float)):
+            continue
+        if direction == "lower_is_better":
+            if new_val > old_val * (1 + pct / 100.0):
+                failures.append(
+                    f"{rid}: {metric} regressed {old_val:.3f} -> "
+                    f"{new_val:.3f} (> {pct:.0f}% bound)")
+        else:
+            if new_val < old_val * (1 - pct / 100.0):
+                failures.append(
+                    f"{rid}: {metric} regressed {old_val:.3f} -> "
+                    f"{new_val:.3f} (> {pct:.0f}% bound)")
+
+    data = _load(path)
+    for section in LABELED:
+        for row in data.get(section, []):
+            if not row.get("schedule"):
+                keys = SECTIONS[section]
+                rid = [section] + [row.get(k) for k in keys]
+                failures.append(f"{rid}: missing schedule label")
+
+    if failures:
+        print("BENCH_fused_serving.json failed the bench guard:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    new_rows = len(after) - len({tuple(r[:-1]) for r in before
+                                 if tuple(r[:-1]) in after})
+    print(f"bench rows OK ({len(before)} guarded, {max(new_rows, 0)} new; "
+          f"regression bound {regression_pct():.0f}%)")
+    return 0
 
 
 def main(argv) -> int:
@@ -48,22 +149,12 @@ def main(argv) -> int:
         return 2
     cmd, rows_file = argv[1], argv[2]
     if cmd == "snapshot":
+        records = row_records()
         with open(rows_file, "w") as f:
-            json.dump(row_ids(), f)
-        print(f"snapshotted {len(row_ids())} bench rows -> {rows_file}")
+            json.dump(records, f)
+        print(f"snapshotted {len(records)} bench rows -> {rows_file}")
         return 0
-    with open(rows_file) as f:
-        before = [tuple(r) for r in json.load(f)]
-    after = {tuple(r) for r in row_ids()}
-    missing = [r for r in before if r not in after]
-    if missing:
-        print("BENCH_fused_serving.json lost previously present rows:")
-        for r in missing:
-            print(f"  {r}")
-        return 1
-    print(f"bench rows OK ({len(before)} preserved, "
-          f"{len(after) - len(set(before))} new)")
-    return 0
+    return check(rows_file)
 
 
 if __name__ == "__main__":

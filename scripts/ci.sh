@@ -8,10 +8,13 @@
 # The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode —
 # including bench_serving_engine (ragged-arrival engine vs naive) — and
 # rewrites BENCH_fused_serving.json at the repo root (fp32 rows + int8_rows
-# + serving_engine_rows), so every PR leaves the cross-PR perf trajectory
-# current.  A benchmark overrun (budget exceeded) fails CI loudly rather
-# than silently shipping a stale perf file, and scripts/check_bench_rows.py
-# fails the run if the refreshed JSON lost rows a previous run had.
+# + serving_engine_rows + schedule_rows), so every PR leaves the cross-PR
+# perf trajectory current.  A benchmark overrun (budget exceeded) fails CI
+# loudly rather than silently shipping a stale perf file, and
+# scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows
+# the committed baseline had, dropped a row's kernel-schedule label, or
+# regressed a guarded metric more than CI_BENCH_REGRESSION_PCT (default
+# 25%; <=0 disables the regression leg only).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,6 +25,12 @@ python -m pytest -x -q
 
 if [[ "${CI_SKIP_BENCH:-0}" != "1" ]]; then
     budget="${CI_BENCH_BUDGET_S:-1200}"
+    # Regression bound: 25% is the contract on real backends, but on the
+    # shared interpret host small-batch rows swing up to ~47% run-to-run
+    # (measured: ratio metrics across two back-to-back --fast runs), so CI
+    # widens the bound rather than flaking on host load.  Tighten this
+    # once the benches run on hardware with stable clocks.
+    export CI_BENCH_REGRESSION_PCT="${CI_BENCH_REGRESSION_PCT:-60}"
     rows_snapshot="$(mktemp)"
     trap 'rm -f "$rows_snapshot"' EXIT
     python scripts/check_bench_rows.py snapshot "$rows_snapshot"

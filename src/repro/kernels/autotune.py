@@ -26,6 +26,22 @@ per-shape blocks instead, in three tiers:
 whenever a block size is left as ``None`` — the default for every entry
 point (serving launcher, benchmarks, models), so all of them exercise the
 same tuned configuration.
+
+**Autotuner v2 — schedule-aware bucket tuning.**  The serving engine runs
+four fused kernel schedules (batch-tiled / double-buffered / weight-
+stationary / decode-amortized streaming) and the right one depends on the
+batch bucket, not just the shape: the tuning unit is ``(bucket_rows,
+schedule)``.  :func:`get_schedule_config` resolves one bucket's binding —
+a timed sweep over every eligible ``(schedule, block_m)`` candidate on a
+real backend, a dataflow prior plus migration from the old single-entry
+fused keys otherwise — and persists it in the same JSON cache under a
+``…|bucket`` key whose value carries a ``schedule`` field.  Old cache
+files (block-only values, single fused entry tuned at the largest bucket)
+load unchanged and seed the per-bucket entries instead of being
+discarded.  The measured ws↔batch-tiled crossover row count is stored
+alongside (:func:`record_ws_crossover` / :func:`get_ws_crossover`) so a
+committed TPU cache replaces the ``WS_BUCKET_ROWS`` constant with a
+measurement.
 """
 from __future__ import annotations
 
@@ -33,7 +49,7 @@ import dataclasses
 import json
 import os
 import threading
-from typing import Callable, Dict, Iterable, Optional, Sequence
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 
@@ -44,13 +60,23 @@ ENV_CACHE = "FANTASTIC4_AUTOTUNE_CACHE"
 SUBLANE = 8
 LANE = 128
 
+# the fused megakernel schedules a bucket can bind to (serving.plans maps
+# these onto its bucket paths); "ws_crossover" additionally marks the
+# stored ws↔batch-tiled crossover entry, which is metadata, not a schedule.
+SCHEDULES = ("ws", "batch_tiled", "db", "stream")
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockConfig:
     block_m: int
     block_n: int
     block_k: int
-    source: str = "heuristic"          # "heuristic" | "sweep" | "cache"
+    source: str = "heuristic"  # "heuristic" | "sweep" | "cache" | "migrated"
+    schedule: Optional[str] = None     # set on (bucket, schedule) entries
+    # the eligible set a (bucket, schedule) sweep actually measured over:
+    # a cached winner only answers callers whose eligible set it covered
+    # (a ws-opt-out plan's sweep must not shadow a default plan's)
+    swept: Optional[Tuple[str, ...]] = None
 
     def as_tuple(self) -> tuple:
         return (self.block_m, self.block_n, self.block_k)
@@ -121,9 +147,14 @@ def _load_disk_locked() -> None:
         return
     for key, v in raw.items():
         try:
+            sched = v.get("schedule")
+            swept = v.get("swept")
             cfg = BlockConfig(int(v["block_m"]), int(v["block_n"]),
                               int(v["block_k"]),
-                              source=v.get("source", "cache"))
+                              source=v.get("source", "cache"),
+                              schedule=str(sched) if sched else None,
+                              swept=tuple(str(s) for s in swept)
+                              if swept else None)
         except (KeyError, TypeError, ValueError):
             continue                     # stale/corrupt entry: ignore
         key = _migrate_key(key)          # pre-act_dtype files -> actfloat32
@@ -134,9 +165,15 @@ def _load_disk_locked() -> None:
 def _save_disk_locked() -> None:
     path = cache_path()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    payload = {key: {"block_m": c.block_m, "block_n": c.block_n,
-                     "block_k": c.block_k, "source": c.source}
-               for key, c in sorted(_memory.items())}
+    payload = {}
+    for key, c in sorted(_memory.items()):
+        entry = {"block_m": c.block_m, "block_n": c.block_n,
+                 "block_k": c.block_k, "source": c.source}
+        if c.schedule is not None:       # block-only entries keep the old
+            entry["schedule"] = c.schedule   # format byte for byte
+        if c.swept is not None:
+            entry["swept"] = list(c.swept)
+        payload[key] = entry
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=2)
@@ -310,3 +347,210 @@ def get_block_config(m: int, k: int, n: int, *,
         heuristic=lambda: heuristic_blocks(m, k, n, fused=fused,
                                            backend=backend),
         persist=persist)
+
+
+# --------------------------------------- v2: (bucket, schedule) tuning unit
+
+def bucket_cache_key(rows: int, k: int, n: int, *, dtype: str = "float32",
+                     backend: Optional[str] = None,
+                     act_dtype: str = "float32", stack: str = "") -> str:
+    """Key of one batch bucket's (schedule, block_m) binding."""
+    backend = backend or jax.default_backend()
+    return cache_key(rows, k, n, dtype=dtype, fused=True, backend=backend,
+                     act_dtype=act_dtype,
+                     extra=(f"{stack}|" if stack else "") + "bucket")
+
+
+def ws_crossover_key(k: int, n: int, *, dtype: str = "float32",
+                     backend: Optional[str] = None,
+                     act_dtype: str = "float32", stack: str = "") -> str:
+    backend = backend or jax.default_backend()
+    return cache_key(0, k, n, dtype=dtype, fused=True, backend=backend,
+                     act_dtype=act_dtype,
+                     extra=(f"{stack}|" if stack else "") + "wscross")
+
+
+def candidate_schedule_blocks(rows: int, schedules: Sequence[str]
+                              ) -> Sequence[Tuple[str, int]]:
+    """Candidate (schedule, block_m) grid for one bucket's timed sweep.
+
+    ``ws`` holds the whole (padded) bucket in its scratch — block_m is not
+    a free variable there; the tiled schedules sweep the shape-clamped
+    block_m ladder (``db`` needs two whole sublane groups per tile, so its
+    candidates keep to multiples of 16).
+    """
+    mp = _round_up(rows, SUBLANE)
+    out = []
+    for sched in schedules:
+        if sched == "ws":
+            out.append((sched, mp))
+            continue
+        bms = sorted({min(mp, v) for v in (32, 64, 128, 256)})
+        if sched == "db":
+            bms = [b for b in bms if b % 16 == 0]
+        out.extend((sched, bm) for bm in bms)
+    return out
+
+
+def get_schedule_config(rows: int, k: int, n: int, *,
+                        schedules: Sequence[str],
+                        prior: str,
+                        dtype: str = "float32",
+                        backend: Optional[str] = None,
+                        act_dtype: str = "float32",
+                        stack: str = "",
+                        measure: Optional[
+                            Callable[[str, int], float]] = None,
+                        legacy_m: Optional[int] = None,
+                        block_m_hint: Optional[int] = None,
+                        persist: bool = True) -> BlockConfig:
+    """Resolve one batch bucket's (schedule, block_m) binding.
+
+    ``schedules`` is the bucket's *eligible* set (VMEM-fit and opt-outs
+    already applied by the caller, in plans); ``prior`` the dataflow-
+    motivated pre-measurement answer.  ``measure(schedule, block_m) ->
+    seconds`` runs the actual kernel on a real backend (``inf`` =
+    candidate failed); without it — the interpret/CPU tier, where timing
+    the interpreter is meaningless — the prior answers, with ``block_m``
+    migrated from the old single-entry fused key (``legacy_m`` = the rows
+    it was tuned at) or from ``block_m_hint`` rather than re-derived.
+
+    Cache-validity is *eligibility-aware*: an entry records the set it was
+    swept over (``swept``) and only answers callers whose eligible set it
+    covered.  When coverage is incomplete (or the cached winner is one the
+    caller forbids — e.g. a measured ``ws`` binding under
+    ``ws_bucket_rows=0`` opt-out) and a ``measure`` is available, the
+    sweep runs over the *union* of the caller's set and the entry's
+    covered set: the stored entry becomes the union's winner (valid for
+    every caller the union covers, so two plans with different eligible
+    sets converge instead of alternately re-sweeping and shadowing each
+    other), while the caller receives the best candidate *it* is allowed
+    to bind.  Without a measure, a forbidden winner is bypassed but not
+    overwritten — the prior answers uncached and the measurement survives.
+    """
+    if not schedules:
+        raise ValueError("schedules must name at least one eligible "
+                         "schedule")
+    unknown = [s for s in schedules if s not in SCHEDULES]
+    if unknown:
+        raise ValueError(f"unknown schedules {unknown}; valid: {SCHEDULES}")
+    if prior not in schedules:
+        prior = schedules[0]
+    backend = backend or jax.default_backend()
+    key = bucket_cache_key(rows, k, n, dtype=dtype, backend=backend,
+                           act_dtype=act_dtype, stack=stack)
+    with _lock:
+        _load_disk_locked()
+        hit = _memory.get(key)
+    covered: set = set()
+    if hit is not None:
+        covered = set(hit.swept) if hit.swept else \
+            ({hit.schedule} if hit.schedule else set())
+        # a hit answers only when its sweep covered every schedule this
+        # caller may bind (else a restricted plan's winner would shadow
+        # the broader sweep); without a measure it is still the best
+        # measurement this backend has, so take it.
+        if hit.schedule in schedules and \
+                (set(schedules) <= covered or measure is None):
+            return hit
+    mp = _round_up(rows, SUBLANE)
+    cfg = None
+    store = None
+    if measure is not None:
+        # sweep the union of the caller's set and whatever the existing
+        # entry had covered: the stored result then answers both this
+        # caller and the ones the old entry served, so plans with
+        # different eligible sets converge on one complete entry instead
+        # of alternately re-sweeping and shadowing each other.
+        sweep_set = tuple(schedules) + tuple(
+            s for s in SCHEDULES if s in covered and s not in schedules)
+        cands = list(candidate_schedule_blocks(rows, sweep_set))
+        timed = [(measure(s, bm), i) for i, (s, bm) in enumerate(cands)]
+        finite = [(t, i) for t, i in timed if t != float("inf")]
+        caller_finite = [(t, i) for t, i in finite
+                         if cands[i][0] in schedules]
+        if caller_finite:
+            t, i = min(caller_finite)
+            s, bm = cands[i]
+            cfg = BlockConfig(bm, 0, 0, source="sweep", schedule=s,
+                              swept=sweep_set)
+            tu, iu = min(finite)
+            if iu == i:
+                store = cfg
+            else:                        # union winner differs: store it,
+                su, bmu = cands[iu]      # hand the caller its own best
+                store = BlockConfig(bmu, 0, 0, source="sweep",
+                                    schedule=su, swept=sweep_set)
+    if cfg is None:
+        bm, source = None, "heuristic"
+        if legacy_m is not None:
+            # old single-entry fused key: one block_m tuned at the largest
+            # bucket — reuse it (clamped to this bucket) instead of
+            # discarding the measurement.
+            with _lock:
+                legacy = _memory.get(cache_key(
+                    legacy_m, k, n, dtype=dtype, fused=True,
+                    backend=backend, act_dtype=act_dtype, extra=stack))
+            if legacy is not None:
+                bm, source = min(legacy.block_m, mp), "migrated"
+        if bm is None and block_m_hint is not None:
+            bm = min(block_m_hint, mp)
+        if bm is None:
+            bm = heuristic_blocks(rows, k, n, fused=True,
+                                  backend=backend).block_m
+        cfg = BlockConfig(bm, 0, 0, source=source, schedule=prior)
+    if store is None:
+        # prior/migrated answers depend on the *caller's* eligibility and
+        # requests (ws opt-out, double_buffer) — caching them would let one
+        # plan's configuration shadow another's, and would mask the real
+        # backend's future sweep.  Only measurements enter the cache.
+        return cfg
+    with _lock:
+        _memory[key] = store
+        if persist:
+            try:
+                _save_disk_locked()
+            except OSError:
+                pass
+    return cfg
+
+
+def record_ws_crossover(rows: int, k: int, n: int, *,
+                        dtype: str = "float32",
+                        backend: Optional[str] = None,
+                        act_dtype: str = "float32", stack: str = "",
+                        persist: bool = True) -> None:
+    """Persist the measured ws↔batch-tiled crossover: the largest bucket
+    row count at which the weight-stationary schedule won the sweep (0 =
+    ws never won).  Replaces the ``WS_BUCKET_ROWS`` constant as the plan's
+    gate once a real backend has measured."""
+    backend = backend or jax.default_backend()
+    key = ws_crossover_key(k, n, dtype=dtype, backend=backend,
+                           act_dtype=act_dtype, stack=stack)
+    cfg = BlockConfig(int(rows), 0, 0, source="sweep",
+                      schedule="ws_crossover")
+    with _lock:
+        _load_disk_locked()      # merge with existing entries, never clobber
+        _memory[key] = cfg
+        if persist:
+            try:
+                _save_disk_locked()
+            except OSError:
+                pass
+
+
+def get_ws_crossover(k: int, n: int, *, dtype: str = "float32",
+                     backend: Optional[str] = None,
+                     act_dtype: str = "float32",
+                     stack: str = "") -> Optional[int]:
+    """Measured ws↔batch-tiled crossover row count, or None if this
+    backend has never swept the stack."""
+    backend = backend or jax.default_backend()
+    key = ws_crossover_key(k, n, dtype=dtype, backend=backend,
+                           act_dtype=act_dtype, stack=stack)
+    with _lock:
+        _load_disk_locked()
+        hit = _memory.get(key)
+    if hit is None or hit.schedule != "ws_crossover":
+        return None
+    return hit.block_m

@@ -74,6 +74,29 @@ zero-padded codes decode to zero weights and padded epilogue columns carry
 layer's codes + one decoded tile instead of the whole stack, so the ws
 schedule also serves stacks whose *total* packed size busts the megakernel
 budget, still in one launch.
+
+The fourth schedule — the **decode-amortized streaming** variant
+(``fantastic4_fused_mlp_stream_pallas``) — covers the mid-size batches
+where neither of the above dominates.  The batch-tiled kernel re-runs
+every layer's bit-plane decode (Σωᵢ·Bᵢ) once *per batch tile* (the weight
+operands are revisited but the decoded tile is a kernel value, rebuilt
+each grid step); the ws kernel decodes each layer once but cannot tile the
+batch at all (the whole batch rides in its scratch and meets one layer per
+step).  The streaming grid is ``(layers, batch tiles)`` ordered
+layers-outer / batch-tiles-inner: at step (l, 0) layer l's codes are
+decoded once into a persistent ``(D, D)`` VMEM scratch, and every
+subsequent batch tile of that layer reuses the decoded tile — decode runs
+**once per layer per inference batch**, L·T matmuls share L decodes.  The
+activation ping-pongs through a whole-batch ``(M, D)`` VMEM scratch
+(tile i's rows are read and rewritten in place — row ranges are disjoint
+across tiles, so no tile ever reads another's output).  Per-step streamed
+VMEM is one layer's codes + the decoded tile + one batch tile, so like the
+ws schedule it serves stacks whose *total* packed size busts the
+batch-tiled budget — but unlike ws it still tiles the batch, which is what
+makes it the mid-size/large-batch rescue schedule.  Operands are the same
+stacked uniform-width arrays as the ws kernel (``build_ws_operands``), so
+the two schedules share their decode + epilogue arithmetic term for term
+and the int8 grid is bit-identical across all four schedules.
 """
 from __future__ import annotations
 
@@ -471,6 +494,161 @@ def fantastic4_fused_mlp_ws_pallas(
         out_shape=jax.ShapeDtypeStruct((mp, d), out_dtype),
         scratch_shapes=[pltpu.VMEM((mp, d), jnp.float32)],
         compiler_params=COMPILER_PARAMS(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(xp, packed_stack, omega_stack, alpha1_stack, bias_stack, meta_stack)
+    return out[:m, :shapes[-1][1]]
+
+
+# ------------------------------------------- decode-amortized streaming variant
+
+def stream_mlp_vmem_bytes(shapes: Sequence[Tuple[int, int]], rows: int,
+                          block_m: int = 128,
+                          dim_align: int = DIM_ALIGN,
+                          act_dtype: str = "float32") -> int:
+    """Per-grid-step working set of the streaming schedule (bytes).
+
+    One layer's packed (D/2, D) block + the persistent decoded (D, D)
+    scratch + the whole-batch (M, D) activation scratch + one (bm, D)
+    x/out tile pair; ×2 on the streamed per-layer operands for pipelining
+    double buffers.  Scales with the batch (the activation scratch holds
+    every tile so the decode can be amortized across them) but not with L
+    — the schedule's defining trade against the batch-tiled kernel.
+    """
+    d = ws_width(shapes, dim_align)
+    rp = _round_up(rows, 8)
+    bm = min(_round_up(block_m, 8), rp)
+    mp = _round_up(rp, bm)       # the kernel pads the batch to whole tiles
+    packed = d // 2 * d                              # uint8, one layer
+    vectors = 2 * 4 * d + 4 * 4 + 4 * 4              # α₁/b + ω + meta
+    decoded = 4 * d * d                              # persistent W scratch
+    act = 4 * mp * d                                 # whole-batch scratch
+    x_tile = 4 * bm * d
+    out_tile = 4 * bm * d
+    return 2 * (packed + vectors + x_tile + out_tile) + decoded + act
+
+
+def stream_mlp_fits(shapes: Sequence[Tuple[int, int]], *, rows: int,
+                    block_m: int = 128,
+                    budget_bytes: int = VMEM_BUDGET_BYTES,
+                    dim_align: int = DIM_ALIGN,
+                    act_dtype: str = "float32") -> bool:
+    if not shapes:
+        return False
+    return stream_mlp_vmem_bytes(shapes, rows, block_m, dim_align,
+                                 act_dtype) <= budget_bytes
+
+
+def _stream_kernel(x_ref, packed_ref, omega_ref, alpha1_ref, bias_ref,
+                   meta_ref, o_ref, act_ref, w_ref, *, act_dtype: str,
+                   n_layers: int, block_m: int):
+    l = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _():
+        # first pass over the batch: park the input tiles in the resident
+        # whole-batch scratch (later layers never touch x again).
+        act_ref[pl.ds(i * block_m, block_m), :] = \
+            x_ref[...].astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _():
+        # THE amortization: layer l's bit-plane decode runs once per
+        # inference batch, at its first batch tile, into a scratch that
+        # persists across grid steps — every later tile of this layer
+        # reuses it (the batch-tiled kernel redoes this per grid step).
+        w_ref[...] = _decode_tile(packed_ref[0], omega_ref[0])
+
+    cur = act_ref[pl.ds(i * block_m, block_m), :]
+    y = jnp.dot(cur, w_ref[...], preferred_element_type=jnp.float32)
+    y = y * alpha1_ref[0] + bias_ref[0]
+    # per-layer activation/quantization choices are data (meta operand),
+    # exactly as in the ws kernel — the layer id is traced.
+    y = jnp.where(meta_ref[0, 0, 1] > 0, jnp.maximum(y, 0.0), y)
+    s = meta_ref[0, 0, 0]
+    if act_dtype == "int8":
+        q = jnp.clip(jnp.round(y / s), -127.0, 127.0)
+        yq = q.astype(jnp.int8).astype(jnp.float32)
+        y = jnp.where(meta_ref[0, 0, 2] > 0, yq, y)
+    else:
+        y = y * s
+    # in-place ping-pong: tile i's rows are read and rewritten by the same
+    # step; row ranges are disjoint across tiles, so no tile reads another
+    # tile's freshly written rows.
+    act_ref[pl.ds(i * block_m, block_m), :] = y
+
+    @pl.when(l == n_layers - 1)
+    def _():
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shapes", "activations", "out_dtype", "block_m",
+                     "interpret", "dim_align", "act_dtype"))
+def fantastic4_fused_mlp_stream_pallas(
+        x: jax.Array,
+        packed_stack: jax.Array,
+        omega_stack: jax.Array,
+        alpha1_stack: jax.Array,
+        bias_stack: jax.Array,
+        meta_stack: jax.Array,
+        *, shapes: Tuple[Tuple[int, int], ...],
+        activations: Tuple[Optional[str], ...],
+        out_dtype=None, block_m: int = 128,
+        interpret: bool = False,
+        dim_align: int = DIM_ALIGN,
+        act_dtype: str = "float32") -> jax.Array:
+    """Decode-amortized streaming whole-stack serving: grid over
+    (layers, batch tiles) with layers outer, each layer decoded once per
+    inference batch and reused across every batch tile.
+
+    Operands come pre-stacked from ``build_ws_operands`` (uniform width D)
+    — shared with the ws kernel, so decode + epilogue arithmetic is
+    identical term for term and the int8 grid stays bit-exact across
+    schedules.  The whole (rounded) batch is resident in a VMEM scratch;
+    the grid must run in order (``"arbitrary"`` semantics both ways:
+    layer l reads what layer l−1 wrote, tile i>0 reads the decode tile
+    i=0 wrote).
+    """
+    assert act_dtype in ("float32", "int8"), act_dtype
+    n_layers = len(shapes)
+    assert n_layers >= 1
+    assert packed_stack.shape[0] == n_layers
+    m, k0 = x.shape
+    assert k0 == shapes[0][0], (x.shape, shapes)
+    out_dtype = out_dtype or x.dtype
+    d = ws_width(shapes, dim_align)
+    bm = min(block_m, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    n_tiles = mp // bm
+    xp = _pad2(x, mp, d)
+
+    out = pl.pallas_call(
+        functools.partial(_stream_kernel, act_dtype=act_dtype,
+                          n_layers=n_layers, block_m=bm),
+        grid=(n_layers, n_tiles),
+        in_specs=[
+            # x is only read on the first layer pass; pin the index to
+            # tile 0 afterwards so later layers don't re-stream the batch.
+            pl.BlockSpec((bm, d),
+                         lambda l, i: (jnp.where(l == 0, i, 0), 0)),
+            pl.BlockSpec((1, d // 2, d), lambda l, i: (l, 0, 0)),
+            pl.BlockSpec((1, 1, 4), lambda l, i: (l, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda l, i: (l, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda l, i: (l, 0, 0)),
+            pl.BlockSpec((1, 1, 4), lambda l, i: (l, 0, 0)),
+        ],
+        # only the last layer writes real output tiles; pinning earlier
+        # layers to tile 0 keeps the copy-out traffic to one final pass
+        # (tile 0's stale flushes are overwritten by its last-layer write).
+        out_specs=pl.BlockSpec(
+            (bm, d), lambda l, i: (jnp.where(l == n_layers - 1, i, 0), 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), out_dtype),
+        scratch_shapes=[pltpu.VMEM((mp, d), jnp.float32),
+                        pltpu.VMEM((d, d), jnp.float32)],
+        compiler_params=COMPILER_PARAMS(
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(xp, packed_stack, omega_stack, alpha1_stack, bias_stack, meta_stack)
     return out[:m, :shapes[-1][1]]

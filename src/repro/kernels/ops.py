@@ -25,8 +25,10 @@ from . import autotune, ref
 from .ecl_quant import ecl_quant_pallas
 from .fantastic4_fused_mlp import (VMEM_BUDGET_BYTES, build_ws_operands,
                                    fantastic4_fused_mlp_pallas,
+                                   fantastic4_fused_mlp_stream_pallas,
                                    fantastic4_fused_mlp_ws_pallas,
-                                   fused_mlp_fits, ws_mlp_fits)
+                                   fused_mlp_fits, stream_mlp_fits,
+                                   ws_mlp_fits)
 from .fantastic4_matmul import fantastic4_matmul_pallas
 
 
@@ -230,6 +232,7 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
                          act_scales: Optional[Sequence[float]] = None,
                          double_buffer: bool = False,
                          weight_stationary: bool = False,
+                         schedule: Optional[str] = None,
                          vmem_budget_bytes: int = VMEM_BUDGET_BYTES
                          ) -> jax.Array:
     """Whole-stack serving: one megakernel launch instead of L.
@@ -250,12 +253,22 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
     true in interpret/CPU mode, where the heuristic takes whole dims; a
     TPU block_k split of a wide layer can move a sum by one ulp and flip
     a quantization boundary, leaving grid-level-but-not-bitwise
-    agreement).  ``double_buffer`` enables the two-row-group pipelined
-    variant; ``weight_stationary`` selects the layer-streamed schedule
-    (grid over layers, activation resident in scratch — the batch=1
-    latency path; falls back to the per-layer chain only when even a
-    single layer's uniform-width working set busts the budget).
+    agreement).
+
+    ``schedule`` names the kernel schedule explicitly — one of
+    ``"batch_tiled"`` (default), ``"db"`` (pipelined two-row-group
+    batch tile), ``"ws"`` (weight-stationary: grid over layers,
+    activation resident — the batch=1 latency path) or ``"stream"``
+    (decode-amortized streaming: layers-outer/batch-tiles-inner grid,
+    each layer decoded once per inference batch).  The legacy
+    ``double_buffer`` / ``weight_stationary`` booleans map onto it and
+    remain for callers that predate the serving plans.  Every schedule
+    falls back to the per-layer chain past its own VMEM fit.
     """
+    if schedule is None:
+        schedule = ("ws" if weight_stationary
+                    else "db" if double_buffer else "batch_tiled")
+    assert schedule in autotune.SCHEDULES, schedule
     shapes = tuple(tuple(l["shape"]) for l in layers)
     activations = tuple(l.get("activation") for l in layers)
     interpret = _default_interpret() if interpret is None else interpret
@@ -271,7 +284,17 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
         alpha1s = tuple(l["alpha1"] for l in layers)
         scales = tuple(l["alpha2"] for l in layers)
 
-    if weight_stationary and use_kernel:
+    def _chain_fallback(use_k: bool) -> jax.Array:
+        if act_dtype == "int8":
+            y = fantastic4_mlp_chain_int8(x, layers, act_scales,
+                                          use_kernel=use_k,
+                                          interpret=interpret)
+        else:
+            y = fantastic4_mlp_chain(x, layers, use_kernel=use_k,
+                                     interpret=interpret)
+        return y.astype(out_dtype or y.dtype)
+
+    if schedule == "ws" and use_kernel:
         if ws_mlp_fits(shapes, rows=m, budget_bytes=vmem_budget_bytes,
                        act_dtype=act_dtype):
             stacked = _ws_stacked_operands(
@@ -283,15 +306,21 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
                 act_dtype=act_dtype)
         # over-budget even per layer: same per-layer-chain fallback as the
         # batch-tiled schedule below.
-        use_kernel_fallback = True
-        if act_dtype == "int8":
-            y = fantastic4_mlp_chain_int8(x, layers, act_scales,
-                                          use_kernel=use_kernel_fallback,
-                                          interpret=interpret)
-        else:
-            y = fantastic4_mlp_chain(x, layers, use_kernel=use_kernel_fallback,
-                                     interpret=interpret)
-        return y.astype(out_dtype or y.dtype)
+        return _chain_fallback(True)
+
+    if schedule == "stream" and use_kernel:
+        bm = block_m or 128
+        if stream_mlp_fits(shapes, rows=m, block_m=bm,
+                           budget_bytes=vmem_budget_bytes,
+                           act_dtype=act_dtype):
+            stacked = _ws_stacked_operands(
+                layers, act_dtype, act_scales if act_dtype == "int8"
+                else None)
+            return fantastic4_fused_mlp_stream_pallas(
+                x, *stacked, shapes=shapes, activations=activations,
+                out_dtype=out_dtype or x.dtype, block_m=bm,
+                interpret=interpret, act_dtype=act_dtype)
+        return _chain_fallback(True)
 
     def _measure(cfg: autotune.BlockConfig) -> float:
         return _timeit(lambda: _call_fused(cfg.block_m))
@@ -309,14 +338,15 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
             shapes=shapes, activations=activations,
             out_dtype=out_dtype or x.dtype, block_m=bm,
             interpret=interpret, act_dtype=act_dtype,
-            double_buffer=double_buffer)
+            double_buffer=schedule == "db")
 
     # fits check first (conservatively at the largest candidate block_m):
     # an over-budget stack must not pay for a fused-candidate sweep whose
     # result would be thrown away.
     fits = fused_mlp_fits(shapes, block_m=block_m or 256,
                           budget_bytes=vmem_budget_bytes,
-                          act_dtype=act_dtype, double_buffer=double_buffer)
+                          act_dtype=act_dtype,
+                          double_buffer=schedule == "db")
     if use_kernel and fits and block_m is None:
         cfg = autotune.get_block_config(
             m, k0, n_last, dtype=str(x.dtype), fused=True,
@@ -328,14 +358,7 @@ def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
             measure=_measure if not interpret else None)
         block_m = cfg.block_m
     if not use_kernel or not fits:
-        if act_dtype == "int8":
-            y = fantastic4_mlp_chain_int8(x, layers, act_scales,
-                                          use_kernel=use_kernel,
-                                          interpret=interpret)
-        else:
-            y = fantastic4_mlp_chain(x, layers, use_kernel=use_kernel,
-                                     interpret=interpret)
-        return y.astype(out_dtype or y.dtype)
+        return _chain_fallback(use_kernel)
     return _call_fused(block_m)
 
 

@@ -75,6 +75,13 @@ def serve_mlp(args):
           f"{desc['resolved_mode']} (batch {b}: {mode}; "
           f"block_m {desc['block_m']} [{desc['block_source']}], "
           f"buckets {desc['bucket_sizes']})")
+    print("plan: bucket -> schedule " + ", ".join(
+        f"{bk}:{desc['bucket_schedules'][bk]}"
+        f"[bm={desc['bucket_block_m'][bk]},{desc['bucket_sources'][bk]}]"
+        for bk in desc["bucket_sizes"]))
+    print(f"plan: ws crossover {desc['ws_crossover_rows']} rows "
+          f"(prior {desc['ws_prior_rows']} "
+          f"[{desc['ws_prior_source']}])")
     for note in desc["notes"]:
         print(f"note: {note}")
 

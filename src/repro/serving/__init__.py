@@ -3,9 +3,11 @@
     queue ──▶ bucket ──▶ plan ──▶ kernel
 
 * :mod:`plans` — :class:`ExecutionPlan`: mode (fused fp32 / fused int8 /
-  double-buffered / weight-stationary / per-layer / oracle), autotuned
-  blocks, VMEM-fit fallback and int8 calibration resolved ONCE per frozen
-  pack, exposing jitted entry points per power-of-two batch bucket.
+  per-layer / oracle), autotuned blocks, VMEM-fit fallback and int8
+  calibration resolved ONCE per frozen pack, exposing jitted entry points
+  per power-of-two batch bucket — each bucket bound to its measured-best
+  kernel schedule (batch-tiled / double-buffered / weight-stationary /
+  decode-amortized streaming) by the schedule-aware autotuner.
 * :mod:`batcher` — :class:`MicroBatcher`: FIFO request queue coalesced
   into those buckets (full-tile flush, deadline-based partial flush),
   results scattered back per request; :func:`replay` drives a ragged

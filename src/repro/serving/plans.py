@@ -21,13 +21,22 @@ decision once per frozen pack:
   heuristic in interpret mode) and the tuned ``block_m`` is pinned into
   every entry point.
 * **batch buckets** — powers of two up to the tuned ``block_m``.  Each
-  bucket resolves to a concrete kernel schedule: the weight-stationary
-  megakernel for the latency bucket (≤ ``ws_bucket_rows`` rows), the
-  double-buffered two-row-group variant where it can engage (≥16-row
-  tiles, when requested), the plain megakernel otherwise.  ``entry(b)``
-  returns a shape-stable callable per bucket, so serving a stream of
-  ragged batch sizes compiles ``len(buckets)`` programs instead of one
-  per distinct size.
+  bucket resolves to a concrete kernel schedule via **autotuner v2**
+  (``kernels.autotune.get_schedule_config``): on a real backend a timed
+  sweep over every *eligible* ``(schedule, block_m)`` candidate —
+  batch-tiled, double-buffered, weight-stationary, decode-amortized
+  streaming — binds the bucket to its *measured* winner; in interpret
+  mode a dataflow prior answers (ws for the ≤``WS_BUCKET_ROWS`` latency
+  buckets, db where requested and engageable, batch-tiled otherwise,
+  stream when the whole stack busts the batch-tiled VMEM budget), since
+  timing the interpreter is meaningless.  The measured ws↔batch-tiled
+  crossover row count is persisted with the cache and replaces the
+  ``WS_BUCKET_ROWS`` constant as the prior once it exists
+  (``ws_bucket_rows=0`` opts the ws schedule out entirely; an explicit
+  positive value caps its eligibility).  ``entry(b)`` returns a
+  shape-stable callable per bucket, so serving a stream of ragged batch
+  sizes compiles ``len(buckets)`` programs instead of one per distinct
+  size.
 
 The micro-batcher (``serving.batcher``) sits on top: it coalesces queued
 requests into these buckets so the execution units always see full row
@@ -44,21 +53,30 @@ import numpy as np
 
 from ..kernels import ops as kops
 from ..kernels.fantastic4_fused_mlp import (VMEM_BUDGET_BYTES,
-                                            fused_mlp_fits, ws_mlp_fits)
+                                            fused_mlp_fits,
+                                            stream_mlp_fits, ws_mlp_fits)
 from ..kernels import autotune
 from ..memo import MISS, IdentityMemo
 
 MODES = ("auto", "fused", "per_layer", "oracle")
 ACT_DTYPES = ("float32", "int8")
-# latency bucket ceiling: one f32 sublane tile — the weight-stationary
-# schedule's sweet spot (nothing to stream over the batch dim).  A
-# dataflow-motivated constant, not a measured crossover: on the
-# CPU-interpret host the per-layer grid steps make ws *slower* than the
-# batch-tiled kernel (see ROADMAP); pass ws_bucket_rows=0 to opt out, or
-# tune on real hardware.
+# weight-stationary latency prior: one f32 sublane tile — the dataflow-
+# motivated *pre-measurement* answer only.  On a real backend the
+# per-bucket timed sweep decides, and the measured ws↔batch-tiled
+# crossover persisted in the autotune cache replaces this constant as the
+# prior from then on (on the CPU-interpret host the per-layer grid steps
+# make ws ~2-3x slower at batch 1, which is exactly why the gate must be
+# measured, not assumed).  ``ws_bucket_rows=0`` opts the ws schedule out;
+# an explicit positive value caps its eligibility.
 WS_BUCKET_ROWS = 8
 DEFAULT_MAX_BUCKET = 256
 _CALIB_BATCH = 64
+
+# bucket path <-> kernel schedule naming (paths predate autotuner v2 and
+# are kept stable for describe()/bench labels).
+PATH_BY_SCHEDULE = {"ws": "fused_ws", "batch_tiled": "fused",
+                    "db": "fused_db", "stream": "fused_stream"}
+SCHEDULE_BY_PATH = {v: k for k, v in PATH_BY_SCHEDULE.items()}
 
 
 def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
@@ -99,7 +117,9 @@ def _pow2_buckets(max_rows: int) -> Tuple[int, ...]:
 class BucketPlan:
     """One resolved (bucket rows → kernel schedule) binding."""
     rows: int
-    path: str        # "fused_ws" | "fused_db" | "fused" | "per_layer" | "oracle"
+    path: str        # "fused[_ws|_db|_stream]" | "per_layer" | "oracle"
+    block_m: Optional[int] = None      # per-bucket tuned tile (fused paths)
+    source: str = "mode"     # "sweep" | "heuristic" | "migrated" | "mode"
 
 
 class ExecutionPlan:
@@ -135,10 +155,35 @@ class ExecutionPlan:
                           if interpret is None else interpret)
         self.vmem_budget_bytes = vmem_budget_bytes
         self.notes: List[str] = []
-        if ws_bucket_rows is None:
-            ws_bucket_rows = WS_BUCKET_ROWS if mode in ("auto", "fused") \
-                else 0
+        self._stack_extra = "stack" + "x".join(str(n) for _, n in
+                                               self.shapes)
+        self._backend_key = "interpret" if self.interpret else \
+            jax.default_backend()
+
+        # ws gating: an explicit value is both the eligibility ceiling and
+        # the prior (0 = opt out entirely); None leaves eligibility to the
+        # VMEM fit and takes the prior from the measured crossover when one
+        # exists for this backend, else the WS_BUCKET_ROWS constant.
         self.ws_bucket_rows = ws_bucket_rows
+        if ws_bucket_rows is not None:
+            self.ws_eligible_rows: Optional[int] = ws_bucket_rows
+            self.ws_prior_rows = ws_bucket_rows
+            self.ws_prior_source = "explicit"
+        elif mode in ("auto", "fused"):
+            self.ws_eligible_rows = None
+            measured = autotune.get_ws_crossover(
+                self.d_in, self.d_out, backend=self._backend_key,
+                act_dtype=act_dtype, stack=self._stack_extra)
+            if measured is not None:
+                self.ws_prior_rows = measured
+                self.ws_prior_source = "measured"
+            else:
+                self.ws_prior_rows = WS_BUCKET_ROWS
+                self.ws_prior_source = "constant"
+        else:
+            self.ws_eligible_rows = 0
+            self.ws_prior_rows = 0
+            self.ws_prior_source = "mode"
 
         # ---- int8 calibration: once, at build time
         self.act_scales: Optional[List[float]] = None
@@ -157,54 +202,116 @@ class ExecutionPlan:
 
         # ---- mode resolution: the VMEM-fit decision happens HERE, not
         # per call inside the kernel wrapper, so callers can report the
-        # path that will actually execute before running anything.
-        fits = fused_mlp_fits(self.shapes, block_m=block_m or 256,
-                              budget_bytes=vmem_budget_bytes,
-                              act_dtype=act_dtype,
-                              double_buffer=double_buffer)
+        # path that will actually execute before running anything.  A
+        # stack too big for the batch-tiled (whole-stack-resident)
+        # megakernel can still fuse through the layer-streamed schedules
+        # (stream/ws hold one layer per grid step).
+        self._stack_fits = fused_mlp_fits(
+            self.shapes, block_m=block_m or 256,
+            budget_bytes=vmem_budget_bytes, act_dtype=act_dtype)
+        self._stack_fits_db = fused_mlp_fits(
+            self.shapes, block_m=block_m or 256,
+            budget_bytes=vmem_budget_bytes, act_dtype=act_dtype,
+            double_buffer=True)
+        # gate at the minimal (8-row) tile: "some stream configuration
+        # serves max_bucket rows" — per-bucket binding then picks (and
+        # fit-guards) the actual tile.
+        stream_ok = stream_mlp_fits(
+            self.shapes, rows=max_bucket, block_m=8,
+            budget_bytes=vmem_budget_bytes, act_dtype=act_dtype)
         if mode == "auto":
-            mode = "fused" if fits else "per_layer"
-        if mode == "fused" and not fits:
-            self.notes.append(
-                "stack exceeds the fused-megakernel VMEM budget "
-                f"({vmem_budget_bytes} B): resolved to per_layer")
-            mode = "per_layer"
+            mode = "fused" if (self._stack_fits or stream_ok) \
+                else "per_layer"
+        if mode == "fused" and not self._stack_fits:
+            if stream_ok:
+                self.notes.append(
+                    "stack exceeds the whole-stack (batch-tiled) "
+                    f"megakernel VMEM budget ({vmem_budget_bytes} B): "
+                    "only the layer-streamed schedules (stream/ws) are "
+                    "eligible")
+            else:
+                self.notes.append(
+                    "stack exceeds the fused-megakernel VMEM budget "
+                    f"({vmem_budget_bytes} B): resolved to per_layer")
+                mode = "per_layer"
         self.resolved_mode = mode
 
-        # ---- blocks: one autotuner consultation, pinned for every entry.
-        # On a real backend the consultation must carry a measure closure:
-        # answering from the heuristic would persist a non-sweep entry
-        # under the real backend's cache key and permanently mask the
-        # timed sweep (the autotuner's own contract).
+        # ---- blocks: the plan-wide block_m (largest bucket / overflow
+        # batches).  On a real backend the consultation must carry a
+        # measure closure: answering from the heuristic would persist a
+        # non-sweep entry under the real backend's cache key and
+        # permanently mask the timed sweep (the autotuner's own contract).
         self.block_m = block_m
         self.block_source = "explicit" if block_m is not None else None
         if mode == "fused" and block_m is None:
-            def _measure(cfg: autotune.BlockConfig) -> float:
-                xm = jnp.zeros((max_bucket, self.d_in), jnp.float32)
-                return kops._timeit(lambda: kops.fantastic4_mlp_fused(
-                    xm, self.layers, use_kernel=True,
-                    interpret=self.interpret, block_m=cfg.block_m,
-                    act_dtype=act_dtype, act_scales=self.act_scales,
-                    vmem_budget_bytes=vmem_budget_bytes))
+            if self._stack_fits:
+                def _measure(cfg: autotune.BlockConfig) -> float:
+                    xm = jnp.zeros((max_bucket, self.d_in), jnp.float32)
+                    return kops._timeit(lambda: kops.fantastic4_mlp_fused(
+                        xm, self.layers, use_kernel=True,
+                        interpret=self.interpret, block_m=cfg.block_m,
+                        act_dtype=act_dtype, act_scales=self.act_scales,
+                        vmem_budget_bytes=vmem_budget_bytes))
 
-            cfg = autotune.get_block_config(
-                max_bucket, self.d_in, self.d_out,
-                dtype="float32", fused=True,
-                backend="interpret" if self.interpret else None,
-                act_dtype=act_dtype,
-                extra="stack" + "x".join(str(n) for _, n in self.shapes),
-                measure=None if self.interpret else _measure)
-            self.block_m = cfg.block_m
-            self.block_source = cfg.source
+                cfg = autotune.get_block_config(
+                    max_bucket, self.d_in, self.d_out,
+                    dtype="float32", fused=True,
+                    backend="interpret" if self.interpret else None,
+                    act_dtype=act_dtype,
+                    extra=self._stack_extra,
+                    measure=None if self.interpret else _measure)
+                self.block_m = cfg.block_m
+                self.block_source = cfg.source
+            else:
+                # batch-tiled ineligible: nothing to sweep at the stack
+                # level; per-bucket stream tiles are tuned below.
+                self.block_m = autotune.heuristic_blocks(
+                    max_bucket, self.d_in, self.d_out, fused=True,
+                    backend=self._backend_key).block_m
+                self.block_source = "heuristic"
 
-        # ---- buckets: powers of two up to min(block_m, max_bucket)
+        # ---- buckets: powers of two up to min(block_m, max_bucket),
+        # each bound to its own (schedule, block_m) by autotuner v2.
         top = max_bucket
         if mode == "fused" and self.block_m:
             top = min(top, max(self.block_m, 1))
         self.bucket_sizes = _pow2_buckets(max(top, 1))
-        self.buckets: Dict[int, BucketPlan] = {
-            b: BucketPlan(b, self._bucket_path(b)) for b in self.bucket_sizes}
-        self.default_path = self._bucket_path(max(self.bucket_sizes) * 2)
+        self.buckets: Dict[int, BucketPlan] = {}
+        self.ws_crossover_rows: Optional[int] = None
+        if mode in ("per_layer", "oracle"):
+            for b in self.bucket_sizes:
+                self.buckets[b] = BucketPlan(b, mode)
+            self.default_path = mode
+        else:
+            for b in self.bucket_sizes:
+                self.buckets[b] = self._bind_bucket(b, max_bucket)
+            # overflow batches (past the largest bucket) run at exact size:
+            # batch-tiled (double-buffered when requested and it fits) or
+            # the per-layer chain when the whole stack can't reside.
+            if self._stack_fits_db and double_buffer:
+                self.default_path = "fused_db"
+            elif self._stack_fits:
+                self.default_path = "fused"
+            else:
+                self.default_path = "per_layer"
+            ws_won = [b for b, p in self.buckets.items()
+                      if p.path == "fused_ws"]
+            self.ws_crossover_rows = max(ws_won) if ws_won else 0
+            fused_srcs = [p.source for p in self.buckets.values()
+                          if p.path.startswith("fused")]
+            if (not self.interpret and fused_srcs
+                    and self.ws_eligible_rows is None
+                    and all(s == "sweep" for s in fused_srcs)):
+                # every bucket measured with ws fully eligible: persist
+                # the ws<->batch-tiled crossover so future plans (and
+                # hosts sharing the cache) start from the measurement,
+                # not the constant.  An opt-out/capped plan must NOT
+                # record — its "crossover" reflects the caller's
+                # restriction, not a measurement.
+                autotune.record_ws_crossover(
+                    self.ws_crossover_rows, self.d_in, self.d_out,
+                    backend=self._backend_key, act_dtype=act_dtype,
+                    stack=self._stack_extra)
 
         if double_buffer:
             if mode != "fused":
@@ -212,30 +319,117 @@ class ExecutionPlan:
                     "double_buffer requested but resolved mode is "
                     f"{mode}: ignored")
             elif not any(p.path == "fused_db" for p in self.buckets.values()):
+                if max(self.bucket_sizes) < 16:
+                    self.notes.append(
+                        "double_buffer requested but no bucket has a "
+                        ">=16-row tile: single-buffered schedule everywhere")
+                else:
+                    self.notes.append(
+                        "double_buffer requested but the per-bucket "
+                        "schedule sweep bound other schedules everywhere")
+        if (mode == "fused" and self.ws_eligible_rows != 0
+                and not any(p.path == "fused_ws"
+                            for p in self.buckets.values())):
+            if not ws_mlp_fits(self.shapes, rows=1,
+                               budget_bytes=vmem_budget_bytes,
+                               act_dtype=act_dtype):
                 self.notes.append(
-                    "double_buffer requested but no bucket has a >=16-row "
-                    "tile: single-buffered schedule everywhere")
-        if self.ws_bucket_rows and mode == "fused" and not any(
-                p.path == "fused_ws" for p in self.buckets.values()):
-            self.notes.append(
-                "weight-stationary latency path unavailable (per-layer "
-                "working set exceeds the VMEM budget)")
+                    "weight-stationary latency path unavailable (per-layer "
+                    "working set exceeds the VMEM budget)")
+            elif self.ws_prior_source == "measured":
+                self.notes.append(
+                    "weight-stationary schedule measured out (crossover "
+                    f"{self.ws_prior_rows} rows): other schedules won "
+                    "every bucket")
 
         self._entries: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------ resolve
 
-    def _bucket_path(self, rows: int) -> str:
-        if self.resolved_mode in ("per_layer", "oracle"):
-            return self.resolved_mode
-        if (rows <= self.ws_bucket_rows
-                and ws_mlp_fits(self.shapes, rows=rows,
-                                budget_bytes=self.vmem_budget_bytes,
-                                act_dtype=self.act_dtype)):
-            return "fused_ws"
-        if self.requested_double_buffer and rows >= 16:
-            return "fused_db"
-        return "fused"
+    def _eligible_schedules(self, rows: int) -> tuple:
+        """Schedules whose VMEM working set fits this bucket, with the ws
+        opt-out/ceiling applied — the candidate set the sweep may bind."""
+        el = []
+        if self._stack_fits:
+            el.append("batch_tiled")
+            if rows >= 16 and self._stack_fits_db:
+                el.append("db")
+        if stream_mlp_fits(self.shapes, rows=rows, block_m=8,
+                           budget_bytes=self.vmem_budget_bytes,
+                           act_dtype=self.act_dtype):
+            el.append("stream")
+        cap = self.ws_eligible_rows
+        if cap != 0 and (cap is None or rows <= cap) and \
+                ws_mlp_fits(self.shapes, rows=rows,
+                            budget_bytes=self.vmem_budget_bytes,
+                            act_dtype=self.act_dtype):
+            el.append("ws")
+        return tuple(el)
+
+    def _prior_schedule(self, rows: int, eligible: tuple) -> str:
+        """Pre-measurement answer: the dataflow-motivated prior (measured
+        crossover when the cache has one — see ws_prior_source)."""
+        if "ws" in eligible and rows <= self.ws_prior_rows:
+            return "ws"
+        if "db" in eligible and self.requested_double_buffer:
+            return "db"
+        if "batch_tiled" in eligible:
+            return "batch_tiled"
+        return eligible[0]
+
+    def _schedule_fits(self, schedule: str, rows: int, bm: int) -> bool:
+        """Does this exact (schedule, block_m) candidate fit VMEM?  The
+        sweep must never time a candidate that would silently take the
+        per-layer chain fallback inside the kernel wrapper — a chain time
+        winning under a fused label is exactly the mislabel the schedule
+        bindings exist to prevent."""
+        if schedule == "batch_tiled":
+            return self._stack_fits
+        if schedule == "db":
+            return self._stack_fits_db
+        if schedule == "ws":
+            return ws_mlp_fits(self.shapes, rows=rows,
+                               budget_bytes=self.vmem_budget_bytes,
+                               act_dtype=self.act_dtype)
+        return stream_mlp_fits(self.shapes, rows=rows, block_m=bm,
+                               budget_bytes=self.vmem_budget_bytes,
+                               act_dtype=self.act_dtype)
+
+    def _schedule_measure(self, rows: int) -> Callable[[str, int], float]:
+        xm = jnp.zeros((rows, self.d_in), jnp.float32)
+
+        def measure(schedule: str, bm: int) -> float:
+            if not self._schedule_fits(schedule, rows, bm):
+                return float("inf")
+            return kops._timeit(lambda: kops.fantastic4_mlp_fused(
+                xm, self.layers, use_kernel=True, interpret=self.interpret,
+                block_m=bm, act_dtype=self.act_dtype,
+                act_scales=self.act_scales, schedule=schedule,
+                vmem_budget_bytes=self.vmem_budget_bytes))
+        return measure
+
+    def _bind_bucket(self, rows: int, max_bucket: int) -> BucketPlan:
+        eligible = self._eligible_schedules(rows)
+        if not eligible:
+            return BucketPlan(rows, "per_layer", source="mode")
+        cfg = autotune.get_schedule_config(
+            rows, self.d_in, self.d_out,
+            schedules=eligible,
+            prior=self._prior_schedule(rows, eligible),
+            dtype="float32", backend=self._backend_key,
+            act_dtype=self.act_dtype, stack=self._stack_extra,
+            measure=None if self.interpret else
+            self._schedule_measure(rows),
+            legacy_m=max_bucket, block_m_hint=self.block_m)
+        bm = cfg.block_m
+        if cfg.schedule == "stream" and cfg.source != "sweep" and bm:
+            # prior/migrated tile was chosen without a fit check: halve
+            # until the streaming working set fits, so the binding can
+            # never silently execute the chain fallback under its label.
+            while bm > 8 and not self._schedule_fits("stream", rows, bm):
+                bm //= 2
+        return BucketPlan(rows, PATH_BY_SCHEDULE[cfg.schedule],
+                          block_m=bm, source=cfg.source)
 
     def bucket_for(self, m: int) -> Optional[int]:
         """Smallest bucket holding ``m`` rows; None when ``m`` overflows
@@ -247,7 +441,8 @@ class ExecutionPlan:
 
     # ------------------------------------------------------------ execute
 
-    def _execute(self, x: jax.Array, path: str) -> jax.Array:
+    def _execute(self, x: jax.Array, path: str,
+                 block_m: Optional[int] = None) -> jax.Array:
         if path == "oracle":
             if self.act_dtype == "int8":
                 return kops.fantastic4_mlp_chain_int8(
@@ -263,10 +458,9 @@ class ExecutionPlan:
                                              interpret=self.interpret)
         return kops.fantastic4_mlp_fused(
             x, self.layers, use_kernel=True, interpret=self.interpret,
-            block_m=self.block_m, act_dtype=self.act_dtype,
+            block_m=block_m or self.block_m, act_dtype=self.act_dtype,
             act_scales=self.act_scales,
-            double_buffer=path == "fused_db",
-            weight_stationary=path == "fused_ws",
+            schedule=SCHEDULE_BY_PATH[path],
             vmem_budget_bytes=self.vmem_budget_bytes)
 
     def entry(self, bucket: int) -> Callable[[jax.Array], jax.Array]:
@@ -279,11 +473,11 @@ class ExecutionPlan:
             if bucket not in self.buckets:
                 raise KeyError(f"no bucket of {bucket} rows; have "
                                f"{self.bucket_sizes}")
-            path = self.buckets[bucket].path
+            bp = self.buckets[bucket]
 
-            def fn(xb, _path=path, _bucket=bucket):
+            def fn(xb, _path=bp.path, _bm=bp.block_m, _bucket=bucket):
                 assert xb.shape[0] == _bucket, (xb.shape, _bucket)
-                return self._execute(xb, _path)
+                return self._execute(xb, _path, block_m=_bm)
             self._entries[bucket] = fn
         return fn
 
@@ -316,6 +510,14 @@ class ExecutionPlan:
         b = self.bucket_for(m)
         return self.default_path if b is None else self.buckets[b].path
 
+    def schedule_for(self, m: int) -> str:
+        """The kernel schedule that actually executes for ``m`` rows:
+        ``"ws" | "batch_tiled" | "db" | "stream"`` on the fused paths,
+        else the path name itself (``"per_layer"`` / ``"oracle"``) — the
+        label every benchmark row carries."""
+        path = self.path_for(m)
+        return SCHEDULE_BY_PATH.get(path, path)
+
     def describe(self) -> dict:
         return {
             "requested_mode": self.requested_mode,
@@ -325,6 +527,16 @@ class ExecutionPlan:
             "block_source": self.block_source,
             "bucket_sizes": list(self.bucket_sizes),
             "bucket_paths": {b: p.path for b, p in self.buckets.items()},
+            "bucket_schedules": {
+                b: SCHEDULE_BY_PATH.get(p.path, p.path)
+                for b, p in self.buckets.items()},
+            "bucket_block_m": {b: p.block_m
+                               for b, p in self.buckets.items()},
+            "bucket_sources": {b: p.source
+                               for b, p in self.buckets.items()},
+            "ws_crossover_rows": self.ws_crossover_rows,
+            "ws_prior_rows": self.ws_prior_rows,
+            "ws_prior_source": self.ws_prior_source,
             "default_path": self.default_path,
             "interpret": self.interpret,
             "notes": list(self.notes),
@@ -336,6 +548,7 @@ class ExecutionPlan:
         names = {"fused": "fused megakernel",
                  "fused_db": "fused megakernel (double-buffered)",
                  "fused_ws": "fused megakernel (weight-stationary)",
+                 "fused_stream": "fused megakernel (streaming)",
                  "per_layer": "per-layer kernel",
                  "oracle": "jnp oracle"}
         if m is not None:
@@ -344,7 +557,8 @@ class ExecutionPlan:
             paths = {p.path for p in self.buckets.values()}
             label = " / ".join(names[p] for p in
                                ("fused_ws", "fused", "fused_db",
-                                "per_layer", "oracle") if p in paths)
+                                "fused_stream", "per_layer", "oracle")
+                               if p in paths)
         if self.act_dtype == "int8":
             label += " [int8 activations]"
         return label

@@ -250,6 +250,246 @@ def test_ecl_quant_autotuned_blocks_match_ref(tuner_cache):
         "interpret-mode resolution must land under the eclquant key"
 
 
+# --------------------------- autotuner v2: (bucket, schedule) tuning unit
+
+def test_schedule_sweep_picks_winner_and_persists(tuner_cache):
+    """Cold per-bucket sweep measures every eligible (schedule, block_m)
+    pair, binds the fastest, persists it with its schedule field; the warm
+    hit (fresh process analogue) never re-measures."""
+    seen = []
+
+    def fake_measure(sched, bm):
+        seen.append((sched, bm))
+        return {"stream": 1.0, "batch_tiled": 2.0,
+                "db": 3.0, "ws": 4.0}[sched] + 1e-3 / bm
+
+    cold = autotune.get_schedule_config(
+        32, 512, 12, schedules=("batch_tiled", "db", "stream", "ws"),
+        prior="batch_tiled", backend="tpu", stack="stack512x12",
+        measure=fake_measure)
+    assert seen, "cold call must sweep"
+    assert {s for s, _ in seen} == {"batch_tiled", "db", "stream", "ws"}
+    assert cold.schedule == "stream" and cold.source == "sweep"
+    # ws holds the whole bucket: exactly one candidate, block_m = padded rows
+    assert [bm for s, bm in seen if s == "ws"] == [32]
+    # db tiles need two sublane groups: candidates stay multiples of 16
+    assert all(bm % 16 == 0 for s, bm in seen if s == "db")
+
+    raw = json.loads(tuner_cache.read_text())
+    key = autotune.bucket_cache_key(32, 512, 12, backend="tpu",
+                                    stack="stack512x12")
+    assert raw[key]["schedule"] == "stream"
+
+    autotune.clear_memory_cache()
+    warm = autotune.get_schedule_config(
+        32, 512, 12, schedules=("batch_tiled", "db", "stream", "ws"),
+        prior="batch_tiled", backend="tpu", stack="stack512x12",
+        measure=lambda s, bm: seen.append(("again", s)) or 0.0)
+    assert not any(s == "again" for s, _ in seen), "warm hit re-measured"
+    assert warm.schedule == "stream" and warm.same_blocks(cold)
+
+
+def test_schedule_entries_keyed_per_bucket(tuner_cache):
+    """Bucket 8 and bucket 32 are distinct tuning units — the whole point
+    of v2 — and neither collides with the legacy single fused entry."""
+    a = autotune.bucket_cache_key(8, 512, 12, backend="tpu",
+                                  stack="stack512x12")
+    b = autotune.bucket_cache_key(32, 512, 12, backend="tpu",
+                                  stack="stack512x12")
+    legacy = autotune.cache_key(8, 512, 12, dtype="float32", fused=True,
+                                backend="tpu", extra="stack512x12")
+    assert len({a, b, legacy}) == 3
+    for rows in (8, 32):
+        autotune.get_schedule_config(
+            rows, 512, 12, schedules=("batch_tiled", "ws"), prior="ws",
+            backend="tpu", stack="stack512x12",
+            measure=lambda s, bm: 1.0 if s == "ws" else 2.0)
+    raw = json.loads(tuner_cache.read_text())
+    assert len(raw) == 2 and a in raw and b in raw
+
+
+def test_schedule_prior_answers_without_measure_and_is_not_cached(
+        tuner_cache):
+    """Interpret tier: the prior answers, block_m falls back to the
+    heuristic — and the answer must NOT enter the cache (priors depend on
+    the caller's eligibility/requests; caching one plan's prior would
+    shadow another plan's, and would mask a future real sweep)."""
+    cfg = autotune.get_schedule_config(
+        4, 512, 12, schedules=("batch_tiled", "ws"), prior="ws",
+        backend="interpret", stack="stack512x12")
+    assert cfg.schedule == "ws" and cfg.source == "heuristic"
+    assert not os.path.exists(tuner_cache) or \
+        autotune.bucket_cache_key(4, 512, 12, backend="interpret",
+                                  stack="stack512x12") \
+        not in json.loads(tuner_cache.read_text())
+    # a different caller's restricted eligibility gets ITS prior, not the
+    # first caller's answer
+    cfg2 = autotune.get_schedule_config(
+        4, 512, 12, schedules=("batch_tiled",), prior="batch_tiled",
+        backend="interpret", stack="stack512x12")
+    assert cfg2.schedule == "batch_tiled"
+
+
+def test_schedule_migrates_legacy_single_entry_block(tuner_cache):
+    """An old cache file holds one fused entry tuned at the largest bucket
+    (m=256).  Per-bucket resolution without a measure must migrate its
+    block_m (clamped to the bucket) instead of discarding it."""
+    legacy_key = autotune.cache_key(256, 512, 12, dtype="float32",
+                                    fused=True, backend="tpu",
+                                    extra="stack512x12")
+    tuner_cache.write_text(json.dumps({
+        legacy_key: {"block_m": 64, "block_n": 1024, "block_k": 2048,
+                     "source": "sweep"}}))
+    autotune.clear_memory_cache()
+    cfg = autotune.get_schedule_config(
+        8, 512, 12, schedules=("batch_tiled", "ws"), prior="batch_tiled",
+        backend="tpu", stack="stack512x12", legacy_m=256)
+    assert cfg.source == "migrated"
+    assert cfg.block_m == 8                 # min(legacy 64, padded rows 8)
+    cfg2 = autotune.get_schedule_config(
+        128, 512, 12, schedules=("batch_tiled",), prior="batch_tiled",
+        backend="tpu", stack="stack512x12", legacy_m=256)
+    assert cfg2.source == "migrated" and cfg2.block_m == 64
+    # the legacy entry itself survives a later save untouched
+    autotune.record_ws_crossover(8, 512, 12, backend="tpu",
+                                 stack="stack512x12")
+    raw = json.loads(tuner_cache.read_text())
+    assert raw[legacy_key]["block_m"] == 64
+    assert "schedule" not in raw[legacy_key]
+
+
+def test_cached_schedule_outside_eligibility_is_bypassed_not_clobbered(
+        tuner_cache):
+    """A measured ws binding must survive a ws-opt-out caller: the
+    restricted resolution answers from the prior but leaves the cache
+    entry alone."""
+    swept = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "ws"), prior="batch_tiled",
+        backend="tpu", stack="stack512x12",
+        measure=lambda s, bm: 1.0 if s == "ws" else 2.0)
+    assert swept.schedule == "ws"
+    restricted = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled",), prior="batch_tiled",
+        backend="tpu", stack="stack512x12")
+    assert restricted.schedule == "batch_tiled"
+    key = autotune.bucket_cache_key(2, 512, 12, backend="tpu",
+                                    stack="stack512x12")
+    assert json.loads(tuner_cache.read_text())[key]["schedule"] == "ws"
+
+
+def test_schedule_entries_keyed_per_act_dtype_and_backend(tuner_cache):
+    keys = {autotune.bucket_cache_key(8, 512, 12, backend=b,
+                                      act_dtype=a, stack="s")
+            for b in ("tpu", "interpret") for a in ("float32", "int8")}
+    assert len(keys) == 4
+
+
+def test_restricted_sweep_does_not_shadow_broader_eligibility(tuner_cache):
+    """A ws-opt-out plan sweeping FIRST must not pin the bucket for later
+    default plans: the entry records the set it measured over, and a
+    caller with broader eligibility re-sweeps (and its complete entry then
+    serves both)."""
+    first = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "stream"),
+        prior="batch_tiled", backend="tpu", stack="s",
+        measure=lambda s, bm: {"batch_tiled": 1.0, "stream": 2.0,
+                               "ws": 0.5}[s])
+    assert first.schedule == "batch_tiled"
+    assert first.swept == ("batch_tiled", "stream")
+    # broader caller: ws (never measured above) must get its sweep
+    full = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "stream", "ws"),
+        prior="batch_tiled", backend="tpu", stack="s",
+        measure=lambda s, bm: {"batch_tiled": 1.0, "stream": 2.0,
+                               "ws": 0.5}[s])
+    assert full.schedule == "ws"
+    # the complete entry now answers the restricted caller's *bypass*
+    # path (ws forbidden -> recompute, uncached) and the full caller's hit
+    again = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "stream", "ws"),
+        prior="batch_tiled", backend="tpu", stack="s",
+        measure=lambda s, bm: (_ for _ in ()).throw(AssertionError))
+    assert again.schedule == "ws"
+    key = autotune.bucket_cache_key(2, 512, 12, backend="tpu", stack="s")
+    assert set(json.loads(tuner_cache.read_text())[key]["swept"]) == \
+        {"batch_tiled", "stream", "ws"}
+
+
+def test_incomparable_sweep_sets_converge_via_union(tuner_cache):
+    """Two plans with incomparable eligible sets must not ping-pong
+    re-sweeps: the second sweep covers the union, the stored entry then
+    answers both."""
+    times = {"batch_tiled": 2.0, "ws": 1.0, "stream": 3.0, "db": 4.0}
+    calls = []
+
+    def measure(s, bm):
+        calls.append(s)
+        return times[s]
+
+    a = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "ws"), prior="batch_tiled",
+        backend="tpu", stack="s", measure=measure)
+    assert a.schedule == "ws"
+    calls.clear()
+    b = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "stream"),
+        prior="batch_tiled", backend="tpu", stack="s", measure=measure)
+    # caller B may not bind ws, so it gets its own best...
+    assert b.schedule == "batch_tiled"
+    # ...but the union sweep measured ws too and stored the union winner
+    assert "ws" in calls
+    key = autotune.bucket_cache_key(2, 512, 12, backend="tpu", stack="s")
+    raw = json.loads(tuner_cache.read_text())[key]
+    assert raw["schedule"] == "ws"
+    assert set(raw["swept"]) == {"batch_tiled", "ws", "stream"}
+    # caller A now hits without re-sweeping: convergence, no ping-pong
+    a2 = autotune.get_schedule_config(
+        2, 512, 12, schedules=("batch_tiled", "ws"), prior="batch_tiled",
+        backend="tpu", stack="s",
+        measure=lambda s, bm: (_ for _ in ()).throw(AssertionError))
+    assert a2.schedule == "ws"
+
+
+def test_record_ws_crossover_first_touch_keeps_existing_file(tuner_cache):
+    """record_ws_crossover in a fresh process (nothing loaded yet) must
+    merge with the on-disk cache, not clobber a committed TPU cache."""
+    autotune.get_schedule_config(
+        8, 512, 12, schedules=("batch_tiled", "ws"), prior="ws",
+        backend="tpu", stack="s", measure=lambda s, bm: 1.0)
+    autotune.clear_memory_cache()            # fresh-process analogue
+    autotune.record_ws_crossover(4, 512, 12, backend="tpu", stack="s")
+    raw = json.loads(tuner_cache.read_text())
+    assert autotune.bucket_cache_key(8, 512, 12, backend="tpu",
+                                     stack="s") in raw
+    assert autotune.get_ws_crossover(512, 12, backend="tpu",
+                                     stack="s") == 4
+
+
+def test_ws_crossover_roundtrip(tuner_cache):
+    assert autotune.get_ws_crossover(512, 12, backend="tpu",
+                                     stack="stack512x12") is None
+    autotune.record_ws_crossover(16, 512, 12, backend="tpu",
+                                 stack="stack512x12")
+    assert autotune.get_ws_crossover(512, 12, backend="tpu",
+                                     stack="stack512x12") == 16
+    # fresh process analogue: survives via the JSON file
+    autotune.clear_memory_cache()
+    assert autotune.get_ws_crossover(512, 12, backend="tpu",
+                                     stack="stack512x12") == 16
+    # other backends/stacks unaffected
+    assert autotune.get_ws_crossover(512, 12, backend="cpu",
+                                     stack="stack512x12") is None
+    assert autotune.get_ws_crossover(512, 12, backend="tpu",
+                                     stack="stack256x12") is None
+
+
+def test_schedule_failed_sweep_falls_back_to_prior(tuner_cache):
+    cfg = autotune.get_schedule_config(
+        8, 64, 64, schedules=("batch_tiled", "ws"), prior="ws",
+        backend="tpu", stack="s", measure=lambda s, bm: float("inf"))
+    assert cfg.schedule == "ws" and cfg.source == "heuristic"
+
+
 def test_ops_autotuned_blocks_match_ref(tuner_cache):
     """fantastic4_matmul with block_*=None (autotuned) stays bit-accurate."""
     rng = np.random.default_rng(0)

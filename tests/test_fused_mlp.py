@@ -12,7 +12,9 @@ from repro.configs.paper_mlps import MLPS
 from repro.core import bitplanes as bp
 from repro.kernels import ops, ref
 from repro.kernels.fantastic4_fused_mlp import (fused_mlp_fits,
-                                                fused_mlp_vmem_bytes)
+                                                fused_mlp_vmem_bytes,
+                                                stream_mlp_fits,
+                                                stream_mlp_vmem_bytes)
 from repro.models import mlp as M
 
 # (K, N) chains: the three paper stacks + a deliberately odd/unpadded one.
@@ -119,6 +121,54 @@ def test_vmem_estimate_scales_with_stack():
     for dims in STACKS.values():
         shapes = tuple(zip(dims[:-1], dims[1:]))
         assert fused_mlp_fits(shapes), dims
+
+
+def test_stream_vmem_estimate_scales_with_batch_not_depth():
+    """The streaming schedule's defining trade: its working set grows with
+    the resident batch but NOT with layer count (one layer per grid
+    step), so deep stacks that bust the batch-tiled budget still fit."""
+    shapes3 = ((512, 512),) * 3
+    shapes9 = ((512, 512),) * 9
+    # streamed per-step set: invariant in L ...
+    assert stream_mlp_vmem_bytes(shapes3, rows=64) == \
+        stream_mlp_vmem_bytes(shapes9, rows=64)
+    # ... but grows with the resident batch
+    assert stream_mlp_vmem_bytes(shapes3, rows=64) < \
+        stream_mlp_vmem_bytes(shapes3, rows=512)
+    # batch-tiled grows with L instead
+    assert fused_mlp_vmem_bytes(shapes3) < fused_mlp_vmem_bytes(shapes9)
+    # a budget between the two admits stream but not batch-tiled
+    mid = (stream_mlp_vmem_bytes(shapes9, rows=64)
+           + fused_mlp_vmem_bytes(shapes9, block_m=64)) // 2
+    assert stream_mlp_fits(shapes9, rows=64, budget_bytes=mid)
+    assert not fused_mlp_fits(shapes9, block_m=64, budget_bytes=mid)
+    assert not stream_mlp_fits(shapes9, rows=64, budget_bytes=1)
+    assert not stream_mlp_fits((), rows=64)
+    # the act scratch is charged at the kernel's real whole-tile padding:
+    # 264 rows with 256-row tiles allocate a 512-row scratch, not 264
+    assert stream_mlp_vmem_bytes(shapes3, rows=264, block_m=256) == \
+        stream_mlp_vmem_bytes(shapes3, rows=512, block_m=256)
+    assert stream_mlp_vmem_bytes(shapes3, rows=264, block_m=8) < \
+        stream_mlp_vmem_bytes(shapes3, rows=264, block_m=256)
+
+
+def test_stream_schedule_decode_amortized_paths_match():
+    """Streaming schedule vs oracle across tile shapes that exercise the
+    decode-once/reuse machinery: multiple batch tiles, ragged final tile,
+    single-layer stack, odd-K dims."""
+    for dims, batch, bm in (
+            (STACKS["odd"], 40, 16),       # ragged last tile (40 = 2.5*16)
+            (STACKS["lenet-300-100"], 24, 8),
+            ((33, 17), 9, 8),              # single layer, odd everything
+    ):
+        pack = _rand_pack(dims, seed=sum(dims))
+        x = jnp.asarray(
+            np.random.default_rng(batch).normal(size=(batch, dims[0])),
+            jnp.float32)
+        y = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                     schedule="stream", block_m=bm)
+        np.testing.assert_allclose(y, _oracle(pack, x), atol=1e-3,
+                                   rtol=1e-4, err_msg=str((dims, batch, bm)))
 
 
 def test_frozen_pack_serves_fused():

@@ -5,20 +5,24 @@ Five serving paths exist for a frozen pack and they must not drift:
     fp32:  oracle chain │ per-layer kernel │ fused megakernel
     int8:  oracle chain │ per-layer kernel │ fused megakernel
 
-plus the double-buffered and weight-stationary megakernel variants and the
-VMEM-overflow fallback of each fused path.  Contracts checked here:
+plus the double-buffered, weight-stationary and decode-amortized
+streaming megakernel schedules and the VMEM-overflow fallback of each
+fused path.  Contracts checked here:
 
 * fp32 paths agree with the pure-jnp oracle to close tolerance (f32
   accumulation noise only).
 * int8 *kernel* paths agree **exactly**: fused == per-layer chain ==
-  double-buffered == over-budget fallback, bit for bit — they share the
-  scale-folding arithmetic term for term (the §VI-C contract; asserted
-  with ``assert_array_equal``).  The int8 oracle is a different fp
-  implementation, so a quantization-boundary flip is possible there; it
-  gets a relative gate instead.  The weight-stationary schedule's bitwise
-  anchor is the batch-tiled megakernel (identical decode + epilogue; only
-  the dataflow and K-padding width differ).
-* the fallback path engages (budget=1) and changes nothing.
+  double-buffered == streaming == over-budget fallback, bit for bit —
+  they share the scale-folding arithmetic term for term (the §VI-C
+  contract; asserted with ``assert_array_equal``).  The int8 oracle is a
+  different fp implementation, so a quantization-boundary flip is
+  possible there; it gets a relative gate instead.  The weight-stationary
+  and streaming schedules' bitwise anchor is the batch-tiled megakernel
+  (identical decode + epilogue; only the dataflow and K-padding width
+  differ) — the streaming path is additionally pinned to a small block_m
+  so multi-tile batches exercise the decode-amortization/ping-pong
+  machinery, not the one-tile degenerate case.
+* the fallback paths engage (budget=1) and change nothing.
 
 The sweep is hypothesis-driven when hypothesis is installed; a
 deterministic seeded sweep over random widths (odd-K included) and batches
@@ -86,6 +90,15 @@ def _check_parity(dims, batch, seed):
         y_ws, y_oracle, atol=1e-3, rtol=1e-4,
         err_msg=f"fp32 weight-stationary drifted ({dims}, b={batch})")
 
+    # ---- streaming schedule (mid-size buckets): block_m=8 forces
+    # multiple batch tiles whenever batch > 8, so the once-per-layer
+    # decode is genuinely reused across tiles, not trivially once.
+    y_stream = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                        schedule="stream", block_m=8)
+    np.testing.assert_allclose(
+        y_stream, y_oracle, atol=1e-3, rtol=1e-4,
+        err_msg=f"fp32 streaming drifted ({dims}, b={batch})")
+
     # ---- int8 kernel paths: exact agreement on the quantized datapath
     i8_layer = M.mlp_serve_int8(pack, calib, x, use_kernel=True,
                                 fused=False, interpret=True)
@@ -96,6 +109,10 @@ def _check_parity(dims, batch, seed):
                                      weight_stationary=True,
                                      act_dtype="int8",
                                      act_scales=calib["act_scales"])
+    i8_stream = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                         schedule="stream", block_m=8,
+                                         act_dtype="int8",
+                                         act_scales=calib["act_scales"])
     np.testing.assert_array_equal(
         np.asarray(i8_fused), np.asarray(i8_layer),
         err_msg=f"int8 fused != per-layer chain ({dims}, b={batch})")
@@ -105,6 +122,9 @@ def _check_parity(dims, batch, seed):
     np.testing.assert_array_equal(
         np.asarray(i8_ws), np.asarray(i8_fused),
         err_msg=f"int8 weight-stationary != fused ({dims}, b={batch})")
+    np.testing.assert_array_equal(
+        np.asarray(i8_stream), np.asarray(i8_fused),
+        err_msg=f"int8 streaming != fused ({dims}, b={batch})")
 
     # ---- int8 oracle: different fp implementation — relative gate only
     # (a quantization-boundary flip is legitimate there)
@@ -127,6 +147,20 @@ def _check_parity(dims, batch, seed):
                                    act_scales=calib["act_scales"],
                                    vmem_budget_bytes=1)
     np.testing.assert_array_equal(np.asarray(fb8), np.asarray(i8_layer))
+    # streaming schedule has its own fit (whole batch resident): a 1-byte
+    # budget must drop it to the same per-layer chain, bit for bit
+    fb_stream = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                         schedule="stream",
+                                         vmem_budget_bytes=1)
+    np.testing.assert_array_equal(np.asarray(fb_stream),
+                                  np.asarray(y_layer))
+    fb8_stream = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                          schedule="stream",
+                                          act_dtype="int8",
+                                          act_scales=calib["act_scales"],
+                                          vmem_budget_bytes=1)
+    np.testing.assert_array_equal(np.asarray(fb8_stream),
+                                  np.asarray(i8_layer))
 
 
 # deterministic hypothesis-style sweep: random widths (odd-K included in

@@ -159,6 +159,201 @@ def test_get_plan_memoizes_per_pack_and_config():
     assert serving.get_plan(other, mode="fused", interpret=True) is not a
 
 
+# ------------------- autotuner v2: per-bucket schedule binding (PR 4)
+
+def test_ws_bucket_rows_opt_out_and_explicit_cap():
+    """ws_bucket_rows=0 opts the ws schedule out entirely; an explicit
+    positive value caps its eligibility at that row count."""
+    plan0 = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                               interpret=True, ws_bucket_rows=0)
+    assert not any(p == "fused_ws"
+                   for p in plan0.describe()["bucket_paths"].values())
+    plan2 = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                               interpret=True, ws_bucket_rows=2)
+    paths = plan2.describe()["bucket_paths"]
+    assert paths[1] == "fused_ws" and paths[2] == "fused_ws"
+    assert paths[4] == "fused"
+
+
+def test_measured_crossover_replaces_constant_prior(tmp_path, monkeypatch):
+    """A persisted ws crossover for this backend+stack becomes the plan's
+    prior: the WS_BUCKET_ROWS constant only answers when nothing was ever
+    measured."""
+    from repro.kernels import autotune
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "cache.json"))
+    autotune.clear_memory_cache()
+    try:
+        pack = _rand_pack(DIMS, seed=12)
+        plan = serving.build_plan(pack, mode="fused", interpret=True)
+        d = plan.describe()
+        assert d["ws_prior_source"] == "constant"
+        assert d["ws_prior_rows"] == serving.plans.WS_BUCKET_ROWS
+        assert d["bucket_schedules"][8] == "ws"
+
+        autotune.record_ws_crossover(2, DIMS[0], DIMS[-1],
+                                     backend="interpret",
+                                     stack="stack129x71x7")
+        plan2 = serving.build_plan(pack, mode="fused", interpret=True)
+        d2 = plan2.describe()
+        assert d2["ws_prior_source"] == "measured"
+        assert d2["ws_prior_rows"] == 2
+        assert d2["bucket_schedules"][1] == "ws"
+        assert d2["bucket_schedules"][2] == "ws"
+        assert d2["bucket_schedules"][4] == "batch_tiled"
+        assert d2["ws_crossover_rows"] == 2
+    finally:
+        autotune.clear_memory_cache()
+
+
+def test_opt_out_plan_never_records_a_crossover(tmp_path, monkeypatch):
+    """A ws-opt-out (or capped) plan's bucket table reflects the caller's
+    restriction, not a measurement — it must not write a 'measured'
+    crossover that future default plans would trust."""
+    from repro.kernels import autotune
+    from repro.kernels.autotune import BlockConfig
+    from repro.serving import plans as plans_mod
+    monkeypatch.setenv(autotune.ENV_CACHE, str(tmp_path / "cache.json"))
+    autotune.clear_memory_cache()
+    monkeypatch.setattr(
+        plans_mod.autotune, "get_schedule_config",
+        lambda rows, k, n, *, schedules, prior, **kw: BlockConfig(
+            min(8, rows), 0, 0, source="sweep", schedule=prior))
+    try:
+        pack = _rand_pack(DIMS, seed=17)
+        # interpret=False exercises the recording branch; the fake tuner
+        # keeps real kernels out of the non-interpret path.
+        plan = serving.build_plan(pack, mode="fused", interpret=False,
+                                  ws_bucket_rows=0, block_m=32)
+        assert plan.ws_crossover_rows == 0
+        assert autotune.get_ws_crossover(
+            DIMS[0], DIMS[-1], backend="cpu",
+            stack="stack129x71x7") is None, \
+            "opt-out plan must not persist a crossover"
+        plan2 = serving.build_plan(pack, mode="fused", interpret=False,
+                                   block_m=32)
+        assert autotune.get_ws_crossover(
+            DIMS[0], DIMS[-1], backend="cpu",
+            stack="stack129x71x7") == plan2.ws_crossover_rows
+    finally:
+        autotune.clear_memory_cache()
+
+
+def test_plans_bind_measured_per_bucket_winners(monkeypatch):
+    """ExecutionPlan consumes whatever the per-bucket tuner returns — a
+    measured 'stream wins the mid buckets' table binds fused_stream
+    entries whose per-bucket block_m reaches the kernel, and serving
+    through them stays correct."""
+    from repro.kernels.autotune import BlockConfig
+    from repro.serving import plans as plans_mod
+
+    calls = []
+
+    def fake_schedule_config(rows, k, n, *, schedules, prior, **kw):
+        calls.append((rows, tuple(schedules), prior))
+        sched = "stream" if rows >= 16 else "ws"
+        if sched not in schedules:
+            sched = prior
+        return BlockConfig(min(8, rows), 0, 0, source="sweep",
+                           schedule=sched)
+
+    monkeypatch.setattr(plans_mod.autotune, "get_schedule_config",
+                        fake_schedule_config)
+    pack = _rand_pack(DIMS, seed=13)
+    plan = serving.build_plan(pack, mode="fused", interpret=True)
+    d = plan.describe()
+    assert calls and all(rows in plan.bucket_sizes for rows, _, _ in calls)
+    assert d["bucket_schedules"][1] == "ws"
+    assert d["bucket_schedules"][16] == "stream"
+    assert d["bucket_sources"][16] == "sweep"
+    assert d["bucket_block_m"][16] == 8     # per-bucket tile, not global
+    assert d["ws_crossover_rows"] == 8      # largest ws-bound bucket
+    assert "streaming" in plan.mode_label(16)
+    assert plan.schedule_for(16) == "stream"
+    # the stream binding serves correctly (block_m=8 -> 2 tiles at b=16)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(16, DIMS[0])),
+                    jnp.float32)
+    oracle = serving.build_plan(pack, mode="oracle")
+    np.testing.assert_allclose(plan.run(x), oracle.run(x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_stream_rescues_stack_too_big_for_batch_tiled():
+    """A stack whose *total* working set busts the batch-tiled budget but
+    whose per-layer streamed set fits resolves to fused with stream
+    buckets instead of dropping all the way to per_layer."""
+    from repro.kernels.fantastic4_fused_mlp import (fused_mlp_vmem_bytes,
+                                                    stream_mlp_vmem_bytes)
+    dims = (256,) * 7
+    pack = _rand_pack(dims, seed=21)
+    shapes = tuple(zip(dims[:-1], dims[1:]))
+    stack_b = fused_mlp_vmem_bytes(shapes, block_m=256)
+    stream_b = stream_mlp_vmem_bytes(shapes, rows=256, block_m=256)
+    assert stream_b < stack_b, "test premise: stream must be the smaller set"
+    budget = (stream_b + stack_b) // 2
+    plan = serving.build_plan(pack, mode="auto", interpret=True,
+                              vmem_budget_bytes=budget)
+    d = plan.describe()
+    assert d["resolved_mode"] == "fused"
+    assert any("layer-streamed" in n for n in d["notes"])
+    assert d["bucket_schedules"][32] == "stream"
+    assert d["default_path"] == "per_layer"   # past the largest bucket
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(32, dims[0])),
+                    jnp.float32)
+    oracle = serving.build_plan(pack, mode="oracle")
+    np.testing.assert_allclose(plan.run(x), oracle.run(x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_overflow_default_path_honors_double_buffer():
+    """Batches past the largest bucket run at exact size; a requested
+    double buffer must reach them (it did before per-bucket binding)."""
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                              interpret=True, double_buffer=True,
+                              max_bucket=16)
+    assert plan.default_path == "fused_db"
+    assert plan.path_for(64) == "fused_db"
+    plain = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                               interpret=True, max_bucket=16)
+    assert plain.default_path == "fused"
+
+
+def test_schedule_measure_fit_guards_candidates():
+    """The sweep's measure closure returns inf for a (schedule, block_m)
+    candidate whose working set busts the budget — otherwise the kernel
+    wrapper's silent chain fallback could win the timing and the bucket
+    would carry a fused label over per-layer execution."""
+    from repro.kernels.fantastic4_fused_mlp import stream_mlp_vmem_bytes
+    dims = (256,) * 7
+    pack = _rand_pack(dims, seed=23)
+    shapes = tuple(zip(dims[:-1], dims[1:]))
+    lo = stream_mlp_vmem_bytes(shapes, rows=256, block_m=8)
+    hi = stream_mlp_vmem_bytes(shapes, rows=256, block_m=256)
+    assert lo < hi
+    plan = serving.build_plan(pack, mode="auto", interpret=True,
+                              vmem_budget_bytes=(lo + hi) // 2)
+    measure = plan._schedule_measure(256)
+    assert measure("stream", 256) == float("inf")
+    assert measure("stream", 8) < float("inf")
+
+
+def test_stream_entry_matches_batch_tiled_bitwise_int8():
+    """The engine-facing contract behind re-binding a bucket to stream:
+    on the int8 grid the streaming schedule is bit-identical to the
+    batch-tiled megakernel, so a measured re-bind can never change
+    results."""
+    pack = _rand_pack((512, 512, 256, 12), seed=4)
+    x = jnp.asarray(np.random.default_rng(9).normal(size=(48, 512)),
+                    jnp.float32)
+    calib = serving.calibrate_act_scales(pack, x)
+    i_stream = ops.fantastic4_mlp_fused(
+        x, pack["layers"], interpret=True, schedule="stream", block_m=16,
+        act_dtype="int8", act_scales=calib["act_scales"])
+    i_mk = ops.fantastic4_mlp_fused(
+        x, pack["layers"], interpret=True,
+        act_dtype="int8", act_scales=calib["act_scales"])
+    np.testing.assert_array_equal(np.asarray(i_stream), np.asarray(i_mk))
+
+
 def test_compat_wrappers_flow_through_plans():
     """mlp_serve/mlp_serve_int8 are thin shims over ExecutionPlan now —
     same results, no mode keywords reaching the kernels directly."""
