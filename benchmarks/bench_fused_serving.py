@@ -143,10 +143,18 @@ def schedule_table(cfg, pack, plan, repeats: int) -> list:
             if sched == "stream":
                 # probe the schedule in its streaming regime (≥2 batch
                 # tiles where the bucket allows), not as a one-tile
-                # degenerate case of ws.
+                # degenerate case of ws — but only at a tile whose
+                # streamed working set actually fits: past the budget the
+                # kernel wrapper silently runs the per-layer chain, and a
+                # chain time under a "stream" label is the exact mislabel
+                # the schedule bindings exist to prevent.
                 bm = max(8, b // 2)
+                while bm > 8 and not plan._schedule_fits(sched, b, bm):
+                    bm //= 2
             else:
                 bm = bound.block_m or min(b, plan.block_m or 128)
+            if not plan._schedule_fits(sched, b, bm):
+                continue
             t = _best_of(lambda: kops.fantastic4_mlp_fused(
                 x, pack["layers"], use_kernel=True,
                 interpret=plan.interpret, block_m=bm,

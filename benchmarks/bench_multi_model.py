@@ -1,0 +1,193 @@
+"""Multi-model async serving: one frontend, several packs, real clock.
+
+Serving several compact MLPs from one device is the deployment shape
+FantastIC4 targets — the §V execution units only hit 2.45 TOPS if
+*something* always has a full row tile to launch, and with multiple
+models sharing the engine the idle gaps of one stream are another's
+batches.  This benchmark is the live counterpart of
+``bench_serving_engine`` (which replays on a virtual clock): here the
+``serving.ServingFrontend`` dispatch thread runs on the **real** clock —
+arrivals are honored by sleeping, requests land from ``submit()``,
+deadlines expire in wall time — so what is measured is the runnable
+server, scheduling overhead included.
+
+For each offered load the same seeded ragged Poisson traces (1–8 rows,
+~70% single-row; per-model rate ``load / (n_models · t₁ᵐᵃˣ)`` with t₁
+the calibrated single-request latency) are served two ways:
+
+* **frontend** — every model's trace through ONE ``ServingFrontend``
+  (shared dispatch thread + execution stream, deadline-FIFO across
+  models with the full-tile fast path).  Aggregate throughput counts all
+  models' requests over the frontend makespan; latency is reported per
+  model (p95 against the *intended* arrival time, so scheduling delay
+  counts).
+* **naive** — each model's trace alone, one blocking launch per request
+  as it arrives: the best single-pack no-batching baseline.  The bar the
+  aggregate has to clear: ``aggregate_gain =
+  aggregate_throughput / best(naive throughput)`` ≥ 1 at every load —
+  below 1 the shared frontend would be worse than dedicating the device
+  to its fastest single model.
+
+Extends the repo-root ``BENCH_fused_serving.json`` with
+``multi_model_rows`` (plus ``aggregate_not_slower_everywhere``), guarded
+by ``scripts/check_bench_rows.py`` (row loss by load, per-model schedule
+labels, ``aggregate_gain`` regression); also writes
+results/bench/multi_model.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.bench_fused_serving import _rand_pack, merge_root_json
+from benchmarks.bench_serving_engine import _requests, _service_table
+from benchmarks.common import save
+from repro import serving
+from repro.configs.paper_mlps import MLP_GSC, MLP_HR
+
+LOADS = (0.6, 2.0, 8.0)              # combined offered load: sum(λ·t₁)
+MAX_DELAY_S = 2e-3
+CLOCK = time.monotonic
+
+
+def _naive_real(plan, xs, arrivals) -> dict:
+    """One blocking launch per request, arrivals honored in wall time —
+    the single-pack no-batching baseline, measured on the same clock."""
+    t0 = CLOCK()
+    lats = []
+    t = 0.0
+    for x, a in zip(xs, arrivals):
+        wait = t0 + a - CLOCK()
+        if wait > 0:
+            time.sleep(wait)
+        jax.block_until_ready(plan.run(x))
+        t = CLOCK() - t0
+        lats.append(t - a)
+    makespan = max(t, float(arrivals[-1]))
+    lats = np.asarray(lats)
+    return {"throughput_rps": len(xs) / max(makespan, 1e-12),
+            "latency_p95_ms": float(np.percentile(lats, 95) * 1e3),
+            "latency_mean_ms": float(lats.mean() * 1e3)}
+
+
+def _frontend_real(frontend, trace) -> dict:
+    """Submit the merged (arrival, model, x) trace in wall time; collect
+    per-model latencies against the intended arrival instants."""
+    t0 = CLOCK()
+    futs = []
+    for a, mid, x in trace:
+        wait = t0 + a - CLOCK()
+        if wait > 0:
+            time.sleep(wait)
+        futs.append((mid, a, frontend.submit(mid, x)))
+    served = [(mid, a, f.result(timeout=120.0)) for mid, a, f in futs]
+    makespan = max(max(s.finish - t0 for _, _, s in served),
+                   float(trace[-1][0]))
+    lat_by_model = {}
+    for mid, a, s in served:
+        lat_by_model.setdefault(mid, []).append(s.finish - t0 - a)
+    return {
+        "throughput_rps": len(served) / max(makespan, 1e-12),
+        "makespan_s": makespan,
+        "per_model": {
+            mid: {"throughput_rps": len(ls) / max(makespan, 1e-12),
+                  "latency_p95_ms": float(np.percentile(ls, 95) * 1e3),
+                  "latency_mean_ms": float(np.mean(ls) * 1e3)}
+            for mid, ls in lat_by_model.items()},
+    }
+
+
+def run(fast: bool = False):
+    n_req = 32 if fast else 96
+    configs = (MLP_GSC, MLP_HR)
+    plans, schedules, tables = {}, {}, {}
+    for cfg in configs:
+        plan = serving.build_plan(_rand_pack(cfg), mode="fused")
+        desc = plan.describe()
+        print(f"{cfg.name}: bucket -> schedule " + ", ".join(
+            f"{b}:{desc['bucket_schedules'][b]}"
+            for b in desc["bucket_sizes"]), flush=True)
+        plans[cfg.name] = plan
+        schedules[cfg.name] = {str(b): s for b, s in
+                               desc["bucket_schedules"].items()}
+        tables[cfg.name] = _service_table(plan, repeats=2 if fast else 3)
+    t1 = max(t[1] for t in tables.values())
+
+    # per-model traces: same ragged mix as bench_serving_engine, same
+    # arrival rate for every model (the slower pack's t1 sets the scale)
+    # so the single-pack baselines see the same trace they'd see alone.
+    rows = []
+    for load in LOADS:
+        lam = load / (len(configs) * max(t1, 1e-9))
+        traces = {}
+        for i, cfg in enumerate(configs):
+            rng = np.random.default_rng(int(load * 100) + 13 + i)
+            xs = _requests(cfg, n_req, seed=17 + i)
+            arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_req))
+            traces[cfg.name] = (xs, arrivals)
+
+        # one warm frontend pass over a short prefix (compiles the
+        # submit/coalesce/scatter glue for common combos), then the
+        # timed run on a fresh frontend.
+        for timed in (False, True):
+            frontend = serving.ServingFrontend()
+            for name, plan in plans.items():
+                frontend.register(name, plan, max_delay=MAX_DELAY_S)
+            merged = sorted(
+                (float(a), name, x)
+                for name, (xs, arr) in traces.items()
+                for a, x in zip(arr, xs if timed else xs[:8]))
+            with frontend:
+                fe = _frontend_real(frontend, merged)
+        naive = {name: _naive_real(plans[name], *traces[name])
+                 for name in plans}
+
+        best_name = max(naive, key=lambda n: naive[n]["throughput_rps"])
+        best_naive = naive[best_name]["throughput_rps"]
+        row = {
+            "load": load,
+            "models": [c.name for c in configs],
+            "requests_per_model": n_req,
+            "arrival_rps_per_model": lam,
+            "aggregate_throughput_rps": fe["throughput_rps"],
+            "best_naive_throughput_rps": best_naive,
+            "best_naive_model": best_name,
+            "aggregate_gain": fe["throughput_rps"] / max(best_naive, 1e-12),
+            "launches": frontend.stats["launches"],
+            "per_model": {
+                name: {**fe["per_model"][name],
+                       "naive_throughput_rps":
+                           naive[name]["throughput_rps"],
+                       "naive_latency_p95_ms":
+                           naive[name]["latency_p95_ms"],
+                       "bucket_schedules": schedules[name]}
+                for name in plans},
+        }
+        rows.append(row)
+        per = "  ".join(
+            f"{name} p95 {row['per_model'][name]['latency_p95_ms']:7.2f} ms"
+            for name in plans)
+        print(f"load={load:<5.1f} aggregate {row['aggregate_throughput_rps']:8.1f}"
+              f" req/s vs best naive [{best_name}] {best_naive:8.1f} req/s "
+              f"({row['aggregate_gain']:.2f}x)  {per}", flush=True)
+
+    summary = {
+        "backend": jax.default_backend(),
+        "multi_model_loads": list(LOADS),   # serving_engine owns "loads"
+        "multi_model_rows": rows,
+        "aggregate_not_slower_everywhere": all(
+            r["aggregate_gain"] >= 1.0 - 1e-9 for r in rows),
+    }
+    save("multi_model", summary)
+    merge_root_json(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(ap.parse_args().fast)

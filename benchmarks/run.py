@@ -17,6 +17,10 @@ serving_engine        ragged Poisson arrivals through the micro-batched
                       serving engine vs naive per-request launches;
                       extends BENCH_fused_serving.json with
                       serving_engine_rows
+multi_model           >=2 packs behind one async ServingFrontend on the
+                      real clock vs the best single-pack naive baseline;
+                      extends BENCH_fused_serving.json with
+                      multi_model_rows
 """
 from __future__ import annotations
 
@@ -35,8 +39,9 @@ def main(argv=None):
 
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
-                            bench_int8_fused, bench_pareto,
-                            bench_serving_engine, bench_serving_roofline)
+                            bench_int8_fused, bench_multi_model,
+                            bench_pareto, bench_serving_engine,
+                            bench_serving_roofline)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -46,6 +51,7 @@ def main(argv=None):
         "fused_serving": lambda: bench_fused_serving.run(fast=args.fast),
         "int8_fused": lambda: bench_int8_fused.run(fast=args.fast),
         "serving_engine": lambda: bench_serving_engine.run(fast=args.fast),
+        "multi_model": lambda: bench_multi_model.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -6,8 +6,9 @@
 ``snapshot`` records, for every row present in the current repo-root JSON,
 its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
 (model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
-by (model, bucket, schedule)) and its guarded metric.  ``check`` then fails
-loudly if, after the benchmarks reran:
+by (model, bucket, schedule), ``multi_model_rows`` by (load,)) and its
+guarded metric.  ``check`` then fails loudly if, after the benchmarks
+reran:
 
 * any recorded row identity is missing — a benchmark that silently stopped
   emitting a section would ship a shrunken perf file and break the
@@ -15,6 +16,9 @@ loudly if, after the benchmarks reran:
 * any ``rows`` / ``int8_rows`` row lost its ``schedule`` label — the label
   says which kernel schedule produced the number, without it a b≤8
   ``fused_ms`` entry is ambiguous between the ws and batch-tiled paths;
+  likewise any ``multi_model_rows`` per-model entry missing its
+  ``bucket_schedules`` table (the aggregate number is only meaningful
+  against the schedules each model's buckets bound);
 * any guarded metric regressed more than ``CI_BENCH_REGRESSION_PCT``
   (default 25) percent against the snapshot.  The guarded metrics are the
   rows' *self-normalized A/B ratios* (fused-vs-per-layer ``speedup``,
@@ -42,6 +46,7 @@ SECTIONS = {
     "int8_rows": ("model", "batch"),
     "serving_engine_rows": ("model", "load"),
     "schedule_rows": ("model", "bucket", "schedule"),
+    "multi_model_rows": ("load",),
 }
 
 # guarded metric per section and the direction that counts as regression.
@@ -51,6 +56,7 @@ METRICS = {
     "rows": ("speedup", "higher_is_better"),
     "int8_rows": ("int8_fused_speedup_vs_layer", "higher_is_better"),
     "serving_engine_rows": ("throughput_gain", "higher_is_better"),
+    "multi_model_rows": ("aggregate_gain", "higher_is_better"),
 }
 
 # sections whose rows must name the kernel schedule that produced them
@@ -130,6 +136,12 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
                 keys = SECTIONS[section]
                 rid = [section] + [row.get(k) for k in keys]
                 failures.append(f"{rid}: missing schedule label")
+    for row in data.get("multi_model_rows", []):
+        for model, entry in (row.get("per_model") or {}).items():
+            if not entry.get("bucket_schedules"):
+                failures.append(
+                    f"['multi_model_rows', {row.get('load')}, {model}]: "
+                    "missing bucket_schedules labels")
 
     if failures:
         print("BENCH_fused_serving.json failed the bench guard:")

@@ -6,10 +6,12 @@
 #   CI_SKIP_BENCH=1 scripts/ci.sh # tests only
 #
 # The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode —
-# including bench_serving_engine (ragged-arrival engine vs naive) — and
-# rewrites BENCH_fused_serving.json at the repo root (fp32 rows + int8_rows
-# + serving_engine_rows + schedule_rows), so every PR leaves the cross-PR
-# perf trajectory current.  A benchmark overrun (budget exceeded) fails CI
+# including bench_serving_engine (ragged-arrival engine vs naive) and
+# bench_multi_model (>=2 packs behind the async ServingFrontend on the
+# real clock) — and rewrites BENCH_fused_serving.json at the repo root
+# (fp32 rows + int8_rows + serving_engine_rows + schedule_rows +
+# multi_model_rows), so every PR leaves the cross-PR perf trajectory
+# current.  A benchmark overrun (budget exceeded) fails CI
 # loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows
 # the committed baseline had, dropped a row's kernel-schedule label, or

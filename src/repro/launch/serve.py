@@ -21,6 +21,13 @@ past the VMEM budget surfaces as a plan note first.  ``--no-fused``
 selects the chained per-layer kernel; ``--engine`` additionally pushes the
 batch through the micro-batcher as single-row ragged requests (the
 continuous-batching path).
+
+With ``--engine --async`` the ragged requests go through the threaded
+``serving.ServingFrontend`` instead of the inline flush — a real-clock
+dispatch thread, futures on the submit side — and ``--multi a,b`` freezes
+additional paper-MLP packs into the same frontend so several models share
+the single execution stream (deadline-FIFO across models; per-model
+latency reported).
 """
 from __future__ import annotations
 
@@ -39,12 +46,11 @@ from ..nn.module import QuantCtx
 from .. import serving
 
 
-def serve_mlp(args):
-    """Frozen paper-MLP serving through the unified serving engine."""
+def _freeze_mlp_pack(cfg, seed: int = 0):
+    """Init + freeze one paper MLP to its packed-int4 serving pack."""
     from ..models import mlp as M
 
-    cfg = MLPS[args.arch]
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     params, bn = M.mlp_init(key, cfg)
     qs = qat.build_qstate(params)
     pack = M.freeze_mlp(params, qs, bn, lam=cfg.lam)
@@ -53,6 +59,14 @@ def serve_mlp(args):
           f"{summ['compressed_bytes']} bytes "
           f"({summ['compression_ratio']:.1f}x vs fp32), "
           f"formats {summ['formats']}")
+    return pack
+
+
+def serve_mlp(args):
+    """Frozen paper-MLP serving through the unified serving engine."""
+    cfg = MLPS[args.arch]
+    key = jax.random.PRNGKey(0)
+    pack = _freeze_mlp_pack(cfg)
 
     b = args.batch
     x = jax.random.normal(key, (b, cfg.d_in), jnp.float32)
@@ -99,7 +113,9 @@ def serve_mlp(args):
           f"({b/max(dt, 1e-12):.0f} samples/s, batch {b})")
     print("logits[0]:", np.asarray(y[0]).round(3).tolist())
 
-    if args.engine:
+    if args.engine and args.async_frontend:
+        serve_mlp_async(args, cfg, plan, x, y)
+    elif args.engine:
         # ragged path: the same batch as b single-row requests through the
         # queue -> bucket -> plan pipeline.  One untimed pass first — the
         # timed number must be a serving figure, not a trace/compile one
@@ -122,6 +138,62 @@ def serve_mlp(args):
     return y
 
 
+def serve_mlp_async(args, cfg, plan, x, y_ref):
+    """``--engine --async``: the ragged requests through the threaded
+    ServingFrontend; ``--multi`` co-serves additional frozen packs on the
+    same dispatch thread/execution stream."""
+    key = jax.random.PRNGKey(1)
+    models = {cfg.name: (plan, list(x))}
+    for arch in (a for a in (args.multi or "").split(",") if a):
+        if arch not in MLPS:
+            raise SystemExit(f"--multi: unknown paper MLP {arch!r} "
+                             f"(have {sorted(MLPS)})")
+        if MLPS[arch].name in models:
+            raise SystemExit(f"--multi: {arch!r} duplicates --arch or an "
+                             "earlier --multi entry")
+        mcfg = MLPS[arch]
+        mpack = _freeze_mlp_pack(mcfg, seed=1)
+        key, sub = jax.random.split(key)
+        mx = jax.random.normal(sub, (args.batch, mcfg.d_in), jnp.float32)
+        # co-served packs honor the same flags as the primary plan — the
+        # per-model latency lines are only comparable if every model runs
+        # the requested configuration.
+        mplan = serving.build_plan(
+            mpack, mode="fused" if args.fused else "per_layer",
+            act_dtype="int8" if args.int8 else "float32",
+            double_buffer=args.double_buffer,
+            calib_x=mx if args.int8 else None)
+        models[mcfg.name] = (mplan, list(mx))
+
+    # warm every model's request path untimed (compile is not a serving
+    # number), then serve all models' ragged rows through one frontend.
+    for mplan, rows in models.values():
+        jax.block_until_ready(serving.MicroBatcher(mplan).serve(rows)[-1])
+    frontend = serving.ServingFrontend()
+    for name, (mplan, _) in models.items():
+        frontend.register(name, mplan)
+    t0 = time.time()
+    with frontend:
+        futs = [(name, frontend.submit(name, row))
+                for name, (_, rows) in models.items() for row in rows]
+        served = [(name, f.result(60.0)) for name, f in futs]
+    dt = time.time() - t0
+    n = len(served)
+    for name in models:
+        lats = [s.latency * 1e3 for m, s in served if m == name]
+        st = frontend.stats["by_model"][name]
+        print(f"async frontend [{name}]: {st['requests']} requests in "
+              f"{st['launches']} launches, latency mean "
+              f"{np.mean(lats):.2f} ms / p95 "
+              f"{np.percentile(lats, 95):.2f} ms")
+    print(f"async frontend: {n} requests across {len(models)} model(s) in "
+          f"{dt*1e3:.2f} ms total ({n/max(dt, 1e-12):.0f} samples/s, "
+          f"{frontend.stats['launches']} launches)")
+    got = np.concatenate([np.asarray(s.y) for m, s in served
+                          if m == cfg.name])
+    np.testing.assert_allclose(got, np.asarray(y_ref), atol=1e-5, rtol=1e-5)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -141,7 +213,20 @@ def main(argv=None):
     ap.add_argument("--engine", action="store_true",
                     help="MLP path: also serve the batch as ragged "
                          "single-row requests through the micro-batcher")
+    ap.add_argument("--async", dest="async_frontend", action="store_true",
+                    help="with --engine: drive the ragged requests "
+                         "through the threaded ServingFrontend (real "
+                         "clock, futures) instead of the inline flush")
+    ap.add_argument("--multi", default=None, metavar="ARCH[,ARCH...]",
+                    help="with --engine --async: co-serve additional "
+                         "frozen paper-MLP packs from the same frontend "
+                         "(one execution stream, deadline-FIFO across "
+                         "models)")
     args = ap.parse_args(argv)
+    if args.multi and not (args.engine and args.async_frontend):
+        raise SystemExit("--multi requires --engine --async")
+    if args.async_frontend and not args.engine:
+        raise SystemExit("--async requires --engine")
 
     if args.arch in MLPS:
         return serve_mlp(args)

@@ -11,7 +11,12 @@
 * :mod:`batcher` — :class:`MicroBatcher`: FIFO request queue coalesced
   into those buckets (full-tile flush, deadline-based partial flush),
   results scattered back per request; :func:`replay` drives a ragged
-  arrival trace through it work-conservingly.
+  arrival trace through it work-conservingly on a virtual clock.
+* :mod:`frontend` — :class:`ServingFrontend`: the live driver — a
+  :class:`ModelRegistry` of packs behind one real-clock dispatch thread
+  (sleep until ``min(next_deadline)``, oldest-deadline-first launches
+  with a full-tile fast path), futures / asyncio on the submit side —
+  multi-model serving on a single execution stream.
 
 Every serving entry point (``models.mlp.mlp_serve*``, ``launch.serve``,
 the benchmarks, the examples) flows through this package instead of
@@ -20,3 +25,5 @@ threading mode keywords down to the kernels.
 from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
                     build_plan, calibrate_act_scales, get_plan)
 from .batcher import Completion, MicroBatcher, replay         # noqa: F401
+from .frontend import (ModelRegistry, Served,                 # noqa: F401
+                       ServingFrontend)

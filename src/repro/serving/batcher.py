@@ -27,15 +27,44 @@ from a padded/coalesced bucket is bit-identical to the same request served
 alone through the same bucket entry — the padding-parity contract
 ``tests/test_serving_engine.py`` enforces.
 
+Clock contract
+--------------
+
 The batcher is clock-agnostic: every method takes an explicit ``now`` (or
-falls back to ``time.monotonic``), so tests and the ragged-arrival
-benchmark can drive it on a virtual clock while the kernel launches are
-timed for real.
+falls back to ``self.clock``), so tests and the ragged-arrival benchmark
+can drive it on a virtual clock while the kernel launches run for real.
+Two clock domains therefore exist and the stats keep them apart:
+
+* ``stats["wall_compute_s"]`` — always the **live** ``perf_counter``
+  measurement of the blocking device round-trips, whatever clock drives
+  the trigger logic.  This is the number a host-load investigation wants.
+* ``stats["compute_s"]`` — compute time in the **batcher's clock
+  domain**.  With the default live clock the two are the same
+  measurement.  When the caller injects a virtual clock (``clock=`` a
+  fake, or ``clock=None`` for drivers like :func:`replay` that pass an
+  explicit ``now`` everywhere), the batcher cannot know the virtual cost
+  of a launch — the driver does — so ``run_one`` leaves ``compute_s``
+  alone and the driver accounts its virtual service time via
+  :meth:`MicroBatcher.account_compute`.  Mixing the two domains (the
+  pre-fix behavior: live seconds accumulated under a virtual makespan)
+  made ``compute_s / makespan`` utilization nonsense.
+
+``pump(now=None)`` re-reads the clock on **every** loop iteration: a
+deadline that expires while a long bucket blocks on compute is flushed by
+the same pump instead of overshooting ``max_delay`` until the next driver
+cycle.  An explicit ``now`` is evaluated exactly once (the virtual-clock
+replay path decides time itself).
+
+All mutating entry points are serialized by an internal lock, so a
+threaded driver (``serving.frontend``) may ``submit`` from many threads
+while one dispatch thread pumps; the lock is *released* around the
+blocking device round-trip so intake never stalls behind compute.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -47,7 +76,7 @@ import numpy as np
 @dataclasses.dataclass
 class _Pending:
     rid: int
-    x: jax.Array              # (rows, d_in)
+    x: np.ndarray             # (rows, d_in) — host-resident until launch
     rows: int
     arrival: float
     deadline: float
@@ -57,7 +86,7 @@ class _Pending:
 class Completion:
     """One served request: scattered logits + queueing metadata."""
     rid: int
-    y: jax.Array              # (rows, d_out)
+    y: np.ndarray             # (rows, d_out)
     arrival: float
     bucket: int               # rows of the bucket that served it
     batched_rows: int         # real rows sharing the launch
@@ -66,43 +95,68 @@ class Completion:
 class MicroBatcher:
     """See module docstring.  ``max_bucket`` caps coalescing below the
     plan's largest bucket (``max_bucket=1`` degenerates to naive
-    per-request serving — the benchmark baseline)."""
+    per-request serving — the benchmark baseline).  ``clock=None`` marks
+    a fully virtual batcher: every call must pass an explicit ``now`` and
+    the driver owns compute accounting (see the clock contract above).
+
+    ``keep_results=False`` is for drivers that consume completions from
+    ``run_one``/``pump`` return values (the serving frontend resolves
+    futures from them): nothing is retained for :meth:`result`, otherwise
+    a long-running server would hold every output it ever produced."""
 
     def __init__(self, plan, *, max_delay: float = 2e-3,
                  max_bucket: Optional[int] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Optional[Callable[[], float]] = time.monotonic,
+                 keep_results: bool = True):
         self.plan = plan
         self.max_delay = max_delay
         top = max(plan.bucket_sizes)
         self.max_bucket = min(max_bucket or top, top)
         self.clock = clock
+        # live-domain compute accounting only when trigger time and
+        # perf_counter advance together; any injected clock is virtual.
+        self._live_clock = clock is time.monotonic
+        self._lock = threading.RLock()
+        self.keep_results = keep_results
         self._queue: Deque[_Pending] = collections.deque()
         self._queued_rows = 0
+        self._inflight: set = set()          # submitted, result not stored
         self._results: Dict[int, Completion] = {}
         self._next_rid = 0
         self.stats = {"requests": 0, "rows": 0, "flushes": 0,
                       "flushed_rows": 0, "padded_rows": 0,
-                      "bucket_hist": {}, "compute_s": 0.0}
+                      "bucket_hist": {}, "compute_s": 0.0,
+                      "wall_compute_s": 0.0}
+
+    def _now(self, now: Optional[float]) -> float:
+        if now is not None:
+            return now
+        if self.clock is None:
+            raise ValueError(
+                "virtual batcher (clock=None): pass an explicit now=")
+        return self.clock()
 
     # ------------------------------------------------------------- intake
 
     def submit(self, x, now: Optional[float] = None) -> int:
         """Queue one request (``(rows, d_in)`` or a single ``(d_in,)``
-        row); returns its request id."""
-        now = self.clock() if now is None else now
-        x = jnp.asarray(x, jnp.float32)
+        row); returns its request id.  Thread-safe."""
+        now = self._now(now)
+        x = np.asarray(x, np.float32)         # host-side: no XLA dispatch
         if x.ndim == 1:
             x = x[None, :]
         if x.ndim != 2 or x.shape[1] != self.plan.d_in:
             raise ValueError(f"request must be (rows, {self.plan.d_in}), "
                              f"got {x.shape}")
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(_Pending(rid, x, x.shape[0], now,
-                                    now + self.max_delay))
-        self._queued_rows += x.shape[0]
-        self.stats["requests"] += 1
-        self.stats["rows"] += x.shape[0]
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._queue.append(_Pending(rid, x, x.shape[0], now,
+                                        now + self.max_delay))
+            self._queued_rows += x.shape[0]
+            self._inflight.add(rid)
+            self.stats["requests"] += 1
+            self.stats["rows"] += x.shape[0]
         return rid
 
     @property
@@ -110,17 +164,19 @@ class MicroBatcher:
         return self._queued_rows
 
     def next_deadline(self) -> Optional[float]:
-        return self._queue[0].deadline if self._queue else None
+        with self._lock:
+            return self._queue[0].deadline if self._queue else None
 
     def oldest_arrival(self) -> Optional[float]:
-        return self._queue[0].arrival if self._queue else None
+        with self._lock:
+            return self._queue[0].arrival if self._queue else None
 
     # -------------------------------------------------------------- flush
 
     def _take(self) -> List[_Pending]:
         """Pop whole requests FIFO up to ``max_bucket`` rows (always at
         least one request — an oversized request runs alone at exact
-        size rather than being split)."""
+        size rather than being split).  Caller holds the lock."""
         taken: List[_Pending] = []
         rows = 0
         while self._queue:
@@ -134,60 +190,93 @@ class MicroBatcher:
         self._queued_rows -= rows
         return taken
 
+    def account_compute(self, dt: float) -> None:
+        """Record ``dt`` seconds of compute in the batcher's clock domain.
+        Virtual-clock drivers (e.g. :func:`replay` with a service-time
+        table) call this with their virtual cost; the live wall time of
+        the launch is already in ``stats["wall_compute_s"]``."""
+        with self._lock:
+            self.stats["compute_s"] += dt
+
     def run_one(self, now: Optional[float] = None
                 ) -> Tuple[List[Completion], int, float]:
         """Serve one bucket now (no trigger checks — the caller decided).
-        Returns ``(completions, bucket_rows, compute_seconds)``; compute
-        time covers the blocking device round-trip for the whole bucket.
+        Returns ``(completions, bucket_rows, wall_seconds)``; wall time
+        covers the blocking device round-trip for the whole bucket.  The
+        lock is dropped around the round-trip so submits stay live.
         """
-        now = self.clock() if now is None else now
-        taken = self._take()
+        now = self._now(now)
+        with self._lock:
+            taken = self._take()
         if not taken:
             return [], 0, 0.0
         rows = sum(p.rows for p in taken)
         bucket = self.plan.bucket_for(rows)
         padded = (bucket or rows) - rows
-        xb = jnp.concatenate([p.x for p in taken], axis=0) if len(taken) > 1 \
-            else taken[0].x
+        # coalesce/pad/scatter run host-side in numpy: every distinct
+        # (request count, row split) combo would otherwise compile its own
+        # tiny concat/pad/slice XLA programs, and under ragged live
+        # traffic those combos never stop being new — the bucket entry is
+        # the only device program a launch should ever wait on.
+        xb = np.concatenate([p.x for p in taken], axis=0) \
+            if len(taken) > 1 else taken[0].x
         t0 = time.perf_counter()
         if bucket is None:
             y = self.plan.run(xb)                 # oversized: exact rows
             bucket = rows
         else:
             if padded:
-                xb = jnp.pad(xb, ((0, padded), (0, 0)))
-            y = self.plan.entry(bucket)(xb)
-        y = jax.block_until_ready(y)
+                xb = np.pad(xb, ((0, padded), (0, 0)))
+            y = self.plan.entry(bucket)(jnp.asarray(xb))
+        y = np.asarray(jax.block_until_ready(y))
         dt = time.perf_counter() - t0
 
         out: List[Completion] = []
         off = 0
-        for p in taken:
-            c = Completion(p.rid, y[off:off + p.rows], p.arrival, bucket,
-                           rows)
-            self._results[p.rid] = c
-            out.append(c)
-            off += p.rows
-        st = self.stats
-        st["flushes"] += 1
-        st["flushed_rows"] += rows
-        st["padded_rows"] += padded
-        st["bucket_hist"][bucket] = st["bucket_hist"].get(bucket, 0) + 1
-        st["compute_s"] += dt
+        with self._lock:
+            for p in taken:
+                c = Completion(p.rid, y[off:off + p.rows], p.arrival, bucket,
+                               rows)
+                if self.keep_results:
+                    self._results[p.rid] = c
+                self._inflight.discard(p.rid)
+                out.append(c)
+                off += p.rows
+            st = self.stats
+            st["flushes"] += 1
+            st["flushed_rows"] += rows
+            st["padded_rows"] += padded
+            st["bucket_hist"][bucket] = st["bucket_hist"].get(bucket, 0) + 1
+            st["wall_compute_s"] += dt
+            if self._live_clock:
+                st["compute_s"] += dt
         return out, bucket, dt
 
     def pump(self, now: Optional[float] = None,
              force: bool = False) -> List[Completion]:
         """Flush every bucket whose trigger has fired (full tile or
-        expired deadline; everything when ``force``)."""
-        now = self.clock() if now is None else now
+        expired deadline; everything when ``force``).
+
+        Without an explicit ``now`` the clock is re-read on every
+        iteration: a deadline expiring *during* a bucket's blocking
+        compute triggers in the same pump instead of waiting (and
+        overshooting ``max_delay``) for the next driver cycle.  An
+        explicit ``now`` is honored as-is — virtual-clock drivers decide
+        what time it is."""
+        reread = now is None
+        cur = self._now(now)
         done: List[Completion] = []
-        while self._queue:
-            full = self._queued_rows >= self.max_bucket
-            due = self._queue[0].deadline <= now
-            if not (full or due or force):
-                break
-            done.extend(self.run_one(now)[0])
+        while True:
+            with self._lock:
+                if not self._queue:
+                    break
+                full = self._queued_rows >= self.max_bucket
+                due = self._queue[0].deadline <= cur
+                if not (full or due or force):
+                    break
+            done.extend(self.run_one(cur)[0])
+            if reread:
+                cur = self.clock()
         return done
 
     def flush(self, now: Optional[float] = None) -> List[Completion]:
@@ -196,10 +285,21 @@ class MicroBatcher:
     # ------------------------------------------------------------ results
 
     def result(self, rid: int) -> Optional[Completion]:
-        """Pop a completed request's result (None while still queued)."""
-        return self._results.pop(rid, None)
+        """Pop a completed request's result.  Returns ``None`` while the
+        request is still queued or in flight; raises ``KeyError`` for a
+        rid that was never issued or whose result was already consumed —
+        previously both cases returned ``None`` indistinguishably from
+        "still queued", hiding double-pop bugs in drivers."""
+        with self._lock:
+            if rid in self._results:
+                return self._results.pop(rid)
+            if rid in self._inflight:
+                return None
+            if not (0 <= rid < self._next_rid):
+                raise KeyError(f"unknown request id {rid}")
+            raise KeyError(f"request {rid}: result already consumed")
 
-    def serve(self, xs: Sequence) -> List[jax.Array]:
+    def serve(self, xs: Sequence) -> List[np.ndarray]:
         """Synchronous convenience: submit every request, drain the queue,
         return logits in submission order."""
         rids = [self.submit(x) for x in xs]
@@ -219,11 +319,15 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
     launches run for real on device.  When ``service_times`` maps bucket
     rows → seconds (a pre-calibrated table), the virtual clock advances by
     the table instead of the noisy live measurement — the live run still
-    produces (and scatters) every result.  Returns per-request latencies
-    and throughput over the virtual makespan.
+    produces (and scatters) every result.  The batcher runs fully
+    virtual (``clock=None``): ``stats["compute_s"]`` carries the
+    virtual-makespan accounting and ``stats["wall_compute_s"]`` the live
+    launches, never mixed.  Returns per-request latencies and throughput
+    over the virtual makespan.
     """
     order = np.argsort(np.asarray(arrivals), kind="stable")
-    batcher = MicroBatcher(plan, max_delay=max_delay, max_bucket=max_bucket)
+    batcher = MicroBatcher(plan, max_delay=max_delay, max_bucket=max_bucket,
+                           clock=None)
     todo = collections.deque(
         (float(arrivals[i]), int(i)) for i in order)
     completions: Dict[int, Completion] = {}
@@ -244,6 +348,7 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
         done, bucket, dt = batcher.run_one(now=start)
         if service_times is not None:
             dt = service_times.get(bucket, dt)
+        batcher.account_compute(dt)
         engine_free = start + dt
         for c in done:
             completions[rid_to_req[c.rid]] = c

@@ -1,0 +1,334 @@
+"""Async multi-model serving frontend: a real-clock driver over batchers.
+
+The :class:`MicroBatcher` decides *what* to coalesce; until now the repo
+only had virtual-clock drivers (``replay``, the benchmarks) around it.
+This module is the missing runtime half — the thing that turns the replay
+simulator into a runnable server, and the deployment shape FantastIC4
+targets: **many small compact MLPs sharing one device** (the paper's §V
+units are never idle only if *something* always has a full tile to
+launch).
+
+    submit(model_id, x) ──▶ per-model MicroBatcher ──▶ one dispatch
+    (any thread / async)     (queue → bucket)          thread, single
+                                                       execution stream
+
+Driver loop
+-----------
+
+One daemon thread owns the (real, ``time.monotonic``) clock and the
+execution stream:
+
+1. **pick** the next launch among batchers whose trigger has fired — a
+   *full tile* (pending rows ≥ the largest bucket) launches immediately,
+   a *due deadline* (oldest request waited ``max_delay``) launches a
+   partial bucket.  Among fired batchers the **oldest head deadline
+   wins** (deadline = arrival + ``max_delay``, so this is global FIFO in
+   arrival order across models).
+2. if nothing fired, **sleep until ``min(next_deadline)``** across all
+   registered models — or indefinitely when every queue is empty; any
+   ``submit`` notifies the condition variable, so a full tile formed by a
+   burst launches without waiting out the deadline.
+3. launch via ``MicroBatcher.run_one()`` with the batcher's lock dropped
+   around the device round-trip — submits keep landing while the kernel
+   runs, and the next pick re-reads the clock, so deadlines that expired
+   during compute are served next (the ``pump`` clock fix, satellite of
+   the same PR, enforces the same rule inside single-batcher drivers).
+
+Fairness
+--------
+
+Oldest-deadline-first *across* models is starvation-free by
+construction: a backlogged model's full tiles run while nothing is due
+(work conservation), but the moment a trickle model's request ages past
+its ``max_delay`` its deadline is the oldest fired trigger and it
+preempts further full tiles.  A model under sustained load therefore
+bounds another model's extra wait by one bucket's compute, not by the
+backlog depth (``tests/test_serving_frontend.py`` pins this).
+
+Clock contract
+--------------
+
+The frontend is the *live* driver: batchers it registers run on its
+``time.monotonic`` clock, latencies reported in :class:`Served` are wall
+time (submit → results scattered), and ``stats["compute_s"]`` equals
+``stats["wall_compute_s"]`` (same domain).  Virtual-time experiments
+belong to ``serving.replay``, which owns its clock explicitly — the two
+drivers never share a batcher.
+
+Sync callers get a ``concurrent.futures.Future`` back from
+:meth:`ServingFrontend.submit`; async callers ``await`` the same request
+through :meth:`ServingFrontend.asubmit` (the future is wrapped into the
+running asyncio loop — the driver thread doubles as the executor, no
+event-loop-blocking calls anywhere on the await path).
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batcher import MicroBatcher
+from .plans import ExecutionPlan
+
+
+@dataclasses.dataclass
+class Served:
+    """One completed request as the frontend hands it back."""
+    model_id: str
+    rid: int
+    y: "np.ndarray"           # (rows, d_out), host-resident (see batcher)
+    arrival: float            # frontend clock at submit
+    finish: float             # frontend clock when results scattered
+    latency: float            # finish - arrival (wall seconds)
+    bucket: int               # rows of the bucket that served it
+    batched_rows: int         # real rows sharing the launch
+
+
+class ModelRegistry:
+    """Model id → (:class:`ExecutionPlan`, :class:`MicroBatcher`).
+
+    Every registered batcher shares the registry's clock, so one dispatch
+    loop can compare deadlines across models directly.  Registration is
+    thread-safe and allowed while a frontend is running (the driver picks
+    the new queue up on its next cycle).  Registered batchers default to
+    ``keep_results=False``: a frontend consumes completions from
+    ``run_one``'s return value, so retaining them for ``result()`` would
+    hold every output a long-running server ever produced — pass
+    ``keep_results=True`` only for a batcher you drive yourself."""
+
+    def __init__(self, *, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._plans: Dict[str, ExecutionPlan] = {}
+        self._batchers: Dict[str, MicroBatcher] = {}
+
+    def register(self, model_id: str, plan: ExecutionPlan, *,
+                 max_delay: float = 2e-3,
+                 max_bucket: Optional[int] = None,
+                 keep_results: bool = False) -> MicroBatcher:
+        with self._lock:
+            if model_id in self._batchers:
+                raise ValueError(f"model {model_id!r} already registered")
+            batcher = MicroBatcher(plan, max_delay=max_delay,
+                                   max_bucket=max_bucket, clock=self.clock,
+                                   keep_results=keep_results)
+            self._plans[model_id] = plan
+            self._batchers[model_id] = batcher
+        return batcher
+
+    def plan(self, model_id: str) -> ExecutionPlan:
+        return self._plans[model_id]
+
+    def batcher(self, model_id: str) -> MicroBatcher:
+        try:
+            return self._batchers[model_id]
+        except KeyError:
+            raise KeyError(f"model {model_id!r} not registered; have "
+                           f"{sorted(self._batchers)}") from None
+
+    def items(self) -> List[Tuple[str, MicroBatcher]]:
+        with self._lock:
+            return list(self._batchers.items())
+
+    def ids(self) -> List[str]:
+        with self._lock:
+            return list(self._batchers)
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._batchers
+
+    def __len__(self) -> int:
+        return len(self._batchers)
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest queued deadline across every model (None when idle)."""
+        deadlines = [d for _, b in self.items()
+                     if (d := b.next_deadline()) is not None]
+        return min(deadlines) if deadlines else None
+
+
+class ServingFrontend:
+    """See module docstring.  Use as a context manager (starts/stops the
+    dispatch thread) or call :meth:`start` / :meth:`close` explicitly."""
+
+    def __init__(self, registry: Optional[ModelRegistry] = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        self.registry = registry if registry is not None \
+            else ModelRegistry(clock=clock)
+        self.clock = self.registry.clock
+        self._cond = threading.Condition()
+        self._futures: Dict[Tuple[str, int],
+                            concurrent.futures.Future] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._draining = True
+        self._error: Optional[BaseException] = None
+        self.stats = {"launches": 0, "by_model": {}}
+
+    def _model_stats(self, model_id: str) -> dict:
+        # lazy: models may be registered through self.register OR straight
+        # through the registry (documented as legal while running).
+        return self.stats["by_model"].setdefault(
+            model_id, {"requests": 0, "launches": 0})
+
+    # ---------------------------------------------------------- lifecycle
+
+    def start(self) -> "ServingFrontend":
+        with self._cond:
+            if self._running:
+                return self
+            if self._thread is not None and self._thread.is_alive():
+                raise RuntimeError("previous dispatch thread is still "
+                                   "draining; close() it first")
+            self._running = True
+            self._thread = threading.Thread(
+                target=self._loop, name="serving-frontend", daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self, *, drain: bool = True,
+              timeout: Optional[float] = 30.0) -> None:
+        """Stop the driver.  ``drain=True`` (default) serves everything
+        still queued before the thread exits; ``drain=False`` cancels the
+        outstanding futures instead.  Raises ``RuntimeError`` if the
+        dispatch thread is still draining after ``timeout`` — the caller
+        must retry (idempotent) rather than believe the stream stopped;
+        futures are only cancelled once the thread is provably dead."""
+        with self._cond:
+            self._draining = drain
+            if self._running:
+                self._running = False
+                self._cond.notify_all()
+        thread = self._thread
+        if thread is not None:
+            thread.join(timeout)
+            if thread.is_alive():
+                raise RuntimeError(
+                    f"dispatch thread still draining after {timeout} s; "
+                    "retry close() (or close(drain=False))")
+            self._thread = None
+        if not drain:
+            with self._cond:
+                for fut in self._futures.values():
+                    fut.cancel()
+                self._futures.clear()
+
+    def __enter__(self) -> "ServingFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # ------------------------------------------------------------- intake
+
+    def register(self, model_id: str, plan: ExecutionPlan, *,
+                 max_delay: float = 2e-3,
+                 max_bucket: Optional[int] = None) -> MicroBatcher:
+        batcher = self.registry.register(model_id, plan,
+                                         max_delay=max_delay,
+                                         max_bucket=max_bucket)
+        self._model_stats(model_id)
+        with self._cond:
+            self._cond.notify_all()
+        return batcher
+
+    def submit(self, model_id: str, x) -> concurrent.futures.Future:
+        """Queue one request from any thread; resolves to a
+        :class:`Served` when its bucket has run."""
+        batcher = self.registry.batcher(model_id)
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._cond:
+            if self._error is not None:
+                raise RuntimeError(
+                    "frontend dispatch thread died") from self._error
+            if not self._running:
+                raise RuntimeError("frontend is not running (use "
+                                   "`with frontend:` or call start())")
+            rid = batcher.submit(x, now=self.clock())
+            self._futures[(model_id, rid)] = fut
+            self._model_stats(model_id)["requests"] += 1
+            self._cond.notify_all()
+        return fut
+
+    async def asubmit(self, model_id: str, x) -> Served:
+        """Asyncio face of :meth:`submit`: awaitable from any coroutine,
+        driven by the same dispatch thread."""
+        return await asyncio.wrap_future(self.submit(model_id, x))
+
+    def serve(self, model_id: str, xs: Sequence,
+              timeout: Optional[float] = None) -> List[Served]:
+        """Synchronous convenience: submit every request, block until all
+        are served, return in submission order."""
+        futs = [self.submit(model_id, x) for x in xs]
+        return [f.result(timeout) for f in futs]
+
+    # ----------------------------------------------------------- dispatch
+
+    def _pick(self, now: float) -> Optional[Tuple[str, MicroBatcher]]:
+        """The fired batcher with the oldest head deadline: full tiles
+        fire immediately, partial buckets fire when due — one total order
+        (deadline = arrival + max_delay ⇒ global arrival FIFO)."""
+        best = None
+        best_deadline = None
+        for model_id, batcher in self.registry.items():
+            deadline = batcher.next_deadline()
+            if deadline is None:
+                continue
+            fired = (deadline <= now
+                     or batcher.pending_rows >= batcher.max_bucket)
+            if not fired:
+                continue
+            if best_deadline is None or deadline < best_deadline:
+                best, best_deadline = (model_id, batcher), deadline
+        return best
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                if not self._running:
+                    if not self._draining:
+                        return
+                    pick = next(((m, b) for m, b in self.registry.items()
+                                 if b.pending_rows), None)
+                    if pick is None:
+                        return
+                else:
+                    now = self.clock()
+                    pick = self._pick(now)
+                    if pick is None:
+                        deadline = self.registry.next_deadline()
+                        self._cond.wait(
+                            None if deadline is None
+                            else max(deadline - now, 0.0))
+                        continue
+            model_id, batcher = pick
+            try:
+                done, _bucket, _dt = batcher.run_one()
+            except BaseException as exc:       # noqa: BLE001
+                # a failed launch (XLA/VMEM/kernel error) is fatal for the
+                # stream: a silent thread death would leave every future
+                # hanging until its caller's timeout with no root cause.
+                # Fail everything outstanding loudly and refuse new work.
+                with self._cond:
+                    self._error = exc
+                    self._running = False
+                    for fut in self._futures.values():
+                        if not fut.cancelled():
+                            fut.set_exception(exc)
+                    self._futures.clear()
+                return
+            finish = self.clock()
+            with self._cond:
+                self.stats["launches"] += 1
+                self._model_stats(model_id)["launches"] += 1
+                for c in done:
+                    fut = self._futures.pop((model_id, c.rid), None)
+                    if fut is not None and not fut.cancelled():
+                        fut.set_result(Served(
+                            model_id, c.rid, c.y, c.arrival, finish,
+                            finish - c.arrival, c.bucket, c.batched_rows))

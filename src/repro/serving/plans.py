@@ -343,6 +343,7 @@ class ExecutionPlan:
                     "every bucket")
 
         self._entries: Dict[int, Callable] = {}
+        self._oversize_memo: Dict[int, BucketPlan] = {}
 
     # ------------------------------------------------------------ resolve
 
@@ -433,11 +434,57 @@ class ExecutionPlan:
 
     def bucket_for(self, m: int) -> Optional[int]:
         """Smallest bucket holding ``m`` rows; None when ``m`` overflows
-        the largest bucket (run at exact size via the default path)."""
+        the largest bucket (run at exact size via the oversize binding)."""
         for b in self.bucket_sizes:
             if m <= b:
                 return b
         return None
+
+    def oversize_binding(self, m: int) -> BucketPlan:
+        """Resolved ``(path, block_m)`` for a batch past the largest
+        bucket (run at exact size — the fused kernels grid over row
+        tiles).  The largest bucket's tuned winner is the closest
+        measurement the sweep ever produced for this size class, so
+        oversize batches inherit it — fit-guarded at the *actual* row
+        count, since the streamed working sets grow with rows.  Routing
+        them down a plan-level ``default_path``/``block_m`` instead (the
+        pre-fix behavior) executed a schedule no sweep ever bound for
+        that size while ``path_for``/``schedule_for``/bench labels
+        claimed otherwise."""
+        cached = self._oversize_memo.get(m)
+        if cached is not None:
+            return cached
+        bp = self._resolve_oversize(m)
+        self._oversize_memo[m] = bp
+        return bp
+
+    def _resolve_oversize(self, m: int) -> BucketPlan:
+        if self.resolved_mode in ("per_layer", "oracle"):
+            return BucketPlan(m, self.resolved_mode, source="mode")
+        top = self.buckets[max(self.bucket_sizes)]
+        if top.path.startswith("fused"):
+            sched = SCHEDULE_BY_PATH[top.path]
+            bm = top.block_m or self.block_m or 8
+            if sched == "stream":
+                # the streamed working set scales with block_m: shrink the
+                # inherited tile until it fits at m rows before giving up.
+                while bm > 8 and not self._schedule_fits(sched, m, bm):
+                    bm //= 2
+            if self._schedule_fits(sched, m, bm):
+                return BucketPlan(m, top.path, block_m=bm,
+                                  source=top.source)
+        # top bucket's winner does not scale to m rows: the whole-stack
+        # schedules (rows-independent fit), then a fit-guarded stream
+        # tile, then the per-layer chain — mirroring plan resolution.
+        if self.default_path in ("fused", "fused_db") and self._stack_fits:
+            return BucketPlan(m, self.default_path, block_m=self.block_m,
+                              source="mode")
+        bm = self.block_m or 8
+        while bm > 8 and not self._schedule_fits("stream", m, bm):
+            bm //= 2
+        if self._schedule_fits("stream", m, bm):
+            return BucketPlan(m, "fused_stream", block_m=bm, source="mode")
+        return BucketPlan(m, "per_layer", source="mode")
 
     # ------------------------------------------------------------ execute
 
@@ -489,7 +536,8 @@ class ExecutionPlan:
         m = x.shape[0]
         b = self.bucket_for(m)
         if b is None:
-            return self._execute(x, self.default_path)
+            obp = self.oversize_binding(m)
+            return self._execute(x, obp.path, block_m=obp.block_m)
         if m < b:
             x = jnp.pad(x, ((0, b - m), (0, 0)))
         return self.entry(b)(x)[:m]
@@ -508,7 +556,8 @@ class ExecutionPlan:
 
     def path_for(self, m: int) -> str:
         b = self.bucket_for(m)
-        return self.default_path if b is None else self.buckets[b].path
+        return self.oversize_binding(m).path if b is None \
+            else self.buckets[b].path
 
     def schedule_for(self, m: int) -> str:
         """The kernel schedule that actually executes for ``m`` rows:

@@ -1,0 +1,193 @@
+"""MicroBatcher clock contract: pump re-reads the clock (deadline
+overshoot regression), compute accounting keeps the live and virtual
+domains apart, and the intake/flush paths are thread-safe."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from test_serving_plans import _rand_pack
+
+EVEN_DIMS = (16, 12, 4)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class SlowPlan:
+    """Plan wrapper whose bucket entries advance a fake clock by ``cost``
+    — compute that visibly takes (virtual) time."""
+
+    def __init__(self, plan, clk: FakeClock, cost: float):
+        self._plan, self._clk, self._cost = plan, clk, cost
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def entry(self, bucket):
+        fn = self._plan.entry(bucket)
+
+        def slow(xb):
+            self._clk.t += self._cost
+            return fn(xb)
+        return slow
+
+
+def _plan(**kw):
+    return serving.build_plan(_rand_pack(EVEN_DIMS), mode="oracle", **kw)
+
+
+# -------------------------------------------- deadline overshoot (pump)
+
+
+def test_pump_rereads_clock_after_long_compute():
+    """Regression: a deadline expiring *during* a bucket's compute must
+    flush in the same pump.  Pre-fix, pump captured ``now`` once at loop
+    entry, so the second request waited for the next driver cycle —
+    overshooting max_delay by a whole launch."""
+    clk = FakeClock()
+    plan = SlowPlan(_plan(), clk, cost=1.0)
+    b = serving.MicroBatcher(plan, max_delay=0.1, max_bucket=2, clock=clk)
+    x2 = jnp.zeros((2, EVEN_DIMS[0]), jnp.float32)   # fills the tile alone
+    x1 = jnp.zeros((1, EVEN_DIMS[0]), jnp.float32)   # can never fill it
+    r1 = b.submit(x2, now=0.0)         # deadline 0.1
+    r2 = b.submit(x1, now=0.3)         # deadline 0.4
+    clk.t = 0.2                        # r1 due, r2 not yet (and not full)
+    done = b.pump()                    # no explicit now: clock re-read
+    # serving r1 advanced the clock to 1.2 > r2's deadline: one pump
+    # must flush both
+    assert {c.rid for c in done} == {r1, r2}
+    assert b.stats["flushes"] == 2
+    assert b.pending_rows == 0
+
+
+def test_pump_explicit_now_is_evaluated_once():
+    """The virtual-clock replay path decides what time it is: an explicit
+    ``now`` must NOT be re-read mid-pump."""
+    clk = FakeClock()
+    plan = SlowPlan(_plan(), clk, cost=1.0)
+    b = serving.MicroBatcher(plan, max_delay=0.1, max_bucket=2, clock=clk)
+    r1 = b.submit(jnp.zeros((2, EVEN_DIMS[0]), jnp.float32), now=0.0)
+    b.submit(jnp.zeros((1, EVEN_DIMS[0]), jnp.float32), now=0.3)
+    done = b.pump(now=0.2)             # r1 due at 0.2; r2 stays queued
+    assert [c.rid for c in done] == [r1]
+    assert b.pending_rows == 1
+
+
+# ------------------------------------------- compute accounting domains
+
+
+def test_live_clock_compute_domains_agree():
+    b = serving.MicroBatcher(_plan())  # default live clock
+    b.submit(jnp.zeros((1, EVEN_DIMS[0]), jnp.float32))
+    b.flush()
+    assert b.stats["wall_compute_s"] > 0
+    assert b.stats["compute_s"] == b.stats["wall_compute_s"]
+
+
+def test_injected_clock_leaves_compute_to_the_driver():
+    """With a virtual clock the batcher cannot know the virtual cost of a
+    launch: run_one records only wall time; compute_s belongs to the
+    driver via account_compute."""
+    b = serving.MicroBatcher(_plan(), clock=FakeClock())
+    b.submit(jnp.zeros((1, EVEN_DIMS[0]), jnp.float32))
+    b.flush()
+    assert b.stats["wall_compute_s"] > 0
+    assert b.stats["compute_s"] == 0.0
+    b.account_compute(0.25)
+    assert b.stats["compute_s"] == 0.25
+
+
+def test_clock_none_requires_explicit_now():
+    b = serving.MicroBatcher(_plan(), clock=None)
+    x = jnp.zeros((1, EVEN_DIMS[0]), jnp.float32)
+    with pytest.raises(ValueError):
+        b.submit(x)
+    rid = b.submit(x, now=1.0)
+    b.flush(now=2.0)
+    assert b.result(rid) is not None
+
+
+def test_replay_stats_do_not_mix_clocks():
+    """Regression: replay(service_times=...) used to accumulate the live
+    launch measurement into compute_s while the makespan was virtual —
+    utilization computed from the stats was nonsense.  compute_s must now
+    be exactly the virtual service-time accounting."""
+    plan = _plan()
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.normal(size=(1, EVEN_DIMS[0])), jnp.float32)
+          for _ in range(6)]
+    arrivals = np.linspace(0.0, 1e-3, 6)
+    table = {b: 1e-3 for b in plan.bucket_sizes}
+    out = serving.replay(plan, xs, arrivals, service_times=table)
+    st = out["stats"]
+    assert st["compute_s"] == pytest.approx(1e-3 * st["flushes"])
+    assert st["wall_compute_s"] > 0
+    assert st["wall_compute_s"] != st["compute_s"]
+
+
+# ------------------------------------------------------- thread safety
+
+
+def test_concurrent_submit_and_pump_stress():
+    """Many submitter threads race one pump thread (the frontend's shape):
+    every request must be served exactly once with the right logits."""
+    plan = _plan()
+    oracle = serving.build_plan(_rand_pack(EVEN_DIMS), mode="oracle")
+    b = serving.MicroBatcher(plan, max_delay=1e-4, max_bucket=16)
+    n_threads, per_thread = 4, 25
+    lock = threading.Lock()
+    sent = {}
+    rng = np.random.default_rng(7)
+    payloads = [[rng.normal(size=(1, EVEN_DIMS[0])).astype(np.float32)
+                 for _ in range(per_thread)] for _ in range(n_threads)]
+
+    def submitter(tid):
+        for x in payloads[tid]:
+            rid = b.submit(x)
+            with lock:
+                sent[rid] = x
+            time.sleep(0.0005)
+
+    served = {}
+
+    def pumper():
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            for c in b.pump():
+                served[c.rid] = c
+            if len(served) == n_threads * per_thread and not alive():
+                return
+            time.sleep(0.0002)
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(n_threads)]
+
+    def alive():
+        return any(t.is_alive() for t in threads)
+
+    pump_thread = threading.Thread(target=pumper)
+    pump_thread.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # drain whatever the pump thread didn't catch before its exit
+    pump_thread.join()
+    for c in b.flush():
+        served[c.rid] = c
+
+    assert len(served) == n_threads * per_thread
+    assert b.stats["requests"] == n_threads * per_thread
+    assert b.stats["flushed_rows"] == n_threads * per_thread
+    for rid, x in sent.items():
+        np.testing.assert_allclose(served[rid].y, oracle.run(x),
+                                   atol=1e-4, rtol=1e-4)

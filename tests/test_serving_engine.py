@@ -86,7 +86,8 @@ def test_full_tile_flush_and_fifo_scatter():
     for x, rid in zip(xs, rids):
         np.testing.assert_allclose(b.result(rid).y, oracle.run(x),
                                    atol=1e-3, rtol=1e-4)
-    assert b.result(rids[0]) is None       # popped
+    with pytest.raises(KeyError):          # popped: loud, not None
+        b.result(rids[0])
 
 
 def test_deadline_partial_flush():

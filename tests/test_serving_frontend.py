@@ -1,0 +1,191 @@
+"""ServingFrontend: the threaded real-clock driver + multi-model
+scheduling — correctness vs the plan, full-tile fast path, deadline
+fairness under sustained cross-model load, the asyncio face, and the
+registry's error contract."""
+import asyncio
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from test_serving_plans import _rand_pack
+
+DIMS_A = (16, 12, 4)
+DIMS_B = (16, 8, 6)
+
+
+def _oracle_plan(dims, seed=0):
+    return serving.build_plan(_rand_pack(dims, seed=seed), mode="oracle")
+
+
+def test_frontend_serves_correct_results_per_model():
+    plan_a, plan_b = _oracle_plan(DIMS_A), _oracle_plan(DIMS_B, seed=3)
+    fe = serving.ServingFrontend()
+    fe.register("a", plan_a)
+    fe.register("b", plan_b)
+    rng = np.random.default_rng(0)
+    reqs = [("a" if i % 3 else "b",
+             rng.normal(size=(1 + i % 2, 16)).astype(np.float32))
+            for i in range(12)]
+    with fe:
+        futs = [(mid, x, fe.submit(mid, x)) for mid, x in reqs]
+        served = [(mid, x, f.result(30.0)) for mid, x, f in futs]
+    for mid, x, s in served:
+        ref = (plan_a if mid == "a" else plan_b).run(x)
+        np.testing.assert_allclose(s.y, np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+        assert s.model_id == mid
+        assert s.latency >= 0
+    assert fe.stats["by_model"]["a"]["requests"] == 8
+    assert fe.stats["by_model"]["b"]["requests"] == 4
+
+
+def test_full_tile_fast_path_ignores_deadline():
+    """A full tile launches immediately even when no deadline is close —
+    the driver must not sleep max_delay out on a burst."""
+    plan = _oracle_plan(DIMS_A)
+    fe = serving.ServingFrontend()
+    fe.register("m", plan, max_delay=30.0,
+                max_bucket=max(plan.bucket_sizes))
+    top = max(plan.bucket_sizes)
+    with fe:
+        t0 = time.monotonic()
+        futs = [fe.submit("m", np.zeros((1, 16), np.float32))
+                for _ in range(top)]
+        for f in futs:
+            f.result(10.0)
+        assert time.monotonic() - t0 < 10.0   # not the 30 s deadline
+    assert fe.stats["by_model"]["m"]["launches"] >= 1
+
+
+def test_multi_model_fairness_under_sustained_load():
+    """One model under sustained load must not starve the other: the
+    trickle model's deadline beats every backlogged request that arrived
+    after it (deadline-FIFO across models)."""
+    plan_a, plan_b = _oracle_plan(DIMS_A), _oracle_plan(DIMS_B, seed=3)
+    fe = serving.ServingFrontend()
+    fe.register("busy", plan_a, max_delay=2e-3, max_bucket=16)
+    fe.register("quiet", plan_b, max_delay=2e-3)
+    stop = threading.Event()
+    busy_futs = []
+
+    def hammer():
+        while not stop.is_set():
+            busy_futs.append(
+                fe.submit("busy", np.zeros((1, 16), np.float32)))
+            time.sleep(0.001)
+
+    with fe:
+        t = threading.Thread(target=hammer)
+        t.start()
+        try:
+            time.sleep(0.2)                 # backlog + steady stream
+            quiet_lat = []
+            for _ in range(3):
+                s = fe.submit(
+                    "quiet", np.zeros((1, 16), np.float32)).result(30.0)
+                quiet_lat.append(s.latency)
+                time.sleep(0.05)
+        finally:
+            stop.set()
+            t.join()
+        last_busy = busy_futs[-1].result(30.0)
+    # the quiet model was served *while* the busy stream kept landing...
+    assert fe.stats["by_model"]["busy"]["requests"] > 50
+    assert last_busy.finish > 0
+    # ...and never waited anywhere near the busy backlog's drain time.
+    assert max(quiet_lat) < 5.0
+    assert fe.stats["by_model"]["quiet"]["launches"] == 3
+
+
+def test_asyncio_face_serves_concurrent_awaits():
+    plan = _oracle_plan(DIMS_A)
+    fe = serving.ServingFrontend()
+    fe.register("m", plan)
+    rng = np.random.default_rng(5)
+    xs = [rng.normal(size=(1, 16)).astype(np.float32) for _ in range(6)]
+
+    async def go():
+        with fe:
+            return await asyncio.gather(
+                *[fe.asubmit("m", x) for x in xs])
+
+    served = asyncio.run(go())
+    for x, s in zip(xs, served):
+        np.testing.assert_allclose(s.y, np.asarray(plan.run(x)),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_registry_and_lifecycle_errors():
+    plan = _oracle_plan(DIMS_A)
+    fe = serving.ServingFrontend()
+    fe.register("m", plan)
+    with pytest.raises(ValueError):
+        fe.register("m", plan)              # duplicate id
+    with pytest.raises(KeyError):
+        fe.submit("nope", np.zeros((1, 16), np.float32))
+    with pytest.raises(RuntimeError):
+        fe.submit("m", np.zeros((1, 16), np.float32))   # not started
+    assert "m" in fe.registry and len(fe.registry) == 1
+
+
+def test_dispatch_error_fails_futures_loudly():
+    """A failed launch must not kill the dispatch thread silently:
+    outstanding futures carry the exception and new submits refuse."""
+    class BoomPlan:
+        def __init__(self, plan):
+            self._plan = plan
+
+        def __getattr__(self, name):
+            return getattr(self._plan, name)
+
+        def entry(self, bucket):
+            def boom(xb):
+                raise ValueError("kernel exploded")
+            return boom
+
+    fe = serving.ServingFrontend()
+    fe.register("m", BoomPlan(_oracle_plan(DIMS_A)))
+    with fe:
+        fut = fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(ValueError, match="kernel exploded"):
+            fut.result(30.0)
+        with pytest.raises(RuntimeError, match="dispatch thread died"):
+            fe.submit("m", np.zeros((1, 16), np.float32))
+
+
+def test_registry_registration_path_is_equivalent():
+    """Registering straight through frontend.registry (documented legal,
+    including while running) must serve like frontend.register."""
+    fe = serving.ServingFrontend()
+    batcher = fe.registry.register("m", _oracle_plan(DIMS_A))
+    with fe:
+        s = fe.submit("m", np.zeros((1, 16), np.float32)).result(30.0)
+    assert s.y.shape == (1, DIMS_A[-1])
+    assert fe.stats["by_model"]["m"]["requests"] == 1
+    assert not batcher._results       # registry default: no retention
+
+
+def test_frontend_batchers_do_not_retain_results():
+    """The frontend resolves futures from run_one's return value; the
+    batcher must not ALSO hold every output forever (server leak)."""
+    fe = serving.ServingFrontend()
+    batcher = fe.register("m", _oracle_plan(DIMS_A))
+    with fe:
+        fe.submit("m", np.zeros((1, 16), np.float32)).result(30.0)
+    assert not batcher._results
+
+
+def test_close_drains_queued_requests():
+    plan = _oracle_plan(DIMS_A)
+    fe = serving.ServingFrontend()
+    fe.register("m", plan, max_delay=30.0)  # nothing would be due
+    fe.start()
+    futs = [fe.submit("m", np.zeros((1, 16), np.float32))
+            for _ in range(3)]
+    fe.close(drain=True)
+    for f in futs:
+        assert f.result(0.0).y.shape == (1, DIMS_A[-1])

@@ -1,0 +1,115 @@
+"""Oversized-batch dispatch: batches past the largest bucket must run the
+largest bucket's *tuned* (path, block_m) — fit-guarded at the actual row
+count — and the reporting (path_for / schedule_for) must name what
+executes.  Plus the result() rid contract the same PR tightened."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.serving.plans import SCHEDULE_BY_PATH
+from test_serving_plans import _rand_pack
+
+DIMS = (33, 129, 71, 7)
+EVEN_DIMS = (64, 96, 10)
+
+
+def test_oversize_inherits_top_bucket_binding():
+    """path_for/schedule_for past the largest bucket report the largest
+    bucket's tuned winner (not a plan-level default no sweep ever bound),
+    and run() executes exactly that binding."""
+    plan = serving.build_plan(_rand_pack(EVEN_DIMS), mode="fused",
+                              interpret=True, max_bucket=8)
+    top = max(plan.bucket_sizes)
+    top_bp = plan.buckets[top]
+    obp = plan.oversize_binding(20)
+    assert obp.path == top_bp.path
+    assert obp.block_m == top_bp.block_m
+    assert plan.path_for(20) == top_bp.path
+    assert plan.schedule_for(20) == SCHEDULE_BY_PATH.get(
+        top_bp.path, top_bp.path)
+    # and the oversize run is correct through that binding
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(20, EVEN_DIMS[0])),
+                    jnp.float32)
+    oracle = serving.build_plan(_rand_pack(EVEN_DIMS), mode="oracle")
+    np.testing.assert_allclose(plan.run(x), oracle.run(x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_oversize_binding_is_memoized_and_label_stable():
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                              interpret=True, max_bucket=4)
+    assert plan.oversize_binding(9) is plan.oversize_binding(9)
+    assert plan.path_for(9) == plan.oversize_binding(9).path
+
+
+def test_oversize_stream_stack_stays_fused():
+    """A stack whose whole-stack working set busts the batch-tiled budget
+    used to drop oversize batches to the per-layer chain even though the
+    streaming schedule (the top bucket's winner) serves them; the fit
+    guard shrinks the inherited tile until the streamed set fits."""
+    from repro.kernels.fantastic4_fused_mlp import (fused_mlp_vmem_bytes,
+                                                    stream_mlp_vmem_bytes)
+    dims = (256,) * 7
+    pack = _rand_pack(dims, seed=11)
+    shapes = tuple(zip(dims[:-1], dims[1:]))
+    stack_b = fused_mlp_vmem_bytes(shapes, block_m=256)
+    stream_b = stream_mlp_vmem_bytes(shapes, rows=48, block_m=8)
+    assert stream_b < stack_b
+    budget = (stream_b + stack_b) // 2
+    plan = serving.build_plan(pack, mode="auto", interpret=True,
+                              vmem_budget_bytes=budget, max_bucket=32)
+    assert plan.buckets[32].path == "fused_stream"
+    obp = plan.oversize_binding(40)
+    assert obp.path == "fused_stream"
+    assert plan.path_for(40) == "fused_stream"
+    assert plan.schedule_for(40) == "stream"
+    # the guard must have picked a tile whose streamed set fits 40 rows
+    assert plan._schedule_fits("stream", 40, obp.block_m)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(40, dims[0])),
+                    jnp.float32)
+    oracle = serving.build_plan(pack, mode="oracle")
+    np.testing.assert_allclose(plan.run(x), oracle.run(x),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_oversize_per_layer_mode_unchanged():
+    plan = serving.build_plan(_rand_pack(EVEN_DIMS), mode="per_layer",
+                              interpret=True, max_bucket=4)
+    assert plan.path_for(9) == "per_layer"
+    assert plan.schedule_for(9) == "per_layer"
+
+
+def test_engine_oversize_request_uses_top_bucket_schedule():
+    """The micro-batcher's oversized branch flows through plan.run, so an
+    oversized request is served by the top bucket's schedule too — and
+    stays row-for-row equal to serving it alone."""
+    pack = _rand_pack(EVEN_DIMS)
+    plan = serving.build_plan(pack, mode="fused", interpret=True,
+                              max_bucket=4)
+    b = serving.MicroBatcher(plan, max_bucket=4)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(9, EVEN_DIMS[0])),
+                    jnp.float32)
+    rid = b.submit(x)
+    b.flush()
+    c = b.result(rid)
+    assert c.bucket == 9                   # exact rows, no bucket padding
+    np.testing.assert_allclose(c.y, plan.run(x), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------- result() contract
+
+
+def test_result_rid_contract():
+    plan = serving.build_plan(_rand_pack(EVEN_DIMS), mode="fused",
+                              interpret=True)
+    b = serving.MicroBatcher(plan)
+    x = jnp.zeros((1, EVEN_DIMS[0]), jnp.float32)
+    rid = b.submit(x)
+    assert b.result(rid) is None           # still queued: None
+    b.flush()
+    assert b.result(rid) is not None       # served: pops the completion
+    with pytest.raises(KeyError):          # consumed: loud, not None
+        b.result(rid)
+    with pytest.raises(KeyError):          # never issued: loud, not None
+        b.result(12345)
