@@ -21,6 +21,10 @@ multi_model           >=2 packs behind one async ServingFrontend on the
                       real clock vs the best single-pack naive baseline;
                       extends BENCH_fused_serving.json with
                       multi_model_rows
+slo_traces            bursty/diurnal traces through SLO-tiered models with
+                      bounded queues, admission control and a 10%-fault
+                      leg; extends BENCH_fused_serving.json with
+                      slo_trace_rows
 """
 from __future__ import annotations
 
@@ -41,7 +45,7 @@ def main(argv=None):
                             bench_entropy_energy, bench_fused_serving,
                             bench_int8_fused, bench_multi_model,
                             bench_pareto, bench_serving_engine,
-                            bench_serving_roofline)
+                            bench_serving_roofline, bench_slo_traces)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -52,6 +56,7 @@ def main(argv=None):
         "int8_fused": lambda: bench_int8_fused.run(fast=args.fast),
         "serving_engine": lambda: bench_serving_engine.run(fast=args.fast),
         "multi_model": lambda: bench_multi_model.run(fast=args.fast),
+        "slo_traces": lambda: bench_slo_traces.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -6,9 +6,9 @@
 ``snapshot`` records, for every row present in the current repo-root JSON,
 its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
 (model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
-by (model, bucket, schedule), ``multi_model_rows`` by (load,)) and its
-guarded metric.  ``check`` then fails loudly if, after the benchmarks
-reran:
+by (model, bucket, schedule), ``multi_model_rows`` by (load,),
+``slo_trace_rows`` by (trace, tier)) and its guarded metric(s).
+``check`` then fails loudly if, after the benchmarks reran:
 
 * any recorded row identity is missing — a benchmark that silently stopped
   emitting a section would ship a shrunken perf file and break the
@@ -27,7 +27,10 @@ reran:
   tracks machine load (and the engine's low-load throughput is
   arrival-rate-bound by construction), while the ratios compare two
   paths measured interleaved on the same host and are what the perf
-  trajectory actually promises.  Set the env var to 0 or less to disable
+  trajectory actually promises.  ``slo_trace_rows`` rate metrics
+  (``within_slo_frac``, ``goodput_fault``, ``shed_rate``) live in [0, 1]
+  and are guarded ADDITIVELY — the bound is percentage points, not a
+  ratio.  Set the env var to 0 or less to disable
   the regression leg (e.g. on a deliberately slower host); the row-loss
   and label guards always run.  ``scripts/ci.sh`` widens the bound on
   interpret hosts — see the measurement note there.
@@ -47,6 +50,7 @@ SECTIONS = {
     "serving_engine_rows": ("model", "load"),
     "schedule_rows": ("model", "bucket", "schedule"),
     "multi_model_rows": ("load",),
+    "slo_trace_rows": ("trace", "tier"),
 }
 
 # guarded metric per section and the direction that counts as regression.
@@ -57,6 +61,18 @@ METRICS = {
     "int8_rows": ("int8_fused_speedup_vs_layer", "higher_is_better"),
     "serving_engine_rows": ("throughput_gain", "higher_is_better"),
     "multi_model_rows": ("aggregate_gain", "higher_is_better"),
+}
+
+# sections guarded on several metrics at once; rate metrics live in
+# [0, 1], so their regression bound is ADDITIVE (pct as percentage
+# POINTS) — a multiplicative bound on a near-zero shed rate would trip
+# on any nonzero value while letting a 0.9 -> 0.4 goodput drop through.
+MULTI_METRICS = {
+    "slo_trace_rows": (
+        ("within_slo_frac", "higher_abs"),
+        ("goodput_fault", "higher_abs"),
+        ("shed_rate", "lower_abs"),
+    ),
 }
 
 # sections whose rows must name the kernel schedule that produced them
@@ -79,8 +95,12 @@ def row_records(path: str = ROOT_JSON) -> list:
     records = []
     for section, keys in SECTIONS.items():
         metric = METRICS.get(section, (None,))[0]
+        multi = MULTI_METRICS.get(section)
         for row in data.get(section, []):
-            val = row.get(metric) if metric else None
+            if multi:
+                val = {m: row.get(m) for m, _ in multi}
+            else:
+                val = row.get(metric) if metric else None
             records.append([section] + [row.get(k) for k in keys] + [val])
     return records
 
@@ -111,6 +131,23 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
             failures.append(f"lost row {rid}")
             continue
         pct = regression_pct()
+        if section in MULTI_METRICS:
+            if pct <= 0 or not isinstance(old_val, dict):
+                continue
+            new_vals = after[rid] if isinstance(after[rid], dict) else {}
+            tol = pct / 100.0          # additive, in percentage points
+            for metric, direction in MULTI_METRICS[section]:
+                ov, nv = old_val.get(metric), new_vals.get(metric)
+                if not isinstance(ov, (int, float)) or \
+                        not isinstance(nv, (int, float)):
+                    continue
+                worse = (nv > ov + tol if direction == "lower_abs"
+                         else nv < ov - tol)
+                if worse:
+                    failures.append(
+                        f"{rid}: {metric} regressed {ov:.3f} -> "
+                        f"{nv:.3f} (> {pct:.0f} pct-point bound)")
+            continue
         if pct <= 0 or old_val is None or section not in METRICS:
             continue
         metric, direction = METRICS[section]

@@ -6,17 +6,20 @@
 #   CI_SKIP_BENCH=1 scripts/ci.sh # tests only
 #
 # The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode —
-# including bench_serving_engine (ragged-arrival engine vs naive) and
+# including bench_serving_engine (ragged-arrival engine vs naive),
 # bench_multi_model (>=2 packs behind the async ServingFrontend on the
-# real clock) — and rewrites BENCH_fused_serving.json at the repo root
-# (fp32 rows + int8_rows + serving_engine_rows + schedule_rows +
-# multi_model_rows), so every PR leaves the cross-PR perf trajectory
+# real clock) and bench_slo_traces (bursty/diurnal traces through SLO
+# tiers with bounded queues, admission control and a 10%-fault leg) —
+# and rewrites BENCH_fused_serving.json at the repo root (fp32 rows +
+# int8_rows + serving_engine_rows + schedule_rows + multi_model_rows +
+# slo_trace_rows), so every PR leaves the cross-PR perf trajectory
 # current.  A benchmark overrun (budget exceeded) fails CI
 # loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows
 # the committed baseline had, dropped a row's kernel-schedule label, or
 # regressed a guarded metric more than CI_BENCH_REGRESSION_PCT (default
-# 25%; <=0 disables the regression leg only).
+# 25%; <=0 disables the regression leg only; slo_trace_rows rate metrics
+# are guarded additively in percentage points).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

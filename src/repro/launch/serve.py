@@ -28,6 +28,16 @@ dispatch thread, futures on the submit side — and ``--multi a,b`` freezes
 additional paper-MLP packs into the same frontend so several models share
 the single execution stream (deadline-FIFO across models; per-model
 latency reported).
+
+Robustness knobs on the async path: ``--tier`` / ``--max-delay`` accept
+one value or a comma-separated list aligned to ``[--arch] + --multi``
+(per-model SLO tier names / coalescing budgets in ms), ``--max-queued``
+bounds every model's queue in rows (overflow is a typed
+``serving.Rejected``, counted and reported, never a hang), and
+``--inject-fault RATE`` wraps every plan in a ``FaultInjector`` so the
+frontend's degradation ladder (retry -> chain fallback -> quarantine)
+can be watched live; the run reports retries/fallbacks/quarantines and
+validates the rows that completed.
 """
 from __future__ import annotations
 
@@ -138,6 +148,23 @@ def serve_mlp(args):
     return y
 
 
+def _per_model(opt, flag, names, cast):
+    """Split a one-or-comma-separated flag across the registered models
+    (order: [--arch] + --multi).  A single value broadcasts."""
+    if not opt:
+        return {n: None for n in names}
+    vals = opt.split(",")
+    if len(vals) == 1:
+        vals = vals * len(names)
+    if len(vals) != len(names):
+        raise SystemExit(f"{flag}: expected 1 or {len(names)} "
+                         f"comma-separated values, got {len(vals)}")
+    try:
+        return {n: cast(v) for n, v in zip(names, vals)}
+    except ValueError as e:
+        raise SystemExit(f"{flag}: {e}")
+
+
 def serve_mlp_async(args, cfg, plan, x, y_ref):
     """``--engine --async``: the ragged requests through the threaded
     ServingFrontend; ``--multi`` co-serves additional frozen packs on the
@@ -165,33 +192,75 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
             calib_x=mx if args.int8 else None)
         models[mcfg.name] = (mplan, list(mx))
 
+    names = list(models)
+    tiers = _per_model(args.tier, "--tier", names, serving.resolve_tier)
+    delays = _per_model(args.max_delay, "--max-delay", names,
+                        lambda v: float(v) / 1e3)    # flag is in ms
+
     # warm every model's request path untimed (compile is not a serving
     # number), then serve all models' ragged rows through one frontend.
     for mplan, rows in models.values():
         jax.block_until_ready(serving.MicroBatcher(mplan).serve(rows)[-1])
     frontend = serving.ServingFrontend()
     for name, (mplan, _) in models.items():
-        frontend.register(name, mplan)
+        target = mplan
+        if args.inject_fault > 0:
+            target = serving.FaultInjector(mplan, rate=args.inject_fault)
+        frontend.register(name, target, tier=tiers[name],
+                          max_delay=delays[name],
+                          max_queued_rows=args.max_queued)
+        if tiers[name] is not None or delays[name] is not None:
+            b = frontend.registry.batcher(name)
+            print(f"model [{name}]: tier {b.tier.name}, max_delay "
+                  f"{b.max_delay * 1e3:.2f} ms"
+                  + (f", queue bound {args.max_queued} rows"
+                     if args.max_queued else ""))
     t0 = time.time()
+    served, rejected = [], []
     with frontend:
-        futs = [(name, frontend.submit(name, row))
-                for name, (_, rows) in models.items() for row in rows]
-        served = [(name, f.result(60.0)) for name, f in futs]
+        futs = [(name, i, frontend.submit(name, row))
+                for name, (_, rows) in models.items()
+                for i, row in enumerate(rows)]
+        for name, i, f in futs:
+            try:
+                served.append((name, i, f.result(60.0)))
+            except serving.Rejected as rej:
+                rejected.append((name, i, rej.reason))
+            except serving.InjectedFault as exc:
+                # quarantined model under --inject-fault: its futures
+                # carry the injected root cause instead of hanging.
+                rejected.append((name, i, f"fault: {exc}"))
     dt = time.time() - t0
     n = len(served)
     for name in models:
-        lats = [s.latency * 1e3 for m, s in served if m == name]
+        lats = [s.latency * 1e3 for m, _, s in served if m == name]
         st = frontend.stats["by_model"][name]
-        print(f"async frontend [{name}]: {st['requests']} requests in "
-              f"{st['launches']} launches, latency mean "
-              f"{np.mean(lats):.2f} ms / p95 "
-              f"{np.percentile(lats, 95):.2f} ms")
-    print(f"async frontend: {n} requests across {len(models)} model(s) in "
-          f"{dt*1e3:.2f} ms total ({n/max(dt, 1e-12):.0f} samples/s, "
+        line = (f"async frontend [{name}]: {st['requests']} requests in "
+                f"{st['launches']} launches")
+        if lats:
+            line += (f", latency mean {np.mean(lats):.2f} ms / p95 "
+                     f"{np.percentile(lats, 95):.2f} ms")
+        if st["rejected"]:
+            line += f", {st['rejected']} rejected"
+        if st["quarantined"]:
+            line += ", QUARANTINED"
+        print(line)
+    print(f"async frontend: {n} served / {len(rejected)} rejected across "
+          f"{len(models)} model(s) in {dt*1e3:.2f} ms total "
+          f"({n/max(dt, 1e-12):.0f} samples/s, "
           f"{frontend.stats['launches']} launches)")
-    got = np.concatenate([np.asarray(s.y) for m, s in served
-                          if m == cfg.name])
-    np.testing.assert_allclose(got, np.asarray(y_ref), atol=1e-5, rtol=1e-5)
+    if args.inject_fault > 0 or rejected:
+        fs = frontend.stats
+        print(f"degradation: {fs['launch_failures']} launch failures, "
+              f"{fs['retries']} retries, {fs['fallbacks']} chain "
+              f"fallbacks, quarantined {fs['quarantined'] or 'none'}")
+    # validate whatever completed for the primary model row-by-row (under
+    # --inject-fault/--max-queued some rows may be typed rejections).
+    done = {i: s for m, i, s in served if m == cfg.name}
+    if done:
+        got = np.concatenate([np.asarray(done[i].y) for i in sorted(done)])
+        ref = np.asarray(y_ref)[sorted(done)]
+        np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
 
 
 def main(argv=None):
@@ -222,7 +291,29 @@ def main(argv=None):
                          "frozen paper-MLP packs from the same frontend "
                          "(one execution stream, deadline-FIFO across "
                          "models)")
+    ap.add_argument("--tier", default=None, metavar="TIER[,TIER...]",
+                    help="with --engine --async: per-model SLO tier "
+                         f"({'|'.join(sorted(serving.TIERS))}); one value "
+                         "broadcasts, a comma-separated list aligns to "
+                         "[--arch] + --multi.  Enables deadline-based "
+                         "admission control for that model")
+    ap.add_argument("--max-delay", default=None, metavar="MS[,MS...]",
+                    help="with --engine --async: per-model coalescing "
+                         "budget in ms (same alignment as --tier); "
+                         "overrides the tier's budget")
+    ap.add_argument("--max-queued", type=int, default=None, metavar="ROWS",
+                    help="with --engine --async: bound every model's "
+                         "queue; overflow is a typed serving.Rejected")
+    ap.add_argument("--inject-fault", type=float, default=0.0,
+                    metavar="RATE",
+                    help="with --engine --async: wrap every plan in a "
+                         "FaultInjector failing launches at RATE to "
+                         "exercise the retry/fallback/quarantine ladder")
     args = ap.parse_args(argv)
+    if (args.tier or args.max_delay or args.max_queued is not None
+            or args.inject_fault) and not args.async_frontend:
+        raise SystemExit("--tier/--max-delay/--max-queued/--inject-fault "
+                         "apply to the async frontend: add --engine --async")
     if args.multi and not (args.engine and args.async_frontend):
         raise SystemExit("--multi requires --engine --async")
     if args.async_frontend and not args.engine:

@@ -19,6 +19,15 @@ Large fleets fail constantly; the posture here (DESIGN.md §4):
 * **elastic restart** — restore maps arrays onto the *current* mesh, so a
   job resized 512→256 chips resumes from the same checkpoint (exercised in
   tests/test_checkpoint.py with two different fake-device meshes).
+
+The same transient-retry posture extends to **serving**
+(``serving.frontend``'s degradation ladder: retry → per-layer chain
+fallback → per-model quarantine); :class:`FaultInjector` below is the
+test/benchmark harness for it — it wraps a ``serving.ExecutionPlan`` so
+launches raise synthetic XLA/VMEM-style errors probabilistically or on
+schedule, which is how the goodput-under-fault numbers in
+``benchmarks/bench_slo_traces.py`` and the retry-parity/quarantine tests
+drive the ladder deterministically.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import time
 from typing import Any, Callable, Iterator, Optional
 
 import jax
+import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 
@@ -53,6 +63,89 @@ class PreemptionGuard:
     def restore(self):
         for s, h in self._prev.items():
             signal.signal(s, h)
+
+
+class InjectedFault(RuntimeError):
+    """Synthetic launch failure: stands in for the XLA runtime / VMEM
+    exhaustion errors a real device raises, without needing a real
+    device to misbehave.  Deliberately NOT a ``jax.errors.JaxRuntimeError``
+    subclass (those require live XLA state to construct); the serving
+    retry policy treats any ``Exception`` from a launch as retryable, so
+    the distinction does not matter to the ladder."""
+
+
+class FaultInjector:
+    """Wrap an ``ExecutionPlan`` so launches fail on demand.
+
+    Proxies every attribute to the wrapped plan (a batcher or frontend
+    cannot tell the difference) but intercepts the two launch surfaces —
+    ``entry(bucket)`` and ``run(x)`` — and raises :class:`InjectedFault`
+    *before* the kernel runs when the configured trigger fires:
+
+    * ``rate`` — probabilistic: each launch fails with this probability
+      (seeded ``numpy`` generator, so a given seed is a reproducible
+      fault schedule — the retry-parity tests depend on that).
+    * ``fail_nth`` — on schedule: launch indices (0-based, counted across
+      all buckets) that fail deterministically.
+    * ``fail_buckets`` — systematic per entry: these bucket sizes always
+      fail — the "poisoned (bucket, schedule)" case.
+    * ``only_fused`` — restrict injection to launches whose bucket is
+      currently bound to a fused path: after the frontend demotes the
+      poisoned bucket to the per-layer chain, injection stops, modeling
+      a megakernel-specific fault (VMEM blowup, bad schedule) that the
+      chain path does not share.  With ``only_fused=False`` the fault is
+      model-wide and the ladder ends in quarantine.
+
+    ``injected`` counts fired faults; ``launches`` counts every launch
+    attempt.  Single-dispatch-thread use (the frontend's contract) needs
+    no locking here.
+    """
+
+    def __init__(self, plan, *, rate: float = 0.0, seed: int = 0,
+                 fail_nth: tuple = (), fail_buckets: tuple = (),
+                 only_fused: bool = False):
+        self._plan = plan
+        self.rate = rate
+        self.fail_nth = frozenset(fail_nth)
+        self.fail_buckets = frozenset(fail_buckets)
+        self.only_fused = only_fused
+        self._rng = np.random.default_rng(seed)
+        self.launches = 0
+        self.injected = 0
+
+    @property
+    def plan(self):
+        """The wrapped plan (unwrap for parity baselines)."""
+        return self._plan
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def _maybe_fail(self, bucket: int) -> None:
+        if self.only_fused:
+            bp = getattr(self._plan, "buckets", {}).get(bucket)
+            if bp is None or not bp.path.startswith("fused"):
+                return
+        idx = self.launches
+        self.launches += 1
+        fire = (bucket in self.fail_buckets or idx in self.fail_nth
+                or (self.rate > 0 and self._rng.random() < self.rate))
+        if fire:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected launch failure (launch {idx}, bucket {bucket})")
+
+    def entry(self, bucket: int):
+        inner = self._plan.entry(bucket)
+
+        def faulty_entry(xb):
+            self._maybe_fail(bucket)
+            return inner(xb)
+        return faulty_entry
+
+    def run(self, x):
+        self._maybe_fail(int(x.shape[0]))
+        return self._plan.run(x)
 
 
 class FaultTolerantLoop:

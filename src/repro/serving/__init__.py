@@ -18,12 +18,25 @@
   with a full-tile fast path), futures / asyncio on the submit side —
   multi-model serving on a single execution stream.
 
+* :mod:`slo` — the robustness policy layer: :class:`SLOTier` latency
+  classes (tiered ``max_delay``/deadline budgets + bounded dispatch
+  priority), the typed :class:`Rejected` outcome, and the
+  :class:`AdmissionController` cost model (measured per-bucket service
+  times) that sheds load the engine provably cannot serve within its
+  tier's deadline.  Fault injection for the frontend's degradation
+  ladder (retry → chain fallback → quarantine, :class:`RetryPolicy`)
+  lives in ``runtime.fault`` (:class:`FaultInjector`) and is re-exported
+  here.
+
 Every serving entry point (``models.mlp.mlp_serve*``, ``launch.serve``,
 the benchmarks, the examples) flows through this package instead of
 threading mode keywords down to the kernels.
 """
+from ..runtime.fault import FaultInjector, InjectedFault      # noqa: F401
 from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
                     build_plan, calibrate_act_scales, get_plan)
+from .slo import (TIERS, AdmissionController, Rejected,       # noqa: F401
+                  SLOTier, resolve_tier)
 from .batcher import Completion, MicroBatcher, replay         # noqa: F401
-from .frontend import (ModelRegistry, Served,                 # noqa: F401
+from .frontend import (ModelRegistry, RetryPolicy, Served,    # noqa: F401
                        ServingFrontend)

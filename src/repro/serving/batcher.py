@@ -72,6 +72,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .slo import (REJECT_QUEUE_FULL, AdmissionController, Rejected,
+                  SLOTier, resolve_tier)
+
 
 @dataclasses.dataclass
 class _Pending:
@@ -102,16 +105,35 @@ class MicroBatcher:
     ``keep_results=False`` is for drivers that consume completions from
     ``run_one``/``pump`` return values (the serving frontend resolves
     futures from them): nothing is retained for :meth:`result`, otherwise
-    a long-running server would hold every output it ever produced."""
+    a long-running server would hold every output it ever produced.
 
-    def __init__(self, plan, *, max_delay: float = 2e-3,
+    Overload posture (``serving.slo``): an explicit ``tier`` attaches a
+    latency class — ``max_delay`` defaults to the tier's coalescing
+    budget and every submit runs the :class:`AdmissionController` cost
+    model against the tier's end-to-end deadline (sheds raise
+    :class:`Rejected` with reason ``deadline``).  ``max_queued_rows``
+    bounds the queue independently of tiers: a submit that would push the
+    queued rows past the bound raises :class:`Rejected` with reason
+    ``queue_full`` instead of growing memory without limit.  Both
+    rejections leave the queue untouched and are counted in ``stats``
+    (``rejected_full`` / ``shed_deadline`` / ``rejected_rows``).  Without
+    ``tier``/``max_queued_rows`` intake behaves exactly as before
+    (admit everything)."""
+
+    def __init__(self, plan, *, max_delay: Optional[float] = None,
                  max_bucket: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = time.monotonic,
-                 keep_results: bool = True):
+                 keep_results: bool = True,
+                 tier: Optional[SLOTier] = None,
+                 max_queued_rows: Optional[int] = None,
+                 service_times: Optional[Dict[int, float]] = None):
         self.plan = plan
-        self.max_delay = max_delay
+        self.tier = resolve_tier(tier)
+        self.max_delay = self.tier.max_delay if max_delay is None \
+            else max_delay
         top = max(plan.bucket_sizes)
         self.max_bucket = min(max_bucket or top, top)
+        self.max_queued_rows = max_queued_rows
         self.clock = clock
         # live-domain compute accounting only when trigger time and
         # perf_counter advance together; any injected clock is virtual.
@@ -123,10 +145,20 @@ class MicroBatcher:
         self._inflight: set = set()          # submitted, result not stored
         self._results: Dict[int, Completion] = {}
         self._next_rid = 0
+        self._last_failed_bucket: Optional[int] = None
+        # the cost model is always maintained (EWMA of live launches, a
+        # seeded table from the caller's measured sweep); it *gates*
+        # intake only when a tier was explicitly attached — legacy
+        # batchers keep the admit-everything contract.
+        self.admission = AdmissionController(
+            plan.bucket_for, self.max_bucket, service_times=service_times)
+        self._admission_gates = tier is not None
         self.stats = {"requests": 0, "rows": 0, "flushes": 0,
                       "flushed_rows": 0, "padded_rows": 0,
                       "bucket_hist": {}, "compute_s": 0.0,
-                      "wall_compute_s": 0.0}
+                      "wall_compute_s": 0.0, "rejected_full": 0,
+                      "shed_deadline": 0, "rejected_rows": 0,
+                      "launch_failures": 0}
 
     def _now(self, now: Optional[float]) -> float:
         if now is not None:
@@ -140,7 +172,10 @@ class MicroBatcher:
 
     def submit(self, x, now: Optional[float] = None) -> int:
         """Queue one request (``(rows, d_in)`` or a single ``(d_in,)``
-        row); returns its request id.  Thread-safe."""
+        row); returns its request id.  Thread-safe.  Raises
+        :class:`Rejected` (typed, reason-carrying) when the bounded queue
+        is full or the tier's cost model proves the SLO unattainable —
+        the queue is left untouched either way."""
         now = self._now(now)
         x = np.asarray(x, np.float32)         # host-side: no XLA dispatch
         if x.ndim == 1:
@@ -149,6 +184,22 @@ class MicroBatcher:
             raise ValueError(f"request must be (rows, {self.plan.d_in}), "
                              f"got {x.shape}")
         with self._lock:
+            rows = x.shape[0]
+            if self.max_queued_rows is not None and \
+                    self._queued_rows + rows > self.max_queued_rows:
+                self.stats["rejected_full"] += 1
+                self.stats["rejected_rows"] += rows
+                raise Rejected(
+                    REJECT_QUEUE_FULL,
+                    f"{self._queued_rows} rows queued + {rows} new > "
+                    f"bound {self.max_queued_rows}")
+            if self._admission_gates:
+                try:
+                    self.admission.admit(self._queued_rows, rows, self.tier)
+                except Rejected:
+                    self.stats["shed_deadline"] += 1
+                    self.stats["rejected_rows"] += rows
+                    raise
             rid = self._next_rid
             self._next_rid += 1
             self._queue.append(_Pending(rid, x, x.shape[0], now,
@@ -170,6 +221,24 @@ class MicroBatcher:
     def oldest_arrival(self) -> Optional[float]:
         with self._lock:
             return self._queue[0].arrival if self._queue else None
+
+    @property
+    def last_failed_bucket(self) -> Optional[int]:
+        """Bucket rows of the most recent failed launch (degradation
+        ladder input: which ``(bucket, schedule)`` entry to poison)."""
+        return self._last_failed_bucket
+
+    def drop_all(self) -> List[_Pending]:
+        """Empty the queue without serving it (quarantine path): returns
+        the dropped requests so the driver can resolve their futures with
+        the root cause instead of leaving them hanging."""
+        with self._lock:
+            dropped = list(self._queue)
+            self._queue.clear()
+            self._queued_rows = 0
+            for p in dropped:
+                self._inflight.discard(p.rid)
+            return dropped
 
     # -------------------------------------------------------------- flush
 
@@ -221,15 +290,31 @@ class MicroBatcher:
         xb = np.concatenate([p.x for p in taken], axis=0) \
             if len(taken) > 1 else taken[0].x
         t0 = time.perf_counter()
-        if bucket is None:
-            y = self.plan.run(xb)                 # oversized: exact rows
-            bucket = rows
-        else:
-            if padded:
-                xb = np.pad(xb, ((0, padded), (0, 0)))
-            y = self.plan.entry(bucket)(jnp.asarray(xb))
-        y = np.asarray(jax.block_until_ready(y))
+        try:
+            if bucket is None:
+                y = self.plan.run(xb)             # oversized: exact rows
+                bucket = rows
+            else:
+                if padded:
+                    xb = np.pad(xb, ((0, padded), (0, 0)))
+                y = self.plan.entry(bucket)(jnp.asarray(xb))
+            y = np.asarray(jax.block_until_ready(y))
+        except BaseException:
+            # a failed launch loses NOTHING: requests are host-side numpy
+            # until the kernel consumes them, so put the taken batch back
+            # at the head of the queue (original order, original
+            # deadlines) and let the driver decide — retry the intact
+            # queue, fall back, or quarantine (serving.frontend's
+            # degradation ladder).
+            with self._lock:
+                for p in reversed(taken):
+                    self._queue.appendleft(p)
+                self._queued_rows += rows
+                self.stats["launch_failures"] += 1
+                self._last_failed_bucket = bucket if bucket else rows
+            raise
         dt = time.perf_counter() - t0
+        self.admission.observe(bucket, dt)   # running EWMA cost model
 
         out: List[Completion] = []
         off = 0

@@ -60,6 +60,44 @@ Sync callers get a ``concurrent.futures.Future`` back from
 through :meth:`ServingFrontend.asubmit` (the future is wrapped into the
 running asyncio loop — the driver thread doubles as the executor, no
 event-loop-blocking calls anywhere on the await path).
+
+SLO tiers and overload
+----------------------
+
+``register(..., tier=)`` attaches a latency class (``serving.slo``): the
+tier's ``max_delay`` is the batching budget, its ``deadline`` gates
+admission (the batcher's cost model sheds requests that provably cannot
+make the SLO), and its ``weight`` enters the pick rule — fired batchers
+are ordered by ``head_deadline - tier.weight``, so a latency-tier
+request preempts throughput-tier full tiles by up to ``weight`` seconds
+of queue age and no more (bounded priority ⇒ still starvation-free).
+Rejected/shed submits resolve their future with a typed
+:class:`~.slo.Rejected` — callers always learn promptly, with a reason.
+
+Faults and graceful degradation
+-------------------------------
+
+A failed launch is no longer fatal for the stream.  The batcher requeues
+the taken requests (host-side numpy — nothing is lost) and the driver
+walks a degradation ladder per model, governed by :class:`RetryPolicy`:
+
+1. **retry** — the launch is re-driven from the intact queue up to
+   ``max_retries`` times (transient XLA/VMEM errors clear on retry, the
+   ``runtime.fault`` posture applied to serving);
+2. **chain fallback** — a fused ``(bucket, schedule)`` entry that keeps
+   failing is *poisoned*: ``plan.demote_bucket`` rebinds that bucket to
+   the per-layer chain path (bit-identical results, degraded speed) and
+   the ladder restarts;
+3. **quarantine** — a model whose failures survive retry *and* fallback
+   is isolated: its outstanding futures get the root cause, its queue is
+   dropped, new submits are rejected (``Rejected("quarantined")``) — and
+   **every other model keeps serving**.  Previously one bad model killed
+   the whole dispatch stream.
+
+Every rung is counted in ``stats`` (``retries`` / ``fallbacks`` /
+``quarantined`` / per-model mirrors) — degradation is measurable, never
+silent.  Errors in the dispatch machinery itself (not a launch) still
+fail everything loudly, exactly as before.
 """
 from __future__ import annotations
 
@@ -74,6 +112,25 @@ import numpy as np
 
 from .batcher import MicroBatcher
 from .plans import ExecutionPlan
+from .slo import REJECT_QUARANTINED, Rejected, resolve_tier
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Degradation ladder knobs (see module docstring).
+
+    ``max_retries``  — launch retries per rung before escalating.
+    ``backoff_s``    — sleep ``backoff_s * attempt`` between retries
+                       (transient-fault spacing; 0 keeps tests fast).
+    ``fallback``     — poison-and-demote the failing fused bucket to the
+                       per-layer chain before giving up on the model.
+    ``quarantine``   — isolate the model after the ladder; ``False``
+                       escalates to the pre-ladder contract instead
+                       (stream-fatal, every future fails)."""
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    fallback: bool = True
+    quarantine: bool = True
 
 
 @dataclasses.dataclass
@@ -108,21 +165,39 @@ class ModelRegistry:
         self._batchers: Dict[str, MicroBatcher] = {}
 
     def register(self, model_id: str, plan: ExecutionPlan, *,
-                 max_delay: float = 2e-3,
+                 tier=None,
+                 max_delay: Optional[float] = None,
                  max_bucket: Optional[int] = None,
+                 max_queued_rows: Optional[int] = None,
+                 service_times: Optional[Dict[int, float]] = None,
                  keep_results: bool = False) -> MicroBatcher:
+        """Register a model.  ``tier`` (an ``SLOTier`` or a name from
+        ``serving.TIERS``) attaches a latency class: its ``max_delay``
+        becomes the batching budget (an explicit ``max_delay`` still
+        overrides) and its deadline gates admission through the
+        batcher's cost model (seed it with measured per-bucket
+        ``service_times``; live launches keep it current via EWMA).
+        ``max_queued_rows`` bounds the queue — submits past it are
+        rejected, typed, instead of growing memory."""
+        resolved = resolve_tier(tier) if tier is not None else None
+        if max_delay is None and resolved is None:
+            max_delay = 2e-3          # pre-tier default, kept stable
         with self._lock:
             if model_id in self._batchers:
                 raise ValueError(f"model {model_id!r} already registered")
             batcher = MicroBatcher(plan, max_delay=max_delay,
                                    max_bucket=max_bucket, clock=self.clock,
-                                   keep_results=keep_results)
+                                   keep_results=keep_results,
+                                   tier=resolved,
+                                   max_queued_rows=max_queued_rows,
+                                   service_times=service_times)
             self._plans[model_id] = plan
             self._batchers[model_id] = batcher
         return batcher
 
     def plan(self, model_id: str) -> ExecutionPlan:
-        return self._plans[model_id]
+        with self._lock:
+            return self._plans[model_id]
 
     def batcher(self, model_id: str) -> MicroBatcher:
         try:
@@ -140,10 +215,12 @@ class ModelRegistry:
             return list(self._batchers)
 
     def __contains__(self, model_id: str) -> bool:
-        return model_id in self._batchers
+        with self._lock:
+            return model_id in self._batchers
 
     def __len__(self) -> int:
-        return len(self._batchers)
+        with self._lock:
+            return len(self._batchers)
 
     def next_deadline(self) -> Optional[float]:
         """Earliest queued deadline across every model (None when idle)."""
@@ -157,10 +234,12 @@ class ServingFrontend:
     dispatch thread) or call :meth:`start` / :meth:`close` explicitly."""
 
     def __init__(self, registry: Optional[ModelRegistry] = None, *,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 retry_policy: Optional[RetryPolicy] = RetryPolicy()):
         self.registry = registry if registry is not None \
             else ModelRegistry(clock=clock)
         self.clock = self.registry.clock
+        self.retry_policy = retry_policy
         self._cond = threading.Condition()
         self._futures: Dict[Tuple[str, int],
                             concurrent.futures.Future] = {}
@@ -168,13 +247,19 @@ class ServingFrontend:
         self._running = False
         self._draining = True
         self._error: Optional[BaseException] = None
-        self.stats = {"launches": 0, "by_model": {}}
+        self._quarantined: set = set()
+        self._fail_streak: Dict[str, int] = {}
+        self.stats = {"launches": 0, "rejected": 0, "launch_failures": 0,
+                      "retries": 0, "fallbacks": 0, "quarantined": [],
+                      "by_model": {}}
 
     def _model_stats(self, model_id: str) -> dict:
         # lazy: models may be registered through self.register OR straight
         # through the registry (documented as legal while running).
         return self.stats["by_model"].setdefault(
-            model_id, {"requests": 0, "launches": 0})
+            model_id, {"requests": 0, "launches": 0, "rejected": 0,
+                       "launch_failures": 0, "retries": 0, "fallbacks": 0,
+                       "quarantined": False})
 
     # ---------------------------------------------------------- lifecycle
 
@@ -227,11 +312,17 @@ class ServingFrontend:
     # ------------------------------------------------------------- intake
 
     def register(self, model_id: str, plan: ExecutionPlan, *,
-                 max_delay: float = 2e-3,
-                 max_bucket: Optional[int] = None) -> MicroBatcher:
-        batcher = self.registry.register(model_id, plan,
+                 tier=None,
+                 max_delay: Optional[float] = None,
+                 max_bucket: Optional[int] = None,
+                 max_queued_rows: Optional[int] = None,
+                 service_times: Optional[Dict[int, float]] = None
+                 ) -> MicroBatcher:
+        batcher = self.registry.register(model_id, plan, tier=tier,
                                          max_delay=max_delay,
-                                         max_bucket=max_bucket)
+                                         max_bucket=max_bucket,
+                                         max_queued_rows=max_queued_rows,
+                                         service_times=service_times)
         self._model_stats(model_id)
         with self._cond:
             self._cond.notify_all()
@@ -239,7 +330,14 @@ class ServingFrontend:
 
     def submit(self, model_id: str, x) -> concurrent.futures.Future:
         """Queue one request from any thread; resolves to a
-        :class:`Served` when its bucket has run."""
+        :class:`Served` when its bucket has run.
+
+        Overload/fault outcomes resolve the returned future with a typed
+        :class:`~.slo.Rejected` (reason ``queue_full`` / ``deadline`` /
+        ``quarantined``) instead of raising here or hanging — callers
+        that ``await``/``result()`` uniformly see every outcome.  Invalid
+        requests (bad shape, unknown model) still raise synchronously:
+        those are caller bugs, not load conditions."""
         batcher = self.registry.batcher(model_id)
         fut: concurrent.futures.Future = concurrent.futures.Future()
         with self._cond:
@@ -249,7 +347,22 @@ class ServingFrontend:
             if not self._running:
                 raise RuntimeError("frontend is not running (use "
                                    "`with frontend:` or call start())")
-            rid = batcher.submit(x, now=self.clock())
+            if model_id in self._quarantined:
+                self.stats["rejected"] += 1
+                self._model_stats(model_id)["rejected"] += 1
+                fut.set_exception(Rejected(
+                    REJECT_QUARANTINED,
+                    "model is quarantined after repeated launch failures",
+                    model_id=model_id))
+                return fut
+            try:
+                rid = batcher.submit(x, now=self.clock())
+            except Rejected as rej:
+                rej.model_id = model_id
+                self.stats["rejected"] += 1
+                self._model_stats(model_id)["rejected"] += 1
+                fut.set_exception(rej)
+                return fut
             self._futures[(model_id, rid)] = fut
             self._model_stats(model_id)["requests"] += 1
             self._cond.notify_all()
@@ -263,19 +376,38 @@ class ServingFrontend:
     def serve(self, model_id: str, xs: Sequence,
               timeout: Optional[float] = None) -> List[Served]:
         """Synchronous convenience: submit every request, block until all
-        are served, return in submission order."""
-        futs = [self.submit(model_id, x) for x in xs]
+        are served, return in submission order.  If a later ``submit``
+        raises (bad shape, dead frontend), the earlier futures are
+        cancelled before the cause propagates — their queued requests
+        would otherwise keep occupying the queue with nobody left to
+        collect them."""
+        futs: List[concurrent.futures.Future] = []
+        try:
+            for x in xs:
+                futs.append(self.submit(model_id, x))
+        except BaseException:
+            for f in futs:
+                f.cancel()
+            raise
         return [f.result(timeout) for f in futs]
 
     # ----------------------------------------------------------- dispatch
 
     def _pick(self, now: float) -> Optional[Tuple[str, MicroBatcher]]:
-        """The fired batcher with the oldest head deadline: full tiles
-        fire immediately, partial buckets fire when due — one total order
-        (deadline = arrival + max_delay ⇒ global arrival FIFO)."""
+        """The fired batcher with the oldest *tier-weighted* head
+        deadline: full tiles fire immediately, partial buckets fire when
+        due, and fired candidates are ordered by ``deadline -
+        tier.weight`` — with the default (weight-0) tiers this is exactly
+        global arrival FIFO (deadline = arrival + max_delay); a
+        latency-class tier preempts other models' full tiles by up to its
+        ``weight`` seconds of queue age, no more, so bulk tiers age past
+        the credit and still win (starvation-free).  Quarantined models
+        never launch."""
         best = None
-        best_deadline = None
+        best_key = None
         for model_id, batcher in self.registry.items():
+            if model_id in self._quarantined:
+                continue
             deadline = batcher.next_deadline()
             if deadline is None:
                 continue
@@ -283,18 +415,98 @@ class ServingFrontend:
                      or batcher.pending_rows >= batcher.max_bucket)
             if not fired:
                 continue
-            if best_deadline is None or deadline < best_deadline:
-                best, best_deadline = (model_id, batcher), deadline
+            key = deadline - batcher.tier.weight
+            if best_key is None or key < best_key:
+                best, best_key = (model_id, batcher), key
         return best
 
+    def _fatal(self, exc: BaseException) -> None:
+        """Stream-fatal path (dispatch machinery error, or the ladder is
+        disabled): fail everything outstanding loudly, refuse new work."""
+        with self._cond:
+            self._error = exc
+            self._running = False
+            for fut in self._futures.values():
+                if not fut.cancelled():
+                    fut.set_exception(exc)
+            self._futures.clear()
+
+    def _quarantine(self, model_id: str, batcher: MicroBatcher,
+                    exc: BaseException) -> None:
+        """Isolate one model: root cause to its outstanding futures, its
+        queue dropped, new submits rejected — other models keep serving."""
+        batcher.drop_all()
+        with self._cond:
+            self._quarantined.add(model_id)
+            self._model_stats(model_id)["quarantined"] = True
+            if model_id not in self.stats["quarantined"]:
+                self.stats["quarantined"].append(model_id)
+            for key in [k for k in self._futures if k[0] == model_id]:
+                fut = self._futures.pop(key)
+                if not fut.cancelled():
+                    fut.set_exception(exc)
+            self._cond.notify_all()
+
+    def _degrade(self, model_id: str, batcher: MicroBatcher,
+                 exc: Exception) -> None:
+        """One failed launch through the ladder: retry (queue is intact —
+        the batcher requeued the taken requests) → poison-and-demote the
+        failing fused bucket to the per-layer chain → quarantine the
+        model.  Raises when the ladder is disabled (stream-fatal, the
+        pre-ladder contract)."""
+        policy = self.retry_policy
+        with self._cond:
+            self.stats["launch_failures"] += 1
+            ms = self._model_stats(model_id)
+            ms["launch_failures"] += 1
+            streak = self._fail_streak.get(model_id, 0) + 1
+            self._fail_streak[model_id] = streak
+        if policy is None:
+            raise exc
+        if streak <= policy.max_retries:
+            with self._cond:
+                self.stats["retries"] += 1
+                ms["retries"] += 1
+            if policy.backoff_s > 0:
+                time.sleep(policy.backoff_s * streak)
+            return
+        if policy.fallback:
+            bucket = batcher.last_failed_bucket
+            plan = batcher.plan
+            bp = getattr(plan, "buckets", {}).get(bucket)
+            if bp is not None and bp.path.startswith("fused") and \
+                    hasattr(plan, "demote_bucket"):
+                plan.demote_bucket(bucket, reason=f"{type(exc).__name__} "
+                                   f"x{streak}")
+                with self._cond:
+                    self.stats["fallbacks"] += 1
+                    ms["fallbacks"] += 1
+                    self._fail_streak[model_id] = 0   # fresh rung
+                return
+        if policy.quarantine:
+            self._quarantine(model_id, batcher, exc)
+            return
+        raise exc
+
     def _loop(self) -> None:
+        try:
+            self._loop_inner()
+        except BaseException as exc:           # noqa: BLE001
+            # an error in the dispatch machinery itself (not a launch —
+            # those walk the ladder in _degrade) is fatal for the stream:
+            # a silent thread death would leave every future hanging
+            # until its caller's timeout with no root cause.
+            self._fatal(exc)
+
+    def _loop_inner(self) -> None:
         while True:
             with self._cond:
                 if not self._running:
                     if not self._draining:
                         return
                     pick = next(((m, b) for m, b in self.registry.items()
-                                 if b.pending_rows), None)
+                                 if b.pending_rows
+                                 and m not in self._quarantined), None)
                     if pick is None:
                         return
                 else:
@@ -309,21 +521,12 @@ class ServingFrontend:
             model_id, batcher = pick
             try:
                 done, _bucket, _dt = batcher.run_one()
-            except BaseException as exc:       # noqa: BLE001
-                # a failed launch (XLA/VMEM/kernel error) is fatal for the
-                # stream: a silent thread death would leave every future
-                # hanging until its caller's timeout with no root cause.
-                # Fail everything outstanding loudly and refuse new work.
-                with self._cond:
-                    self._error = exc
-                    self._running = False
-                    for fut in self._futures.values():
-                        if not fut.cancelled():
-                            fut.set_exception(exc)
-                    self._futures.clear()
-                return
+            except Exception as exc:           # noqa: BLE001
+                self._degrade(model_id, batcher, exc)
+                continue
             finish = self.clock()
             with self._cond:
+                self._fail_streak.pop(model_id, None)
                 self.stats["launches"] += 1
                 self._model_stats(model_id)["launches"] += 1
                 for c in done:

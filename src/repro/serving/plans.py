@@ -486,6 +486,27 @@ class ExecutionPlan:
             return BucketPlan(m, "fused_stream", block_m=bm, source="mode")
         return BucketPlan(m, "per_layer", source="mode")
 
+    def demote_bucket(self, rows: int, *, reason: str = "fault") -> BucketPlan:
+        """Graceful-degradation rebind: point one bucket at the per-layer
+        chain path.  The serving frontend calls this when a fused
+        ``(bucket, schedule)`` entry keeps failing after retries — the
+        chain kernels share no schedule (and much less VMEM pressure)
+        with the poisoned megakernel entry, so the model keeps serving,
+        degraded but correct (chain and megakernel are bit-identical on
+        the int8 grid and allclose in fp32 — the parity contract).  The
+        jitted entry is dropped so the next launch compiles the fallback;
+        the rebind is recorded in ``notes`` and the bucket's ``source``.
+        """
+        if rows not in self.buckets:
+            raise KeyError(f"no bucket of {rows} rows; have "
+                           f"{self.bucket_sizes}")
+        bp = BucketPlan(rows, "per_layer", source=f"degraded:{reason}")
+        self.buckets[rows] = bp
+        self._entries.pop(rows, None)
+        self.notes.append(
+            f"bucket {rows} demoted to per_layer ({reason})")
+        return bp
+
     # ------------------------------------------------------------ execute
 
     def _execute(self, x: jax.Array, path: str,

@@ -1,0 +1,95 @@
+"""Graceful degradation under systematic failure and overload: a
+quarantined model must not drag down co-served healthy models
+(acceptance: healthy p95 within 2x its no-fault baseline), and bounded
+queues must keep memory flat under a burst far above capacity."""
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.runtime.fault import FaultInjector
+from test_serving_plans import _rand_pack
+
+DIMS_A = (16, 12, 4)
+DIMS_B = (16, 8, 6)
+
+
+def _oracle_plan(dims, seed=0):
+    return serving.build_plan(_rand_pack(dims, seed=seed), mode="oracle")
+
+
+def _p95(vals):
+    return float(np.percentile(np.asarray(vals), 95))
+
+
+def _serve_good(fe, n=12):
+    lats = []
+    for i in range(n):
+        x = np.full((1, DIMS_B[0]), 0.1 * i, np.float32)
+        lats.append(fe.submit("good", x).result(30.0).latency)
+    return lats
+
+
+def test_quarantine_isolates_healthy_model_p95():
+    """Systematic failure in one model quarantines ONLY that model; the
+    co-served healthy model's p95 stays within 2x its no-fault baseline.
+    max_delay is large enough (50 ms) that the coalescing deadline, not
+    host noise, dominates both runs."""
+    # -- baseline: healthy model alone, no faulty neighbour
+    fe0 = serving.ServingFrontend()
+    fe0.register("good", _oracle_plan(DIMS_B, seed=3), max_delay=0.05)
+    with fe0:
+        base = _serve_good(fe0)
+
+    # -- faulted: a systematically failing neighbour is co-served
+    bad = FaultInjector(_oracle_plan(DIMS_A), rate=1.0)
+    fe = serving.ServingFrontend(
+        retry_policy=serving.RetryPolicy(max_retries=2, fallback=False))
+    fe.register("good", _oracle_plan(DIMS_B, seed=3), max_delay=0.05)
+    fe.register("bad", bad, max_delay=0.05)
+    with fe:
+        bad_fut = fe.submit("bad", np.zeros((1, DIMS_A[0]), np.float32))
+        lats = _serve_good(fe)
+        # the bad model's future carries the root cause ...
+        with pytest.raises(serving.InjectedFault):
+            bad_fut.result(30.0)
+        # ... and later submits are rejected, typed, without a launch
+        late = fe.submit("bad", np.zeros((1, DIMS_A[0]), np.float32))
+        with pytest.raises(serving.Rejected, match="quarantined"):
+            late.result(5.0)
+
+    assert fe.stats["quarantined"] == ["bad"]
+    assert fe.stats["by_model"]["good"]["quarantined"] is False
+    assert fe.stats["by_model"]["good"]["launches"] == len(lats)
+    assert _p95(lats) < 2.0 * max(_p95(base), 0.05)
+
+
+def test_burst_overload_queue_stays_bounded():
+    """A burst ~10x the bound: queued rows never exceed max_queued_rows,
+    overflow is a typed prompt rejection, and every admitted request is
+    served."""
+    plan = _oracle_plan(DIMS_A)
+    bound = 8
+    fe = serving.ServingFrontend()
+    fe.register("m", plan, max_delay=30.0, max_bucket=64,
+                max_queued_rows=bound)
+    batcher = fe.registry.batcher("m")
+    fe.start()
+    admitted, rejected = [], []
+    for i in range(10 * bound):
+        fut = fe.submit("m", np.zeros((1, DIMS_A[0]), np.float32))
+        assert batcher.pending_rows <= bound
+        exc = None
+        if fut.done():
+            exc = fut.exception(0.0)
+        if exc is None:
+            admitted.append(fut)
+        else:
+            assert isinstance(exc, serving.Rejected)
+            assert exc.reason == "queue_full"
+            rejected.append(fut)
+    assert rejected                                 # overload really shed
+    assert batcher.stats["rejected_full"] == len(rejected)
+    fe.close(drain=True)
+    for f in admitted:
+        assert f.result(0.0).y.shape == (1, DIMS_A[-1])
+    assert fe.stats["rejected"] == len(rejected)

@@ -1,0 +1,170 @@
+"""Fault injection + the first two degradation rungs: the FaultInjector
+plan wrapper, the batcher's requeue-on-failure (nothing lost), retry
+parity under a 10% transient launch-failure rate (100% completion,
+bit-identical to the no-fault run), and the poisoned-bucket fallback to
+the per-layer chain."""
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.runtime.fault import FaultInjector, InjectedFault
+from test_serving_plans import _rand_pack
+
+DIMS = (16, 12, 4)
+
+
+def _oracle_plan(dims=DIMS, seed=0):
+    return serving.build_plan(_rand_pack(dims, seed=seed), mode="oracle")
+
+
+def _rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(1, DIMS[0])).astype(np.float32)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------- the injector
+
+def test_injector_proxies_plan_and_fires_probabilistically():
+    plan = _oracle_plan()
+    inj = FaultInjector(plan, rate=1.0)
+    assert inj.d_in == plan.d_in                 # attribute proxy
+    assert inj.bucket_for(3) == plan.bucket_for(3)
+    assert inj.plan is plan
+    with pytest.raises(InjectedFault):
+        inj.entry(1)(np.zeros((1, DIMS[0]), np.float32))
+    assert inj.injected == 1 and inj.launches == 1
+    calm = FaultInjector(plan, rate=0.0)
+    y = calm.entry(1)(np.zeros((1, DIMS[0]), np.float32))
+    assert np.asarray(y).shape == (1, DIMS[-1])
+    assert calm.injected == 0
+
+
+def test_injector_scheduled_and_systematic_triggers():
+    plan = _oracle_plan()
+    nth = FaultInjector(plan, fail_nth=(1,))
+    e = nth.entry(1)
+    x = np.zeros((1, DIMS[0]), np.float32)
+    e(x)                                          # launch 0: fine
+    with pytest.raises(InjectedFault):
+        e(x)                                      # launch 1: scheduled
+    e(x)                                          # launch 2: fine
+    byb = FaultInjector(plan, fail_buckets=(2,))
+    byb.entry(1)(x)
+    with pytest.raises(InjectedFault):
+        byb.entry(2)(np.zeros((2, DIMS[0]), np.float32))
+
+
+def test_injector_only_fused_spares_nonfused_bindings():
+    """only_fused models a megakernel-specific fault: once the bucket is
+    demoted to the per-layer chain, injection stops."""
+    plan = serving.build_plan(_rand_pack(DIMS), mode="fused",
+                              interpret=True)
+    inj = FaultInjector(plan, fail_buckets=(1,), only_fused=True)
+    x = np.zeros((1, DIMS[0]), np.float32)
+    assert plan.buckets[1].path.startswith("fused")
+    with pytest.raises(InjectedFault):
+        inj.entry(1)(x)
+    plan.demote_bucket(1)
+    y = inj.entry(1)(x)                           # chain path: spared
+    assert np.asarray(y).shape == (1, DIMS[-1])
+    assert plan.buckets[1].source.startswith("degraded")
+
+
+# ------------------------------------------- requeue: nothing is lost
+
+def test_failed_launch_requeues_taken_requests_in_order():
+    plan = _oracle_plan()
+    inj = FaultInjector(plan, rate=1.0)
+    b = serving.MicroBatcher(inj, max_delay=30.0)
+    rids = [b.submit(x) for x in _rows(3)]
+    before = b.pending_rows
+    with pytest.raises(InjectedFault):
+        b.run_one()
+    assert b.pending_rows == before               # queue intact
+    assert b.stats["launch_failures"] == 1
+    assert b.last_failed_bucket == plan.bucket_for(3)
+    inj.rate = 0.0                                # fault clears
+    done = b.flush()
+    assert [c.rid for c in done] == rids          # original FIFO order
+
+
+def test_drop_all_empties_queue_and_reports_dropped():
+    plan = _oracle_plan()
+    b = serving.MicroBatcher(plan, max_delay=30.0)
+    for x in _rows(3):
+        b.submit(x)
+    dropped = b.drop_all()
+    assert len(dropped) == 3 and b.pending_rows == 0
+    assert b.next_deadline() is None
+
+
+# ------------------------------------ retry parity under 10% faults
+
+def test_retry_parity_10pct_transient_faults_bit_identical():
+    """Acceptance: at a 10% transient launch-failure rate every admitted
+    request completes, bit-identical to the no-fault run — the retry
+    relaunches the same bucket entry on the same host-side rows."""
+    xs = _rows(24, seed=3)
+    plan = _oracle_plan()
+
+    def serve_all(wrapped):
+        fe = serving.ServingFrontend(
+            retry_policy=serving.RetryPolicy(max_retries=10))
+        fe.register("m", wrapped, max_delay=1e-4)
+        with fe:
+            # sequential: each request is served alone in its own bucket,
+            # so fault and no-fault runs launch identical (entry, input)
+            # pairs and bitwise comparison is exact.
+            return [fe.submit("m", x).result(30.0).y for x in xs]
+
+    baseline = serve_all(plan)
+    inj = FaultInjector(plan, rate=0.10, seed=42)
+    faulted = serve_all(inj)
+    assert inj.injected > 0                       # the rate actually bit
+    assert len(faulted) == len(xs)                # 100% completion
+    for a, b in zip(baseline, faulted):
+        np.testing.assert_array_equal(a, b)       # bit-identical
+
+
+def test_retry_parity_under_concurrent_load():
+    """Same contract under coalescing: every request completes and is
+    correct (allclose vs the plan run alone — the fp32 padding-parity
+    tolerance) while faults land mid-stream."""
+    xs = _rows(16, seed=9)
+    plan = _oracle_plan()
+    # coalescing means few launches; fail_nth pins a fault on the first
+    # so the retry path is exercised deterministically.
+    inj = FaultInjector(plan, rate=0.15, seed=7, fail_nth=(0,))
+    fe = serving.ServingFrontend(
+        retry_policy=serving.RetryPolicy(max_retries=10))
+    fe.register("m", inj, max_delay=2e-3)
+    with fe:
+        futs = [fe.submit("m", x) for x in xs]
+        served = [f.result(30.0) for f in futs]
+    assert fe.stats["retries"] >= 1
+    for x, s in zip(xs, served):
+        np.testing.assert_allclose(s.y, np.asarray(plan.run(x)),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------- poisoned-bucket fallback
+
+def test_poisoned_fused_bucket_falls_back_to_chain():
+    pack = _rand_pack(DIMS)
+    plan = serving.build_plan(pack, mode="fused", interpret=True)
+    oracle = serving.build_plan(_rand_pack(DIMS), mode="oracle")
+    inj = FaultInjector(plan, fail_buckets=(1,), only_fused=True)
+    fe = serving.ServingFrontend(
+        retry_policy=serving.RetryPolicy(max_retries=1))
+    fe.register("m", inj, max_delay=1e-3)
+    x = _rows(1, seed=5)[0]
+    with fe:
+        s = fe.submit("m", x).result(60.0)        # retries, then demotes
+    assert plan.buckets[1].path == "per_layer"
+    assert plan.buckets[1].source.startswith("degraded")
+    assert fe.stats["fallbacks"] == 1
+    assert fe.stats["retries"] >= 1
+    assert "m" not in fe.stats["quarantined"]     # ladder stopped early
+    np.testing.assert_allclose(s.y, np.asarray(oracle.run(x)),
+                               atol=1e-3, rtol=1e-4)

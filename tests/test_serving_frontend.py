@@ -132,22 +132,52 @@ def test_registry_and_lifecycle_errors():
     assert "m" in fe.registry and len(fe.registry) == 1
 
 
+class BoomPlan:
+    """Plan proxy whose every launch raises — systematic model failure."""
+
+    def __init__(self, plan):
+        self._plan = plan
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def entry(self, bucket):
+        def boom(xb):
+            raise ValueError("kernel exploded")
+        return boom
+
+    def run(self, x):
+        raise ValueError("kernel exploded")
+
+
 def test_dispatch_error_fails_futures_loudly():
-    """A failed launch must not kill the dispatch thread silently:
-    outstanding futures carry the exception and new submits refuse."""
-    class BoomPlan:
-        def __init__(self, plan):
-            self._plan = plan
-
-        def __getattr__(self, name):
-            return getattr(self._plan, name)
-
-        def entry(self, bucket):
-            def boom(xb):
-                raise ValueError("kernel exploded")
-            return boom
-
+    """A systematically failing launch must not hang its futures NOR kill
+    the stream: after the retry ladder the model is quarantined — its
+    futures carry the root cause, new submits to it resolve with a typed
+    Rejected, and co-registered models keep serving."""
+    plan_b = _oracle_plan(DIMS_B, seed=3)
     fe = serving.ServingFrontend()
+    fe.register("m", BoomPlan(_oracle_plan(DIMS_A)))
+    fe.register("ok", plan_b)
+    with fe:
+        fut = fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(ValueError, match="kernel exploded"):
+            fut.result(30.0)
+        rejected = fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(serving.Rejected, match="quarantined"):
+            rejected.result(30.0)
+        # the stream survives: the healthy model still serves.
+        s = fe.submit("ok", np.zeros((1, 16), np.float32)).result(30.0)
+        assert s.y.shape == (1, DIMS_B[-1])
+    assert fe.stats["quarantined"] == ["m"]
+    assert fe.stats["by_model"]["m"]["quarantined"] is True
+    assert fe.stats["by_model"]["m"]["retries"] >= 1
+
+
+def test_legacy_fatal_contract_without_retry_policy():
+    """retry_policy=None restores the pre-ladder contract: first launch
+    failure is stream-fatal, outstanding futures fail, submits refuse."""
+    fe = serving.ServingFrontend(retry_policy=None)
     fe.register("m", BoomPlan(_oracle_plan(DIMS_A)))
     with fe:
         fut = fe.submit("m", np.zeros((1, 16), np.float32))
@@ -155,6 +185,29 @@ def test_dispatch_error_fails_futures_loudly():
             fut.result(30.0)
         with pytest.raises(RuntimeError, match="dispatch thread died"):
             fe.submit("m", np.zeros((1, 16), np.float32))
+
+
+def test_asubmit_receives_root_cause_when_stream_dies():
+    """An asubmit caller awaiting while the dispatch stream dies must
+    receive the root-cause exception, not hang until timeout — the async
+    twin of the sync-future contract pinned above.  The stream is killed
+    through the dispatch machinery itself (a scheduler bug, not a launch
+    failure), which stays stream-fatal even with the retry ladder on."""
+    plan = _oracle_plan(DIMS_A)
+    fe = serving.ServingFrontend()
+    fe.register("m", plan, max_delay=0.05)
+
+    def boom_pick(now):
+        raise RuntimeError("scheduler bug")
+
+    async def go():
+        with fe:
+            fe._pick = boom_pick          # dispatch machinery, not launch
+            return await fe.asubmit("m", np.zeros((1, 16), np.float32))
+
+    with pytest.raises(RuntimeError, match="scheduler bug"):
+        asyncio.run(go())
+    assert isinstance(fe._error, RuntimeError)
 
 
 def test_registry_registration_path_is_equivalent():
