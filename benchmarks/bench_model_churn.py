@@ -1,0 +1,167 @@
+"""Model-churn benchmark: N compact packs behind the two-tier PackCache.
+
+The fleet story of ROADMAP item 5: many compact models registered, only
+a few hot at once.  ``serving.PackCache`` keeps every registered model
+in its 4-bit/Huffman **cold** form (``compress_pack`` →
+``CompressedTensor`` per layer) and resolves an ``ExecutionPlan`` only
+on first traffic, evicting LRU plans back to compressed form under a
+count/byte budget.  This benchmark drives a Zipf-distributed request
+stream (model popularity rank ``r`` drawn ∝ r^-s, the standard
+many-model serving skew) over ``N_MODELS`` synthetic packs at a hot
+budget far below N and reports what the cache hierarchy promises:
+
+* **resident-bytes high-water mark** — must stay at/below the
+  ``hot_budget``-plan bound (evict-before-resolve: decoding the miss
+  never overlaps the victim);
+* **cold-start p95** — first-traffic decode + calibrate + plan resolve;
+* **hot-path p95 vs the uncached engine** — the same request stream
+  against permanently-resident plans; the cache's hit path is one lock
+  + OrderedDict touch, so the ratio must be ~1;
+* **compression ratio** — cold-tier bytes vs fp32 dense bytes;
+* **evict → reload bit-identity** on the int8 grid (lossless codecs +
+  captured ``act_scales`` ⇒ re-resolution is byte-exact).
+
+Plans resolve in ``mode="oracle"``: the benchmark measures the *cache
+hierarchy* (decode, resolve, eviction, lookup overhead), not kernel
+wall-clock — the kernel A/B numbers live in bench_fused_serving /
+bench_int8_fused.  Extends the repo-root ``BENCH_fused_serving.json``
+with ``model_churn_rows`` (keyed by ``(models, hot_budget)``, guarded by
+``scripts/check_bench_rows.py``); also writes
+results/bench/model_churn.json.
+"""
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+from benchmarks.bench_fused_serving import _rand_pack, merge_root_json
+from benchmarks.common import save
+from repro.serving import pack_cache as pc
+
+CFG = SimpleNamespace(d_in=64, features=(96, 64, 10))
+N_MODELS = 16
+HOT_BUDGET = 4
+ZIPF_S = 1.1
+PLAN_KWARGS = {"mode": "oracle"}
+CLOCK = time.perf_counter
+
+
+def _zipf_stream(n_models: int, n_requests: int, rng) -> np.ndarray:
+    """Model index per request, popularity ∝ (rank+1)^-ZIPF_S."""
+    p = (np.arange(1, n_models + 1, dtype=np.float64)) ** (-ZIPF_S)
+    p /= p.sum()
+    return rng.choice(n_models, size=n_requests, p=p)
+
+
+def _drive(cache_plans, stream, xs, resolves_fn=None) -> dict:
+    """Run the request stream; split latencies by cold (a resolve
+    happened inside the call) vs hot."""
+    cold, hot = [], []
+    for req, i in enumerate(stream):
+        before = resolves_fn() if resolves_fn else 0
+        t0 = CLOCK()
+        y = cache_plans[i].run(xs[req])
+        np.asarray(y)                      # materialize
+        dt = CLOCK() - t0
+        was_cold = resolves_fn and resolves_fn() > before
+        (cold if was_cold else hot).append(dt)
+    return {"cold_s": cold, "hot_s": hot}
+
+
+def _p95_ms(samples) -> float:
+    return float(np.percentile(np.asarray(samples), 95) * 1e3) \
+        if samples else 0.0
+
+
+def _bit_identity_leg(packs) -> bool:
+    """max_hot=1 on the int8 grid: serve m0, force its eviction via m1,
+    reload m0 — outputs must be byte-exact (acceptance criterion)."""
+    cache = pc.PackCache(max_hot=1, plan_kwargs={"act_dtype": "int8"})
+    p0 = cache.add("m0", packs[0])
+    p1 = cache.add("m1", packs[1])
+    rng = np.random.default_rng(99)
+    x = rng.normal(size=(4, CFG.d_in)).astype(np.float32)
+    y1 = np.asarray(p0.run(x))
+    np.asarray(p1.run(x))                  # evicts m0
+    ok = not cache.has_hot("m0")
+    y2 = np.asarray(p0.run(x))
+    return bool(ok and np.array_equal(y1, y2))
+
+
+def run(fast: bool = False) -> dict:
+    n_requests = 240 if fast else 1200
+    rng = np.random.default_rng(0)
+    packs = [_rand_pack(CFG, seed=i) for i in range(N_MODELS)]
+
+    # uncached reference: every plan permanently resident (the pre-cache
+    # registry behavior) — baseline for hot-path latency and the
+    # resident-bytes bound
+    ref_plans = [pc.build_plan(p, **PLAN_KWARGS) for p in packs]
+    plan_bytes = max(pc.plan_resident_bytes(p) for p in ref_plans)
+    resident_bound = HOT_BUDGET * plan_bytes
+
+    stream = _zipf_stream(N_MODELS, n_requests, rng)
+    xs = [rng.normal(size=(int(rng.integers(1, 5)), CFG.d_in))
+          .astype(np.float32) for _ in range(n_requests)]
+
+    rows = []
+    for hot_budget in (HOT_BUDGET, N_MODELS):
+        cache = pc.PackCache(max_hot=hot_budget, plan_kwargs=PLAN_KWARGS)
+        proxies = [cache.add(f"m{i}", packs[i]) for i in range(N_MODELS)]
+        timed = _drive(proxies, stream, xs,
+                       resolves_fn=lambda: cache.stats["resolves"])
+        uncached = _drive(ref_plans, stream, xs)
+        hot_p95 = _p95_ms(timed["hot_s"])
+        unc_p95 = _p95_ms(uncached["hot_s"])
+        cr = float(np.mean([pc.compress_pack(p).compression_ratio
+                            for p in packs])) if hot_budget == HOT_BUDGET \
+            else rows[0]["compression_ratio"]
+        row = {
+            "models": N_MODELS,
+            "hot_budget": hot_budget,
+            "requests": n_requests,
+            "zipf_s": ZIPF_S,
+            "mode": PLAN_KWARGS["mode"],
+            "resolves": cache.stats["resolves"],
+            "evictions": cache.stats["evictions"],
+            "resident_hwm_bytes": cache.stats["resident_high_water"],
+            "resident_bound_bytes": resident_bound,
+            "resident_over_bound":
+                cache.stats["resident_high_water"] / resident_bound,
+            "cold_start_p95_ms": _p95_ms(cache.stats["cold_start_s"]),
+            "hot_p95_ms": hot_p95,
+            "uncached_p95_ms": unc_p95,
+            "hot_over_uncached": hot_p95 / max(unc_p95, 1e-9),
+            "compression_ratio": cr,
+            "bit_identical_reload": _bit_identity_leg(packs),
+        }
+        rows.append(row)
+        print(f"  models={N_MODELS} hot={hot_budget}: "
+              f"resolves={row['resolves']} evictions={row['evictions']} "
+              f"hwm={row['resident_hwm_bytes']/1e3:.1f}kB "
+              f"(bound {resident_bound/1e3:.1f}kB, "
+              f"x{row['resident_over_bound']:.2f}) "
+              f"cold_p95={row['cold_start_p95_ms']:.2f}ms "
+              f"hot_p95={hot_p95:.3f}ms (uncached {unc_p95:.3f}ms, "
+              f"x{row['hot_over_uncached']:.2f}) "
+              f"CR={cr:.2f} bitid={row['bit_identical_reload']}")
+
+    budgeted = rows[0]
+    assert budgeted["resident_over_bound"] <= 1.0 + 1e-9, \
+        "resident high-water exceeded the hot-budget bound"
+    assert budgeted["bit_identical_reload"], \
+        "evict -> reload was not bit-identical on the int8 grid"
+
+    payload = {"config": {"d_in": CFG.d_in, "features": list(CFG.features),
+                          "models": N_MODELS, "zipf_s": ZIPF_S,
+                          "requests": n_requests},
+               "rows": rows}
+    save("model_churn", payload)
+    merge_root_json({"model_churn_rows": rows})
+    return payload
+
+
+if __name__ == "__main__":
+    run()

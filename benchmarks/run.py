@@ -25,6 +25,12 @@ slo_traces            bursty/diurnal traces through SLO-tiered models with
                       bounded queues, admission control and a 10%-fault
                       leg; extends BENCH_fused_serving.json with
                       slo_trace_rows
+model_churn           N compact packs behind the two-tier PackCache under
+                      Zipf popularity: resident-bytes high-water vs the
+                      hot budget, cold-start p95, hot-path p95 vs the
+                      uncached engine, compression ratio, evict->reload
+                      bit-identity; extends BENCH_fused_serving.json with
+                      model_churn_rows
 """
 from __future__ import annotations
 
@@ -43,9 +49,10 @@ def main(argv=None):
 
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
-                            bench_int8_fused, bench_multi_model,
-                            bench_pareto, bench_serving_engine,
-                            bench_serving_roofline, bench_slo_traces)
+                            bench_int8_fused, bench_model_churn,
+                            bench_multi_model, bench_pareto,
+                            bench_serving_engine, bench_serving_roofline,
+                            bench_slo_traces)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -57,6 +64,7 @@ def main(argv=None):
         "serving_engine": lambda: bench_serving_engine.run(fast=args.fast),
         "multi_model": lambda: bench_multi_model.run(fast=args.fast),
         "slo_traces": lambda: bench_slo_traces.run(fast=args.fast),
+        "model_churn": lambda: bench_model_churn.run(fast=args.fast),
     }
     for name, fn in benches.items():
         if args.only and name != args.only:

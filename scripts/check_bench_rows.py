@@ -7,7 +7,8 @@
 its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
 (model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
 by (model, bucket, schedule), ``multi_model_rows`` by (load,),
-``slo_trace_rows`` by (trace, tier)) and its guarded metric(s).
+``slo_trace_rows`` by (trace, tier), ``model_churn_rows`` by
+(models, hot_budget)) and its guarded metric(s).
 ``check`` then fails loudly if, after the benchmarks reran:
 
 * any recorded row identity is missing — a benchmark that silently stopped
@@ -30,7 +31,12 @@ by (model, bucket, schedule), ``multi_model_rows`` by (load,),
   trajectory actually promises.  ``slo_trace_rows`` rate metrics
   (``within_slo_frac``, ``goodput_fault``, ``shed_rate``) live in [0, 1]
   and are guarded ADDITIVELY — the bound is percentage points, not a
-  ratio.  Set the env var to 0 or less to disable
+  ratio.  ``model_churn_rows`` carries three self-normalized ratios
+  (cold-tier ``compression_ratio``, cache-hit-vs-uncached
+  ``hot_over_uncached``, high-water-vs-budget ``resident_over_bound``)
+  guarded multiplicatively (``*_ratio`` directions) — the latter two are
+  cache-mechanics invariants, so a blow-up there is a real bug, not
+  host noise.  Set the env var to 0 or less to disable
   the regression leg (e.g. on a deliberately slower host); the row-loss
   and label guards always run.  ``scripts/ci.sh`` widens the bound on
   interpret hosts — see the measurement note there.
@@ -51,6 +57,7 @@ SECTIONS = {
     "schedule_rows": ("model", "bucket", "schedule"),
     "multi_model_rows": ("load",),
     "slo_trace_rows": ("trace", "tier"),
+    "model_churn_rows": ("models", "hot_budget"),
 }
 
 # guarded metric per section and the direction that counts as regression.
@@ -63,15 +70,22 @@ METRICS = {
     "multi_model_rows": ("aggregate_gain", "higher_is_better"),
 }
 
-# sections guarded on several metrics at once; rate metrics live in
-# [0, 1], so their regression bound is ADDITIVE (pct as percentage
-# POINTS) — a multiplicative bound on a near-zero shed rate would trip
-# on any nonzero value while letting a 0.9 -> 0.4 goodput drop through.
+# sections guarded on several metrics at once.  ``*_abs`` directions are
+# ADDITIVE (pct as percentage POINTS) for rate metrics living in [0, 1]
+# — a multiplicative bound on a near-zero shed rate would trip on any
+# nonzero value while letting a 0.9 -> 0.4 goodput drop through.
+# ``*_ratio`` directions are MULTIPLICATIVE, for self-normalized A/B
+# ratios where relative movement is what matters.
 MULTI_METRICS = {
     "slo_trace_rows": (
         ("within_slo_frac", "higher_abs"),
         ("goodput_fault", "higher_abs"),
         ("shed_rate", "lower_abs"),
+    ),
+    "model_churn_rows": (
+        ("compression_ratio", "higher_ratio"),
+        ("hot_over_uncached", "lower_ratio"),
+        ("resident_over_bound", "lower_ratio"),
     ),
 }
 
@@ -135,18 +149,25 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
             if pct <= 0 or not isinstance(old_val, dict):
                 continue
             new_vals = after[rid] if isinstance(after[rid], dict) else {}
-            tol = pct / 100.0          # additive, in percentage points
+            tol = pct / 100.0
             for metric, direction in MULTI_METRICS[section]:
                 ov, nv = old_val.get(metric), new_vals.get(metric)
                 if not isinstance(ov, (int, float)) or \
                         not isinstance(nv, (int, float)):
                     continue
-                worse = (nv > ov + tol if direction == "lower_abs"
-                         else nv < ov - tol)
+                if direction.endswith("_ratio"):     # multiplicative
+                    worse = (nv > ov * (1 + tol)
+                             if direction == "lower_ratio"
+                             else nv < ov * (1 - tol))
+                    bound = f"> {pct:.0f}% bound"
+                else:                                # additive, pct points
+                    worse = (nv > ov + tol if direction == "lower_abs"
+                             else nv < ov - tol)
+                    bound = f"> {pct:.0f} pct-point bound"
                 if worse:
                     failures.append(
                         f"{rid}: {metric} regressed {ov:.3f} -> "
-                        f"{nv:.3f} (> {pct:.0f} pct-point bound)")
+                        f"{nv:.3f} ({bound})")
             continue
         if pct <= 0 or old_val is None or section not in METRICS:
             continue

@@ -8,18 +8,22 @@
 # The benchmark leg reruns `benchmarks/run.py --fast` in interpret mode —
 # including bench_serving_engine (ragged-arrival engine vs naive),
 # bench_multi_model (>=2 packs behind the async ServingFrontend on the
-# real clock) and bench_slo_traces (bursty/diurnal traces through SLO
-# tiers with bounded queues, admission control and a 10%-fault leg) —
+# real clock), bench_slo_traces (bursty/diurnal traces through SLO
+# tiers with bounded queues, admission control and a 10%-fault leg) and
+# bench_model_churn (16 packs behind the two-tier PackCache under Zipf
+# popularity: resident-bytes high-water vs the hot budget, cold-start
+# p95, cache-hit vs uncached latency, evict->reload bit-identity) —
 # and rewrites BENCH_fused_serving.json at the repo root (fp32 rows +
 # int8_rows + serving_engine_rows + schedule_rows + multi_model_rows +
-# slo_trace_rows), so every PR leaves the cross-PR perf trajectory
-# current.  A benchmark overrun (budget exceeded) fails CI
-# loudly rather than silently shipping a stale perf file, and
+# slo_trace_rows + model_churn_rows), so every PR leaves the cross-PR
+# perf trajectory current.  A benchmark overrun (budget exceeded) fails
+# CI loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows
 # the committed baseline had, dropped a row's kernel-schedule label, or
 # regressed a guarded metric more than CI_BENCH_REGRESSION_PCT (default
 # 25%; <=0 disables the regression leg only; slo_trace_rows rate metrics
-# are guarded additively in percentage points).
+# are guarded additively in percentage points, model_churn_rows ratios
+# multiplicatively).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -10,10 +10,16 @@ Two artifact kinds:
   *current* mesh's NamedSharding — restoring a 512-chip checkpoint onto 256
   chips (or a different DP/TP split) just reshards (DESIGN.md §4).
 
-* **serving exports** (``export_quantized``) — the paper's artifact: per
-  quantized tensor, ECL codes stored in their cheapest lossless format
-  (CSR / bitmask / dense4, contribution 4) + the 4 fp32 centroids.  This is
-  where Table II's 8–29× byte reduction lands on checkpoint/restart I/O.
+* **serving exports** (``export_quantized``/``load_quantized`` for raw
+  train-state tensors, ``export_pack``/``load_pack`` for frozen serving
+  packs) — the paper's artifact: per quantized tensor, ECL codes stored
+  in their cheapest lossless format (CSR / bitmask / dense4,
+  contribution 4, + the beyond-paper huffman option) + the 4 fp32
+  centroids.  This is where Table II's 8–29× byte reduction lands on
+  checkpoint/restart I/O.  ``export_pack``'s on-disk form *is* the
+  serving cold tier's :class:`~repro.serving.pack_cache.ColdPack` — a
+  loaded pack goes straight into a ``PackCache`` without ever
+  materializing decoded weights (the pack-update hot-swap path).
 """
 from __future__ import annotations
 
@@ -178,3 +184,88 @@ def export_quantized(path: str, params: Any, qstate: Any, lam: float):
     with open(os.path.join(path, "report.json"), "w") as f:
         json.dump(report, f, indent=2)
     return report
+
+
+def load_quantized(path: str) -> dict:
+    """Read an :func:`export_quantized` artifact back (the function used
+    to be write-only — nothing consumed the paper's own artifact).
+    Returns ``{tensor prefix: {"codes": (…, n) uint8, "omega": (4,)
+    fp32}}`` for each quantized tensor plus ``{prefix: array}`` for the
+    unquantized leaves — the decoded-code form ``bitplanes.codebook`` /
+    ``decode`` consume."""
+    with np.load(os.path.join(path, "export.npz")) as z:
+        payload = {k: z[k] for k in z.files}
+    quant_prefixes = sorted(
+        k[: -len(SEP + "format")] for k in payload
+        if k.endswith(SEP + "format"))
+    out: dict = {}
+    claimed = set()
+    for prefix in quant_prefixes:
+        fmt = payload[prefix + SEP + "format"].tobytes().decode()
+        shape = tuple(int(d) for d in payload[prefix + SEP + "shape"])
+        meta_keys = {prefix + SEP + k for k in ("format", "shape", "omega")}
+        ct_payload = {}
+        for key in payload:
+            if key.startswith(prefix + SEP) and key not in meta_keys:
+                field = key[len(prefix + SEP):]
+                if SEP not in field:      # not a nested sibling tensor
+                    ct_payload[field] = payload[key]
+        flat2d_shape = (int(np.prod(shape[:-1])), shape[-1])
+        ct = formats.CompressedTensor(fmt, flat2d_shape, ct_payload)
+        out[prefix] = {"codes": formats.decode(ct).reshape(shape),
+                       "omega": payload[prefix + SEP + "omega"]}
+        claimed.update(meta_keys)
+        claimed.update(prefix + SEP + k for k in ct_payload)
+    for key, arr in payload.items():
+        if key not in claimed:
+            out[key] = arr
+    return out
+
+
+# frozen serving packs: at-rest ColdPack artifact (the cold tier's format)
+
+def export_pack(path: str, pack_or_cold, *, meta: Optional[dict] = None
+                ) -> dict:
+    """Write a frozen serving pack (``models.mlp.freeze_mlp`` dict or an
+    already-cold ``ColdPack``) as its at-rest compressed artifact —
+    ``pack.npz`` + ``report.json`` under ``path``, atomically.  This is
+    the unit a serving host pulls to (re)register a model: the bytes on
+    the wire are the cold tier's bytes."""
+    from ..serving.pack_cache import ColdPack, cold_pack_to_payload, \
+        compress_pack
+    cold = pack_or_cold if isinstance(pack_or_cold, ColdPack) \
+        else compress_pack(pack_or_cold)
+    payload = cold_pack_to_payload(cold)
+    report = {
+        "layers": [{"format": l.codes.format, "shape": list(l.shape),
+                    "bytes": l.size_bytes} for l in cold.layers],
+        "compressed_bytes": cold.size_bytes,
+        "fp32_bytes": cold.fp32_bytes,
+        "compression_ratio": cold.compression_ratio,
+        **(meta or {}),
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(path) or ".",
+                           prefix=".tmp_pack_")
+    try:
+        np.savez(os.path.join(tmp, "pack.npz"), **payload)
+        with open(os.path.join(tmp, "report.json"), "w") as f:
+            json.dump(report, f, indent=2)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return report
+
+
+def load_pack(path: str):
+    """Load an :func:`export_pack` artifact as a
+    :class:`~repro.serving.pack_cache.ColdPack` — feed it to
+    ``PackCache.add`` (cold registration) or ``PackCache.update`` (plan
+    hot-swap on pack update) without decoding anything here."""
+    from ..serving.pack_cache import cold_pack_from_payload
+    with np.load(os.path.join(path, "pack.npz")) as z:
+        payload = {k: z[k] for k in z.files}
+    return cold_pack_from_payload(payload)

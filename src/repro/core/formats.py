@@ -96,6 +96,13 @@ def decode_bitmask(ct: CompressedTensor) -> np.ndarray:
 def encode_csr(codes: np.ndarray) -> CompressedTensor:
     """CSR over 256-wide chunks: per chunk-row nnz count (uint16), 8-bit
     column pointers, 4-bit values."""
+    if codes.size == 0:        # empty/zero-row tensor: no chunks at all
+        return CompressedTensor("csr", codes.shape, {
+            "counts": np.zeros(0, np.uint16),
+            "colptr": np.zeros(0, np.uint8),
+            "values": np.zeros(0, np.uint8),
+            "nnz": np.asarray([0], np.int64),
+        })
     mat = codes.reshape(codes.shape[0], -1) if codes.ndim > 1 else codes.reshape(1, -1)
     rows, cols = mat.shape
     pad = (-cols) % CHUNK
@@ -114,6 +121,8 @@ def encode_csr(codes: np.ndarray) -> CompressedTensor:
 
 def decode_csr(ct: CompressedTensor) -> np.ndarray:
     shape = ct.shape
+    if int(np.prod(shape)) == 0:
+        return np.zeros(shape, np.uint8)
     rows = shape[0] if len(shape) > 1 else 1
     cols = int(np.prod(shape)) // rows
     padded_cols = cols + ((-cols) % CHUNK)
@@ -144,7 +153,7 @@ def analytic_size_bits(shape: tuple, nnz: int, fmt: str) -> int:
     the Table-II style benchmark (matches the codecs above exactly)."""
     n = int(np.prod(shape))
     rows = shape[0] if len(shape) > 1 else 1
-    cols = n // rows
+    cols = n // rows if rows else 0     # zero-row shard: nothing to chunk
     chunk_rows = rows * ((cols + CHUNK - 1) // CHUNK)
     if fmt == "dense4":
         return 2 * ((n + 1) // 2) * 4
@@ -214,6 +223,8 @@ def _canonical_codes(lengths: np.ndarray):
     under NumPy 2 and silently wraps at 255 (bug found by hypothesis)."""
     order = sorted((int(l), s) for s, l in enumerate(lengths) if l > 0)
     codes = np.zeros(16, np.uint32)
+    if not order:        # empty tensor: no symbols, no codewords
+        return codes
     code = 0
     prev_len = order[0][0]
     for l, s in order:

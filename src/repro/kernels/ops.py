@@ -223,6 +223,18 @@ def _ws_stacked_operands(layers: Sequence[dict], act_dtype: str,
     return stacked
 
 
+def forget_pack_operands(layers: Sequence[dict]) -> int:
+    """Drop every decoded-operand cache entry keyed on ``layers``' identity
+    (folded int8 operands and stacked weight-stationary operands);
+    returns how many entries were released.  The serving pack cache and
+    ``ModelRegistry.unregister`` call this when a model leaves the hot
+    tier — these memos hold strong references to the decoded arrays, so
+    without the drop an evicted pack's operands stay resident for the
+    process lifetime."""
+    return (_INT8_FOLD_MEMO.drop(layers)
+            + _WS_OPERAND_MEMO.drop(layers))
+
+
 def fantastic4_mlp_fused(x: jax.Array, layers: Sequence[dict], *,
                          use_kernel: bool = True,
                          interpret: Optional[bool] = None,

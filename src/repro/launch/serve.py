@@ -201,8 +201,32 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
     # number), then serve all models' ragged rows through one frontend.
     for mplan, rows in models.values():
         jax.block_until_ready(serving.MicroBatcher(mplan).serve(rows)[-1])
-    frontend = serving.ServingFrontend()
-    for name, (mplan, _) in models.items():
+    cache = None
+    if args.max_hot_models is not None or args.hot_bytes is not None:
+        cache = serving.PackCache(max_hot=args.max_hot_models,
+                                  hot_bytes=args.hot_bytes)
+        print(f"pack cache: hot budget "
+              f"{args.max_hot_models if args.max_hot_models else '∞'} "
+              f"models / "
+              f"{args.hot_bytes if args.hot_bytes else '∞'} bytes — "
+              "models registered compressed, decoded on first traffic")
+    frontend = serving.ServingFrontend(cache=cache)
+    for name, (mplan, mx_) in models.items():
+        if cache is not None:
+            # compressed-tier registration: the frontend holds the cold
+            # pack; the resolved plan lives (and churns) under the LRU
+            frontend.register_pack(
+                name, mplan.pack,
+                plan_kwargs={
+                    "mode": "fused" if args.fused else "per_layer",
+                    "act_dtype": "int8" if args.int8 else "float32",
+                    "double_buffer": args.double_buffer,
+                    "calib": ({"act_scales": list(mplan.act_scales)}
+                              if mplan.act_scales is not None else None),
+                },
+                tier=tiers[name], max_delay=delays[name],
+                max_queued_rows=args.max_queued)
+            continue
         target = mplan
         if args.inject_fault > 0:
             target = serving.FaultInjector(mplan, rate=args.inject_fault)
@@ -254,6 +278,15 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
         print(f"degradation: {fs['launch_failures']} launch failures, "
               f"{fs['retries']} retries, {fs['fallbacks']} chain "
               f"fallbacks, quarantined {fs['quarantined'] or 'none'}")
+    if cache is not None:
+        d = cache.describe()
+        print(f"pack cache: {d['resolves']} resolves / {d['hits']} hits "
+              f"/ {d['evictions']} evictions; resident "
+              f"{d['resident_bytes']} B (high water "
+              f"{d['resident_high_water']} B), cold tier "
+              f"{d['cold_bytes']} B for {d['models']} models "
+              f"({d['fp32_bytes'] / max(d['cold_bytes'], 1):.1f}x vs "
+              "fp32)")
     # validate whatever completed for the primary model row-by-row (under
     # --inject-fault/--max-queued some rows may be typed rejections).
     done = {i: s for m, i, s in served if m == cfg.name}
@@ -309,11 +342,30 @@ def main(argv=None):
                     help="with --engine --async: wrap every plan in a "
                          "FaultInjector failing launches at RATE to "
                          "exercise the retry/fallback/quarantine ladder")
+    ap.add_argument("--max-hot-models", type=int, default=None,
+                    metavar="N",
+                    help="with --engine --async: register models by "
+                         "compressed pack through a serving.PackCache "
+                         "and keep at most N resolved plans resident "
+                         "(LRU; evicted models re-resolve on next "
+                         "traffic, bit-identically)")
+    ap.add_argument("--hot-bytes", type=int, default=None, metavar="BYTES",
+                    help="with --engine --async: byte budget for the "
+                         "pack cache's resident decoded plans (combines "
+                         "with --max-hot-models)")
     args = ap.parse_args(argv)
     if (args.tier or args.max_delay or args.max_queued is not None
             or args.inject_fault) and not args.async_frontend:
         raise SystemExit("--tier/--max-delay/--max-queued/--inject-fault "
                          "apply to the async frontend: add --engine --async")
+    if (args.max_hot_models is not None or args.hot_bytes is not None):
+        if not args.async_frontend:
+            raise SystemExit("--max-hot-models/--hot-bytes apply to the "
+                             "async frontend: add --engine --async")
+        if args.inject_fault > 0:
+            raise SystemExit("--inject-fault registers wrapped plans "
+                             "directly; it cannot combine with the pack "
+                             "cache flags")
     if args.multi and not (args.engine and args.async_frontend):
         raise SystemExit("--multi requires --engine --async")
     if args.async_frontend and not args.engine:

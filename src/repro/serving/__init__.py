@@ -28,15 +28,26 @@
   lives in ``runtime.fault`` (:class:`FaultInjector`) and is re-exported
   here.
 
+* :mod:`pack_cache` — the two-tier model store for many-model fleets:
+  cold packs stay in their entropy-coded :class:`ColdPack` form
+  (``core.formats`` codecs), are decoded + calibrated + plan-resolved
+  lazily on first traffic, and resolved plans live in an LRU hot tier
+  (``max_hot`` / ``hot_bytes`` budgets) with eviction back to compressed
+  form — bit-identical across an evict/reload cycle.
+
 Every serving entry point (``models.mlp.mlp_serve*``, ``launch.serve``,
 the benchmarks, the examples) flows through this package instead of
 threading mode keywords down to the kernels.
 """
 from ..runtime.fault import FaultInjector, InjectedFault      # noqa: F401
 from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
-                    build_plan, calibrate_act_scales, get_plan)
+                    adopt_plan, build_plan, calibrate_act_scales,
+                    forget_plan, get_plan)
 from .slo import (TIERS, AdmissionController, Rejected,       # noqa: F401
                   SLOTier, resolve_tier)
 from .batcher import Completion, MicroBatcher, replay         # noqa: F401
+from .pack_cache import (CachedPlan, ColdPack, PackCache,     # noqa: F401
+                         compress_pack, decode_pack,
+                         plan_resident_bytes)
 from .frontend import (ModelRegistry, RetryPolicy, Served,    # noqa: F401
                        ServingFrontend)

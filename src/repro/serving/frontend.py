@@ -111,8 +111,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .batcher import MicroBatcher
-from .plans import ExecutionPlan
-from .slo import REJECT_QUARANTINED, Rejected, resolve_tier
+from .pack_cache import CachedPlan, ColdPack, PackCache
+from .plans import ExecutionPlan, forget_plan
+from .slo import (REJECT_QUARANTINED, REJECT_UNREGISTERED, Rejected,
+                  resolve_tier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,8 +160,10 @@ class ModelRegistry:
     hold every output a long-running server ever produced — pass
     ``keep_results=True`` only for a batcher you drive yourself."""
 
-    def __init__(self, *, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, *, clock: Callable[[], float] = time.monotonic,
+                 cache: Optional[PackCache] = None):
         self.clock = clock
+        self.cache = cache
         self._lock = threading.Lock()
         self._plans: Dict[str, ExecutionPlan] = {}
         self._batchers: Dict[str, MicroBatcher] = {}
@@ -194,6 +198,52 @@ class ModelRegistry:
             self._plans[model_id] = plan
             self._batchers[model_id] = batcher
         return batcher
+
+    def register_pack(self, model_id: str,
+                      pack: "dict | ColdPack", *,
+                      plan_kwargs: Optional[dict] = None,
+                      **reg_kwargs) -> MicroBatcher:
+        """Register a model by its *pack* (frozen serving pack or cold
+        :class:`~.pack_cache.ColdPack`) through the registry's
+        :class:`~.pack_cache.PackCache`: the model stays compressed until
+        first traffic, and its resolved plan lives under the cache's LRU
+        budget.  A registry built without a cache gets an unbounded one
+        on first use.  ``plan_kwargs`` go to the plan resolve
+        (``act_dtype=...``, ``max_bucket=...``); the remaining kwargs are
+        :meth:`register`'s (tier, max_delay, ...)."""
+        with self._lock:
+            if self.cache is None:
+                self.cache = PackCache()
+        proxy = self.cache.add(model_id, pack, plan_kwargs=plan_kwargs)
+        try:
+            return self.register(model_id, proxy, **reg_kwargs)
+        except BaseException:
+            self.cache.remove(model_id)
+            raise
+
+    def unregister(self, model_id: str) -> List:
+        """Remove a model (lifecycle bugfix: there was no way to retire
+        one — its plan, decoded operands, and jitted entries leaked for
+        the process lifetime).  Drops the queue and returns the dropped
+        pending requests so the caller can resolve their futures with a
+        typed cause (:meth:`ServingFrontend.unregister` does); releases
+        every plan-side cache — the pack cache's tiers for cache-managed
+        plans, the plan/operand memos for direct ones.  Raises
+        ``KeyError`` for an unknown model."""
+        with self._lock:
+            if model_id not in self._batchers:
+                raise KeyError(f"model {model_id!r} not registered; have "
+                               f"{sorted(self._batchers)}")
+            plan = self._plans.pop(model_id)
+            batcher = self._batchers.pop(model_id)
+        dropped = batcher.drop_all()
+        if isinstance(plan, CachedPlan):
+            plan.cache.remove(model_id)
+        else:
+            pack = getattr(plan, "pack", None)
+            if isinstance(pack, dict):
+                forget_plan(pack)
+        return dropped
 
     def plan(self, model_id: str) -> ExecutionPlan:
         with self._lock:
@@ -235,9 +285,10 @@ class ServingFrontend:
 
     def __init__(self, registry: Optional[ModelRegistry] = None, *,
                  clock: Callable[[], float] = time.monotonic,
-                 retry_policy: Optional[RetryPolicy] = RetryPolicy()):
+                 retry_policy: Optional[RetryPolicy] = RetryPolicy(),
+                 cache: Optional[PackCache] = None):
         self.registry = registry if registry is not None \
-            else ModelRegistry(clock=clock)
+            else ModelRegistry(clock=clock, cache=cache)
         self.clock = self.registry.clock
         self.retry_policy = retry_policy
         self._cond = threading.Condition()
@@ -325,8 +376,46 @@ class ServingFrontend:
                                          service_times=service_times)
         self._model_stats(model_id)
         with self._cond:
+            # a fresh registration under a quarantined id is a new model
+            # (the old one was unregistered): it serves, not auto-rejects
+            self._quarantined.discard(model_id)
             self._cond.notify_all()
         return batcher
+
+    def register_pack(self, model_id: str, pack, *,
+                      plan_kwargs: Optional[dict] = None,
+                      **reg_kwargs) -> MicroBatcher:
+        """Compressed-tier registration (see
+        :meth:`ModelRegistry.register_pack`): the model stays in its
+        entropy-coded cold form until first traffic."""
+        batcher = self.registry.register_pack(
+            model_id, pack, plan_kwargs=plan_kwargs, **reg_kwargs)
+        self._model_stats(model_id)
+        with self._cond:
+            self._quarantined.discard(model_id)
+            self._cond.notify_all()
+        return batcher
+
+    def unregister(self, model_id: str, *,
+                   cause: Optional[BaseException] = None) -> None:
+        """Retire a model: its queue is dropped, every outstanding future
+        resolves promptly with a typed cause (default
+        ``Rejected("unregistered")``), and every plan-side cache —
+        registry entry, pack-cache tiers, plan/operand memos — is
+        released.  New submits raise ``KeyError`` (unknown model).
+        Raises ``KeyError`` if the model was never registered."""
+        if cause is None:
+            cause = Rejected(REJECT_UNREGISTERED,
+                             "model was unregistered while the request "
+                             "was outstanding", model_id=model_id)
+        self.registry.unregister(model_id)
+        with self._cond:
+            self._fail_streak.pop(model_id, None)
+            for key in [k for k in self._futures if k[0] == model_id]:
+                fut = self._futures.pop(key)
+                if not fut.cancelled():
+                    fut.set_exception(cause)
+            self._cond.notify_all()
 
     def submit(self, model_id: str, x) -> concurrent.futures.Future:
         """Queue one request from any thread; resolves to a
@@ -338,15 +427,19 @@ class ServingFrontend:
         that ``await``/``result()`` uniformly see every outcome.  Invalid
         requests (bad shape, unknown model) still raise synchronously:
         those are caller bugs, not load conditions."""
-        batcher = self.registry.batcher(model_id)
         fut: concurrent.futures.Future = concurrent.futures.Future()
         with self._cond:
             if self._error is not None:
                 raise RuntimeError(
                     "frontend dispatch thread died") from self._error
-            if not self._running:
-                raise RuntimeError("frontend is not running (use "
-                                   "`with frontend:` or call start())")
+            # quarantine check precedes the registry lookup: a
+            # quarantined model is *unregistered* (lifecycle fix) yet
+            # must keep rejecting with the typed reason, not "unknown
+            # model"; doing the lookup under the lock also means a
+            # racing unregister either sees this request in the queue
+            # (and fails its future with the typed cause) or this
+            # submit sees the model already gone (KeyError) — a future
+            # can never be left dangling between the two.
             if model_id in self._quarantined:
                 self.stats["rejected"] += 1
                 self._model_stats(model_id)["rejected"] += 1
@@ -355,6 +448,10 @@ class ServingFrontend:
                     "model is quarantined after repeated launch failures",
                     model_id=model_id))
                 return fut
+            batcher = self.registry.batcher(model_id)
+            if not self._running:
+                raise RuntimeError("frontend is not running (use "
+                                   "`with frontend:` or call start())")
             try:
                 rid = batcher.submit(x, now=self.clock())
             except Rejected as rej:
@@ -434,13 +531,21 @@ class ServingFrontend:
     def _quarantine(self, model_id: str, batcher: MicroBatcher,
                     exc: BaseException) -> None:
         """Isolate one model: root cause to its outstanding futures, its
-        queue dropped, new submits rejected — other models keep serving."""
-        batcher.drop_all()
+        queue dropped, new submits rejected — other models keep serving.
+        The model is fully *unregistered* (lifecycle fix: its plan,
+        decoded operands and jitted entries used to stay resident for
+        the process lifetime); the quarantine flag is marked first so a
+        racing submit sees the typed rejection, never "unknown model"."""
         with self._cond:
             self._quarantined.add(model_id)
             self._model_stats(model_id)["quarantined"] = True
             if model_id not in self.stats["quarantined"]:
                 self.stats["quarantined"].append(model_id)
+        try:
+            self.registry.unregister(model_id)
+        except KeyError:
+            batcher.drop_all()     # already retired elsewhere: just drain
+        with self._cond:
             for key in [k for k in self._futures if k[0] == model_id]:
                 fut = self._futures.pop(key)
                 if not fut.cancelled():

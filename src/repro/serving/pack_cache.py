@@ -1,0 +1,543 @@
+"""Two-tier packed-weight model store: compressed cold tier, LRU hot tier.
+
+The paper's premise is that a 4bit-compact MLP is tiny *at rest* and only
+expanded at execution time — but until this module the serving registry
+kept every model's resolved :class:`~.plans.ExecutionPlan` (decoded
+operands, calibration, jitted entries) resident forever, so a fleet of
+compact models cost as much as a fleet of dense ones.  The cache restores
+the paper's storage story at fleet scale:
+
+* **cold tier** — every registered model lives in its entropy-coded
+  :class:`~repro.core.formats.CompressedTensor` form (``dense4`` /
+  ``bitmask`` / ``csr`` / ``huffman``, chosen per layer by
+  ``select_format_ext``) plus the fp32 §V epilogue constants.  This is
+  the at-rest format: a few % of the decoded plan's footprint for the
+  paper stacks.
+* **hot tier** — an LRU of resolved plans under a configurable budget
+  (``max_hot`` entries and/or ``hot_bytes`` decoded bytes).  A model is
+  decoded, calibrated, and plan-resolved **lazily on first traffic**;
+  eviction releases the plan, its pinned ``plans._PLAN_MEMO`` entry and
+  the kernel-level operand memos (``ops.forget_pack_operands``) — the
+  model silently falls back to its compressed form and the next request
+  re-resolves it.
+
+**Bit-identity across evict/reload** holds by construction: the codecs
+are lossless, plan resolution is deterministic for a given backend, and
+the int8 activation scales measured at the *first* resolve are captured
+as the model's calibration — a re-resolve reuses them instead of
+re-measuring, so an evict→reload cycle returns the exact same bytes
+(``tests/test_pack_cache.py`` pins this on the int8 grid).
+
+Count-budget eviction runs **before** the new resolve, so the hot tier's
+high-water mark never exceeds ``max_hot`` plans; the byte budget is
+enforced after (the new plan's size is unknowable until decode) and
+always spares the entry being returned.
+
+:class:`CachedPlan` is the registry-facing face: a lazy proxy that
+exposes the static plan surface (``d_in``/``d_out``/``bucket_sizes``)
+without decoding, and resolves through the cache on first use of an
+execution attribute (``bucket_for``/``entry``/``run``).  A
+``MicroBatcher`` built on one never notices eviction: an in-flight
+launch holds a strong reference to the real plan, and the next launch
+transparently re-resolves.  (Plan-local degradation state —
+``demote_bucket`` poisonings — does not survive eviction; a re-resolve
+rebinds every bucket fresh.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitplanes, formats
+from .plans import (DEFAULT_MAX_BUCKET, ExecutionPlan, _pow2_buckets,
+                    adopt_plan, build_plan, forget_plan)
+
+__all__ = [
+    "ColdLayer", "ColdPack", "CachedPlan", "PackCache",
+    "compress_pack", "decode_pack", "plan_resident_bytes",
+    "cold_pack_to_payload", "cold_pack_from_payload",
+]
+
+
+def _nbytes(a) -> int:
+    a = np.asarray(a)
+    return int(a.size) * a.dtype.itemsize
+
+
+# --------------------------------------------------------------- cold form
+
+@dataclasses.dataclass(frozen=True)
+class ColdLayer:
+    """One layer at rest: entropy-coded 4-bit codes + fp32 epilogue."""
+    codes: formats.CompressedTensor     # (k, n) uint8 codes, compressed
+    omega: np.ndarray                   # (4,) centroid basis
+    alpha1: np.ndarray                  # (n,) §V scale
+    bias: np.ndarray                    # (n,) folded bias
+    alpha2: np.ndarray                  # scalar §V rescale
+    shape: Tuple[int, int]              # (k, n) true shape (pre-padding)
+    activation: Optional[str]           # "relu" | None
+
+    @property
+    def size_bytes(self) -> int:
+        """At-rest footprint: compressed codes + epilogue constants."""
+        return (self.codes.size_bytes + _nbytes(self.omega)
+                + _nbytes(self.alpha1) + _nbytes(self.bias)
+                + _nbytes(self.alpha2))
+
+    @property
+    def fp32_bytes(self) -> int:
+        """The dense fp32 weight this layer replaces (paper CR basis)."""
+        k, n = self.shape
+        return (4 * k * n + _nbytes(self.omega) + _nbytes(self.alpha1)
+                + _nbytes(self.bias) + _nbytes(self.alpha2))
+
+
+@dataclasses.dataclass(frozen=True)
+class ColdPack:
+    """A frozen pack in its at-rest form — what the cold tier stores and
+    what :func:`repro.checkpoint.manager.export_pack` serializes."""
+    layers: Tuple[ColdLayer, ...]
+    act_bits: Optional[int] = None
+
+    @property
+    def shapes(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple(l.shape for l in self.layers)
+
+    @property
+    def d_in(self) -> int:
+        return self.layers[0].shape[0]
+
+    @property
+    def d_out(self) -> int:
+        return self.layers[-1].shape[1]
+
+    @property
+    def size_bytes(self) -> int:
+        return sum(l.size_bytes for l in self.layers)
+
+    @property
+    def fp32_bytes(self) -> int:
+        return sum(l.fp32_bytes for l in self.layers)
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.fp32_bytes / max(self.size_bytes, 1)
+
+
+def compress_pack(pack: dict) -> ColdPack:
+    """Frozen serving pack (``models.mlp.freeze_mlp``) → at-rest form.
+
+    Codes are recovered from the kernel's row-pair nibble layout, the
+    odd-``k`` zero padding row is stripped (``shape`` keeps the true
+    ``k``), and each layer picks its best format over the extended set
+    (including huffman).  Lossless: :func:`decode_pack` rebuilds a pack
+    whose plan output is bit-identical to the original's."""
+    layers = []
+    for layer in pack["layers"]:
+        k, n = (int(d) for d in layer["shape"])
+        codes = np.asarray(bitplanes.unpack_codes_rows(layer["packed"]),
+                           np.uint8)[:k]
+        ct = formats.encode(codes, formats.select_format_ext(codes))
+        layers.append(ColdLayer(
+            codes=ct,
+            omega=np.asarray(layer["omega"], np.float32),
+            alpha1=np.asarray(layer["alpha1"], np.float32),
+            bias=np.asarray(layer["bias"], np.float32),
+            alpha2=np.asarray(layer["alpha2"], np.float32),
+            shape=(k, n),
+            activation=layer.get("activation")))
+    return ColdPack(layers=tuple(layers), act_bits=pack.get("act_bits"))
+
+
+def decode_pack(cold: ColdPack) -> dict:
+    """At-rest form → frozen serving pack (``freeze_mlp`` layout: kernel
+    row-pair packing, odd-``k`` zero pad, compression metadata kept so
+    ``models.mlp.pack_compression_summary`` still reads it)."""
+    layers = []
+    for cl in cold.layers:
+        k, n = cl.shape
+        codes = formats.decode(cl.codes).astype(np.uint8).reshape(k, n)
+        full = codes
+        if k % 2:
+            full = np.concatenate([codes, np.zeros((1, n), np.uint8)],
+                                  axis=0)
+        layers.append({
+            "packed": bitplanes.pack_codes_rows(jnp.asarray(full)),
+            "omega": jnp.asarray(cl.omega, jnp.float32),
+            "alpha1": jnp.asarray(cl.alpha1, jnp.float32),
+            "bias": jnp.asarray(cl.bias, jnp.float32),
+            "alpha2": jnp.asarray(cl.alpha2, jnp.float32),
+            "shape": (k, n),
+            "activation": cl.activation,
+            "format": cl.codes.format,
+            "size_bytes": cl.codes.size_bytes,
+            "dense_bytes": k * n * 4,
+        })
+    pack = {"layers": layers}
+    if cold.act_bits is not None:
+        pack["act_bits"] = cold.act_bits
+    return pack
+
+
+# ------------------------------------------------- npz payload (de)serial
+
+_SEP = "//"
+
+
+def cold_pack_to_payload(cold: ColdPack, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a :class:`ColdPack` into an ``np.savez``-able dict.  Keys
+    are ``{prefix}layer{i}//field`` with the compressed payload nested a
+    level deeper (``...//codes//{payload key}``)."""
+    out: Dict[str, np.ndarray] = {
+        prefix + "num_layers": np.int64(len(cold.layers)),
+        prefix + "act_bits": np.int64(-1 if cold.act_bits is None
+                                      else cold.act_bits),
+    }
+    for i, cl in enumerate(cold.layers):
+        p = f"{prefix}layer{i}{_SEP}"
+        out[p + "format"] = np.array(cl.codes.format)
+        out[p + "shape"] = np.asarray(cl.shape, np.int64)
+        out[p + "activation"] = np.array(cl.activation or "")
+        out[p + "omega"] = np.asarray(cl.omega, np.float32)
+        out[p + "alpha1"] = np.asarray(cl.alpha1, np.float32)
+        out[p + "bias"] = np.asarray(cl.bias, np.float32)
+        out[p + "alpha2"] = np.asarray(cl.alpha2, np.float32)
+        for key, arr in cl.codes.payload.items():
+            out[f"{p}codes{_SEP}{key}"] = np.asarray(arr)
+    return out
+
+
+def cold_pack_from_payload(payload: Dict[str, np.ndarray],
+                           prefix: str = "") -> ColdPack:
+    """Inverse of :func:`cold_pack_to_payload` (accepts a live dict or a
+    loaded ``NpzFile``)."""
+    n_layers = int(np.asarray(payload[prefix + "num_layers"]))
+    act_bits = int(np.asarray(payload[prefix + "act_bits"]))
+    layers = []
+    for i in range(n_layers):
+        p = f"{prefix}layer{i}{_SEP}"
+        fmt = str(np.asarray(payload[p + "format"]))
+        shape = tuple(int(d) for d in np.asarray(payload[p + "shape"]))
+        act = str(np.asarray(payload[p + "activation"])) or None
+        codes_prefix = f"{p}codes{_SEP}"
+        ct_payload = {key[len(codes_prefix):]: np.asarray(payload[key])
+                      for key in payload
+                      if key.startswith(codes_prefix)}
+        layers.append(ColdLayer(
+            codes=formats.CompressedTensor(fmt, shape, ct_payload),
+            omega=np.asarray(payload[p + "omega"], np.float32),
+            alpha1=np.asarray(payload[p + "alpha1"], np.float32),
+            bias=np.asarray(payload[p + "bias"], np.float32),
+            alpha2=np.asarray(payload[p + "alpha2"], np.float32),
+            shape=shape, activation=act))
+    return ColdPack(layers=tuple(layers),
+                    act_bits=None if act_bits < 0 else act_bits)
+
+
+# ----------------------------------------------------------- hot-tier cost
+
+def plan_resident_bytes(plan: ExecutionPlan) -> int:
+    """Decoded footprint of a resolved plan's operands (the hot-tier
+    accounting unit): per-layer packed codes + epilogue constants, plus
+    the calibration vector.  Jitted executables and memoized kernel
+    operands scale with this, so it is the byte knob ``hot_bytes``
+    budgets against."""
+    total = 0
+    for layer in plan.layers:
+        for key in ("packed", "omega", "alpha1", "bias", "alpha2"):
+            total += _nbytes(layer[key])
+    if plan.act_scales is not None:
+        total += 4 * len(plan.act_scales)
+    return total
+
+
+# ----------------------------------------------------------------- proxy
+
+class CachedPlan:
+    """Lazy plan handle: static surface without decoding, execution
+    surface resolved through the owning :class:`PackCache` per call.
+    Safe to hold across evictions — every execution attribute re-resolves
+    (LRU hit when hot, decode+rebuild when cold)."""
+
+    def __init__(self, cache: "PackCache", model_id: str, *,
+                 d_in: int, d_out: int,
+                 bucket_sizes: Tuple[int, ...]):
+        self.cache = cache
+        self.model_id = model_id
+        self.d_in = d_in
+        self.d_out = d_out
+        # static estimate (pow2 up to the configured max_bucket): the
+        # resolved plan's top bucket can be smaller (tuned block_m cap),
+        # in which case bucket_for() returns None for the outsized
+        # coalesce and run() serves it on the oversize binding — correct,
+        # just not pre-compiled.
+        self.bucket_sizes = bucket_sizes
+
+    def resolve(self) -> ExecutionPlan:
+        """The real plan — hot-tier hit or lazy decode+rebuild."""
+        return self.cache.plan(self.model_id)
+
+    @property
+    def resident(self) -> bool:
+        return self.cache.has_hot(self.model_id)
+
+    # execution surface (everything MicroBatcher / the degradation ladder
+    # touches) — each call goes through the cache so eviction is invisible
+    def bucket_for(self, m: int) -> Optional[int]:
+        return self.resolve().bucket_for(m)
+
+    def entry(self, bucket: int):
+        return self.resolve().entry(bucket)
+
+    def run(self, x):
+        return self.resolve().run(x)
+
+    def warmup(self, buckets=None) -> None:
+        self.resolve().warmup(buckets)
+
+    def demote_bucket(self, rows: int, **kwargs):
+        return self.resolve().demote_bucket(rows, **kwargs)
+
+    @property
+    def buckets(self):
+        return self.resolve().buckets
+
+    @property
+    def act_scales(self):
+        return self.resolve().act_scales
+
+    @property
+    def act_dtype(self):
+        return self.resolve().act_dtype
+
+    @property
+    def pack(self) -> dict:
+        return self.resolve().pack
+
+    @property
+    def layers(self):
+        return self.resolve().layers
+
+    def describe(self) -> dict:
+        d = {"model_id": self.model_id, "cached": True,
+             "resident": self.resident}
+        if self.resident:
+            d.update(self.resolve().describe())
+        return d
+
+
+# ----------------------------------------------------------------- cache
+
+class PackCache:
+    """The two-tier store (module docstring has the design contract).
+
+    ``max_hot`` bounds resident plan *count* (evicted before a new
+    resolve, so the high-water mark never exceeds it); ``hot_bytes``
+    bounds resident decoded *bytes* (enforced post-resolve, sparing the
+    entry being returned).  ``None`` disables a bound.  ``plan_kwargs``
+    are defaults for every resolve (per-model kwargs at :meth:`add`
+    override them).  Thread-safe; resolution runs under the lock, so two
+    racing requests for the same cold model decode it once."""
+
+    def __init__(self, max_hot: Optional[int] = None,
+                 hot_bytes: Optional[int] = None, *,
+                 plan_kwargs: Optional[dict] = None):
+        if max_hot is not None and max_hot < 1:
+            raise ValueError(f"max_hot must be >= 1, got {max_hot}")
+        self.max_hot = max_hot
+        self.hot_bytes = hot_bytes
+        self.default_plan_kwargs = dict(plan_kwargs or {})
+        self._lock = threading.RLock()
+        self._cold: Dict[str, ColdPack] = {}
+        self._plan_kwargs: Dict[str, dict] = {}
+        self._calib: Dict[str, dict] = {}
+        self._hot: "OrderedDict[str, ExecutionPlan]" = OrderedDict()
+        self._bytes: Dict[str, int] = {}
+        self.stats = {"resolves": 0, "hits": 0, "evictions": 0,
+                      "updates": 0, "decode_s": 0.0,
+                      "resident_bytes": 0, "resident_high_water": 0,
+                      "cold_start_s": []}
+
+    # ------------------------------------------------------------ intake
+
+    def add(self, model_id: str, pack: Union[dict, ColdPack], *,
+            plan_kwargs: Optional[dict] = None) -> CachedPlan:
+        """Register a model by pack — a frozen serving pack (compressed
+        here) or an already-cold :class:`ColdPack` (e.g. from
+        ``checkpoint.manager.load_pack``).  Nothing is decoded until
+        first traffic; the returned :class:`CachedPlan` is what goes into
+        a ``ModelRegistry``."""
+        cold = pack if isinstance(pack, ColdPack) else compress_pack(pack)
+        kwargs = {**self.default_plan_kwargs, **(plan_kwargs or {})}
+        # a caller-provided calib seeds the per-model calibration the
+        # cache otherwise captures at first resolve (same storage, same
+        # bit-identity guarantee)
+        calib = kwargs.pop("calib", None)
+        with self._lock:
+            if model_id in self._cold:
+                raise ValueError(f"model {model_id!r} already cached")
+            self._cold[model_id] = cold
+            self._plan_kwargs[model_id] = kwargs
+            if calib is not None:
+                self._calib[model_id] = calib
+        max_bucket = kwargs.get("max_bucket", DEFAULT_MAX_BUCKET)
+        return CachedPlan(self, model_id, d_in=cold.d_in,
+                          d_out=cold.d_out,
+                          bucket_sizes=_pow2_buckets(max(max_bucket, 1)))
+
+    def update(self, model_id: str, pack: Union[dict, ColdPack]) -> None:
+        """Hot-swap a model's weights (pack update): the cold form is
+        replaced, the stale hot plan (if any) is evicted, and the stored
+        calibration is dropped — the *next* request resolves the new
+        weights.  Existing :class:`CachedPlan` handles (and the batchers
+        holding them) keep working; queued requests are never dropped,
+        they just execute on the new plan."""
+        cold = pack if isinstance(pack, ColdPack) else compress_pack(pack)
+        with self._lock:
+            if model_id not in self._cold:
+                raise KeyError(f"model {model_id!r} not cached")
+            self._cold[model_id] = cold
+            self._calib.pop(model_id, None)
+            self._evict_locked(model_id)
+            self.stats["updates"] += 1
+
+    def remove(self, model_id: str) -> None:
+        """Forget a model entirely (both tiers).  Idempotent."""
+        with self._lock:
+            self._evict_locked(model_id)
+            self._cold.pop(model_id, None)
+            self._plan_kwargs.pop(model_id, None)
+            self._calib.pop(model_id, None)
+
+    # ----------------------------------------------------------- serving
+
+    def plan(self, model_id: str) -> ExecutionPlan:
+        """The resolved plan: LRU hit, or lazy decode + calibrate +
+        resolve (count budget enforced *before* the resolve)."""
+        with self._lock:
+            hit = self._hot.get(model_id)
+            if hit is not None:
+                self._hot.move_to_end(model_id)
+                self.stats["hits"] += 1
+                return hit
+            try:
+                cold = self._cold[model_id]
+            except KeyError:
+                raise KeyError(
+                    f"model {model_id!r} not cached; have "
+                    f"{sorted(self._cold)}") from None
+            while self.max_hot is not None and len(self._hot) >= self.max_hot:
+                self._evict_locked(next(iter(self._hot)))
+            t0 = time.perf_counter()
+            kwargs = self._plan_kwargs.get(model_id, {})
+            plan = build_plan(decode_pack(cold),
+                              calib=self._calib.get(model_id), **kwargs)
+            dt = time.perf_counter() - t0
+            # first int8 resolve measures the activation scales; keep them
+            # so every re-resolve is calibration-free AND bit-identical
+            if model_id not in self._calib and plan.act_scales is not None:
+                self._calib[model_id] = {
+                    "act_scales": [float(s) for s in plan.act_scales]}
+            # pin into the compat-path plan memo so get_plan on this pack
+            # never re-resolves a duplicate; unhashable kwargs (calib_x
+            # arrays) can't be part of a memo key and are left out — the
+            # adopted entry still answers the plain-kwargs lookup
+            adopt_plan(plan.pack, plan,
+                       **{k: v for k, v in kwargs.items()
+                          if isinstance(v, (str, int, float, bool,
+                                            tuple, type(None)))})
+            self._hot[model_id] = plan
+            nbytes = plan_resident_bytes(plan)
+            self._bytes[model_id] = nbytes
+            self.stats["resolves"] += 1
+            self.stats["decode_s"] += dt
+            self.stats["cold_start_s"].append(dt)
+            self.stats["resident_bytes"] += nbytes
+            self.stats["resident_high_water"] = max(
+                self.stats["resident_high_water"],
+                self.stats["resident_bytes"])
+            while (self.hot_bytes is not None and len(self._hot) > 1
+                   and self.stats["resident_bytes"] > self.hot_bytes):
+                self._evict_locked(next(iter(self._hot)))
+            return plan
+
+    # ---------------------------------------------------------- eviction
+
+    def _evict_locked(self, model_id: str) -> bool:
+        plan = self._hot.pop(model_id, None)
+        if plan is None:
+            return False
+        self.stats["resident_bytes"] -= self._bytes.pop(model_id, 0)
+        self.stats["evictions"] += 1
+        # release the plan memo entry (pinned at adopt) and the decoded
+        # kernel operands — without this the "evicted" plan stays fully
+        # resident through module-global memos for the process lifetime
+        forget_plan(plan.pack)
+        return True
+
+    def evict(self, model_id: str) -> bool:
+        """Push one model back to the cold tier (no-op if not hot)."""
+        with self._lock:
+            return self._evict_locked(model_id)
+
+    def evict_all(self) -> int:
+        with self._lock:
+            return sum(self._evict_locked(m) for m in list(self._hot))
+
+    # ------------------------------------------------------- introspection
+
+    def has_hot(self, model_id: str) -> bool:
+        with self._lock:
+            return model_id in self._hot
+
+    def __contains__(self, model_id: str) -> bool:
+        with self._lock:
+            return model_id in self._cold
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._cold)
+
+    def ids(self) -> List[str]:
+        with self._lock:
+            return list(self._cold)
+
+    def hot_ids(self) -> List[str]:
+        """LRU → MRU order."""
+        with self._lock:
+            return list(self._hot)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self.stats["resident_bytes"]
+
+    @property
+    def cold_bytes(self) -> int:
+        with self._lock:
+            return sum(c.size_bytes for c in self._cold.values())
+
+    def describe(self) -> dict:
+        with self._lock:
+            return {
+                "models": len(self._cold),
+                "hot": list(self._hot),
+                "max_hot": self.max_hot,
+                "hot_bytes_budget": self.hot_bytes,
+                "resident_bytes": self.stats["resident_bytes"],
+                "resident_high_water": self.stats["resident_high_water"],
+                "cold_bytes": sum(c.size_bytes
+                                  for c in self._cold.values()),
+                "fp32_bytes": sum(c.fp32_bytes
+                                  for c in self._cold.values()),
+                "resolves": self.stats["resolves"],
+                "hits": self.stats["hits"],
+                "evictions": self.stats["evictions"],
+                "updates": self.stats["updates"],
+            }

@@ -645,6 +645,17 @@ def build_plan(pack: dict, **kwargs) -> ExecutionPlan:
 # (models.mlp compat wrappers, the launcher) must not re-resolve fits /
 # autotune / calibration per call.  Identity keying is safe because frozen
 # packs are never mutated in place (see repro.memo).
+#
+# Lifetime contract (the serving stack is keyed off the pack cache, this
+# memo is the *compat-wrapper* path): a plan the ``serving.pack_cache``
+# resolves is ADOPTED here pinned (``adopt_plan``), so a compat caller
+# hitting ``get_plan`` on the same pack+configuration gets the cache's
+# plan instead of silently re-resolving a duplicate (double device
+# memory, a cold re-jit on the request path — the pre-fix bug when the
+# memo's 32-entry insertion-order eviction dropped an entry a frontend
+# still served from).  Eviction/unregistration calls ``forget_plan``,
+# which releases the memo entries AND the kernel-level operand caches —
+# the memo can never outlive a cache-managed plan.
 _PLAN_MEMO = IdentityMemo()
 
 
@@ -657,3 +668,28 @@ def get_plan(pack: dict, *, calib: Optional[dict] = None,
     plan = ExecutionPlan(pack, calib=calib, **kwargs)
     _PLAN_MEMO.put((pack, calib), extra, plan)
     return plan
+
+
+def adopt_plan(pack: dict, plan: ExecutionPlan, *,
+               calib: Optional[dict] = None, **kwargs) -> None:
+    """Register an externally-managed (pack-cache) plan under the same
+    key ``get_plan(pack, calib=calib, **kwargs)`` would compute, pinned:
+    the memo's insertion-order eviction never drops it, so the compat
+    path can never resolve a duplicate beside it.  Release is explicit,
+    via :func:`forget_plan`."""
+    _PLAN_MEMO.put((pack, calib), tuple(sorted(kwargs.items())), plan,
+                   pin=True)
+
+
+def forget_plan(pack: dict) -> None:
+    """Release every plan-side cache entry keyed on ``pack``: the plan
+    memo entries (pinned or not) and the kernel-level folded-int8 /
+    weight-stationary operand memos keyed on the pack's layer list.
+    Called by the pack cache on eviction and by
+    ``ModelRegistry.unregister`` — without it a retired model's decoded
+    operands and jitted entries survive for the process lifetime even
+    though no frontend can reach them."""
+    _PLAN_MEMO.drop(pack)
+    layers = pack.get("layers") if isinstance(pack, dict) else None
+    if layers is not None:
+        kops.forget_pack_operands(layers)

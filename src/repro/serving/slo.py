@@ -41,6 +41,7 @@ from typing import Callable, Dict, Optional
 REJECT_QUEUE_FULL = "queue_full"        # bounded queue at capacity
 REJECT_DEADLINE = "deadline"            # cost model: SLO provably missed
 REJECT_QUARANTINED = "quarantined"      # model isolated after faults
+REJECT_UNREGISTERED = "unregistered"    # model removed while request queued
 
 
 class Rejected(RuntimeError):
@@ -49,8 +50,9 @@ class Rejected(RuntimeError):
     Admission control *resolves the future* with this exception — the
     caller always learns promptly, with a typed reason, instead of
     hanging until a timeout.  ``reason`` is one of ``REJECT_QUEUE_FULL``
-    / ``REJECT_DEADLINE`` / ``REJECT_QUARANTINED``; ``est_wait`` carries
-    the cost model's predicted wait for deadline sheds."""
+    / ``REJECT_DEADLINE`` / ``REJECT_QUARANTINED`` /
+    ``REJECT_UNREGISTERED``; ``est_wait`` carries the cost model's
+    predicted wait for deadline sheds."""
 
     def __init__(self, reason: str, detail: str = "", *,
                  model_id: Optional[str] = None,

@@ -89,3 +89,62 @@ def test_export_quantized_compresses(tmp_path):
     report = export_quantized(str(tmp_path / "exp"), params, qs, lam=0.05)
     assert report["compression_ratio"] > 7.0   # ~8x from 4bit + formats
     assert (tmp_path / "exp" / "export.npz").exists()
+
+
+def test_load_quantized_roundtrips_export(tmp_path):
+    """export_quantized used to be write-only (dead artifact); its loader
+    must recover exact codes + centroids and the unquantized leaves."""
+    from repro.checkpoint.manager import load_quantized
+    from repro.core import ecl
+
+    k = jax.random.PRNGKey(2)
+    w = jax.random.normal(k, (64, 32)) * 0.05
+    params = {"lin": qat.make_quant_param(w), "norm": jnp.ones((32,))}
+    qs = qat.build_qstate(params)
+    export_quantized(str(tmp_path / "exp"), params, qs, lam=0.05)
+    loaded = load_quantized(str(tmp_path / "exp"))
+    codes_ref = np.asarray(ecl.assign(params["lin"]["w"],
+                                      params["lin"]["omega"],
+                                      qs["lin"]["probs"], 0.05))
+    np.testing.assert_array_equal(loaded["lin"]["codes"], codes_ref)
+    np.testing.assert_array_equal(loaded["lin"]["omega"],
+                                  np.asarray(params["lin"]["omega"]))
+    np.testing.assert_array_equal(loaded["norm"], np.ones((32,)))
+
+
+def test_export_pack_cold_load_serve_bit_identical(tmp_path):
+    """The satellite's acceptance path: freeze → export_pack (at-rest
+    artifact) → load_pack → PackCache cold registration → serve must be
+    bit-identical to serving the in-memory frozen pack."""
+    from repro.checkpoint.manager import export_pack, load_pack
+    from repro.serving import PackCache, build_plan
+    from test_serving_plans import _rand_pack
+
+    pack = _rand_pack((16, 12, 4), seed=11)
+    path = str(tmp_path / "pack_art")
+    report = export_pack(path, pack, meta={"model_id": "m"})
+    assert report["compressed_bytes"] < report["fp32_bytes"]
+    assert os.path.exists(os.path.join(path, "pack.npz"))
+
+    cold = load_pack(path)
+    assert cold.shapes == tuple(tuple(l["shape"])
+                                for l in pack["layers"])
+    cache = PackCache(plan_kwargs={"act_dtype": "int8"})
+    proxy = cache.add("m", cold)
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    y_cold = np.asarray(proxy.run(x))
+    y_mem = np.asarray(build_plan(pack, act_dtype="int8").run(x))
+    np.testing.assert_array_equal(y_cold, y_mem)
+
+
+def test_export_pack_atomic_overwrite(tmp_path):
+    from repro.checkpoint.manager import export_pack, load_pack
+    from test_serving_plans import _rand_pack
+
+    path = str(tmp_path / "pack_art")
+    export_pack(path, _rand_pack((16, 12, 4), seed=1))
+    export_pack(path, _rand_pack((16, 8, 6), seed=2))   # overwrite in place
+    assert load_pack(path).shapes[-1][-1] == 6
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert leftovers == []

@@ -1,0 +1,74 @@
+"""Degenerate-input hardening for the cold tier's codecs (no hypothesis:
+these are the exact edges a many-model cold tier hits — pruned-to-zero
+layers, single-cluster layers, zero-width shards).
+
+Regression anchors (all crashed before this sweep):
+* ``_canonical_codes`` indexed ``order[0]`` with no symbols present, so
+  an empty tensor crashed both ``encode_huffman`` and ``decode_huffman``
+  with IndexError;
+* ``encode_csr`` reshaped a zero-size array with ``reshape(0, -1)``
+  (ValueError) and ``decode_csr`` divided by zero rows;
+* ``analytic_size_bits`` — and through it ``select_format`` /
+  ``encode_best`` — divided by zero on zero-row shapes."""
+import numpy as np
+import pytest
+
+from repro.core import formats
+
+EDGES = {
+    "empty": np.zeros((0, 0), np.uint8),
+    "empty_rows": np.zeros((0, 7), np.uint8),
+    "all_zero": np.zeros((6, 9), np.uint8),
+    "single_symbol": np.full((5, 8), 11, np.uint8),
+    "single_element": np.array([[3]], np.uint8),
+    "single_zero": np.zeros((1, 1), np.uint8),
+    "two_symbols": np.tile(np.array([[0, 15]], np.uint8), (4, 4)),
+}
+
+
+@pytest.mark.parametrize("fmt", formats.FORMATS_EXT)
+@pytest.mark.parametrize("name", sorted(EDGES))
+def test_every_format_roundtrips_degenerate_inputs(fmt, name):
+    codes = EDGES[name]
+    ct = formats.encode(codes, fmt)
+    assert ct.format == fmt
+    assert ct.size_bytes >= 0          # size_bytes must not crash either
+    out = formats.decode(ct)
+    assert out.dtype == np.uint8
+    np.testing.assert_array_equal(out.reshape(codes.shape), codes)
+
+
+@pytest.mark.parametrize("name", sorted(EDGES))
+def test_encode_best_and_ext_selection_roundtrip(name):
+    codes = EDGES[name]
+    best = formats.encode_best(codes)
+    np.testing.assert_array_equal(
+        formats.decode(best).reshape(codes.shape), codes)
+    fmt_ext = formats.select_format_ext(codes)
+    assert fmt_ext in formats.FORMATS_EXT
+    ct = formats.encode(codes, fmt_ext)
+    np.testing.assert_array_equal(
+        formats.decode(ct).reshape(codes.shape), codes)
+
+
+def test_huffman_single_symbol_uses_one_bit_codes():
+    """One distinct symbol still needs length-1 codes (zero-length codes
+    would make decode ambiguous); the payload must reflect that."""
+    codes = np.full((4, 4), 7, np.uint8)
+    ct = formats.encode_huffman(codes)
+    assert int(ct.payload["nbits"][0]) == codes.size
+    np.testing.assert_array_equal(formats.decode_huffman(ct), codes)
+
+
+def test_huffman_empty_has_no_bits():
+    ct = formats.encode_huffman(np.zeros((0, 3), np.uint8))
+    assert int(ct.payload["nbits"][0]) == 0
+    assert formats.decode_huffman(ct).size == 0
+
+
+def test_analytic_sizes_finite_on_edges():
+    for codes in EDGES.values():
+        nnz = int(np.count_nonzero(codes))
+        for fmt in formats.FORMATS:
+            assert formats.analytic_size_bits(codes.shape, nnz, fmt) >= 0
+        assert formats.analytic_size_bits_huffman(codes) >= 0

@@ -1,0 +1,246 @@
+"""PackCache: cold-tier roundtrip, lazy resolve, LRU budgets, evict →
+reload bit-identity, and the plan-memo coordination regression."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import pack_cache as pc
+from repro.serving.plans import _PLAN_MEMO, build_plan, get_plan
+from test_serving_plans import _rand_pack
+
+DIMS = (16, 12, 4)
+
+
+def _pack(seed=0, dims=DIMS):
+    return _rand_pack(dims, seed=seed)
+
+
+# ----------------------------------------------------------- cold form
+
+def test_compress_decode_roundtrip_is_exact():
+    pack = _pack()
+    cold = pc.compress_pack(pack)
+    assert cold.size_bytes < cold.fp32_bytes
+    assert cold.d_in == DIMS[0] and cold.d_out == DIMS[-1]
+    back = pc.decode_pack(cold)
+    assert len(back["layers"]) == len(pack["layers"])
+    for l1, l2 in zip(pack["layers"], back["layers"]):
+        np.testing.assert_array_equal(np.asarray(l1["packed"]),
+                                      np.asarray(l2["packed"]))
+        for key in ("omega", "alpha1", "bias", "alpha2"):
+            np.testing.assert_array_equal(np.asarray(l1[key]),
+                                          np.asarray(l2[key]))
+        assert tuple(l1["shape"]) == tuple(l2["shape"])
+        assert l1["activation"] == l2["activation"]
+
+
+def test_roundtrip_exact_with_odd_contraction_dim():
+    pack = _pack(dims=(33, 7, 5))     # odd k: pad row must strip/re-pad
+    back = pc.decode_pack(pc.compress_pack(pack))
+    for l1, l2 in zip(pack["layers"], back["layers"]):
+        np.testing.assert_array_equal(np.asarray(l1["packed"]),
+                                      np.asarray(l2["packed"]))
+
+
+def test_payload_serialization_roundtrip():
+    cold = pc.compress_pack(_pack(seed=5))
+    payload = pc.cold_pack_to_payload(cold)
+    back = pc.cold_pack_from_payload(payload)
+    assert back.shapes == cold.shapes
+    assert back.act_bits == cold.act_bits
+    for l1, l2 in zip(cold.layers, back.layers):
+        assert l1.codes.format == l2.codes.format
+        assert l1.activation == l2.activation
+        np.testing.assert_array_equal(pc.formats.decode(l1.codes),
+                                      pc.formats.decode(l2.codes))
+
+
+# ------------------------------------------------------------ laziness
+
+def test_add_is_lazy_and_first_traffic_resolves():
+    cache = pc.PackCache(max_hot=4)
+    proxy = cache.add("m", _pack())
+    assert not cache.has_hot("m")
+    assert cache.stats["resolves"] == 0
+    assert proxy.d_in == DIMS[0] and proxy.bucket_sizes  # static, no decode
+    assert not cache.has_hot("m")
+    x = np.ones((2, DIMS[0]), np.float32)
+    y = proxy.run(x)
+    assert cache.has_hot("m")
+    assert cache.stats["resolves"] == 1
+    ref = build_plan(_pack()).run(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_lru_count_budget_high_water_never_exceeded():
+    cache = pc.PackCache(max_hot=2)
+    x = np.ones((1, DIMS[0]), np.float32)
+    for i in range(5):
+        cache.add(f"m{i}", _pack(seed=i)).run(x)
+        assert len(cache.hot_ids()) <= 2
+    # evict-before-resolve: at no point were 3 plans resident, so the
+    # high-water mark equals the steady 2-plan footprint (identical dims
+    # ⇒ identical per-plan bytes)
+    assert cache.stats["evictions"] == 3
+    assert cache.stats["resident_high_water"] == \
+        cache.stats["resident_bytes"]
+    assert cache.hot_ids() == ["m3", "m4"]        # LRU → MRU
+
+
+def test_lru_touch_order_protects_hot_model():
+    cache = pc.PackCache(max_hot=2)
+    x = np.ones((1, DIMS[0]), np.float32)
+    a, b = cache.add("a", _pack(seed=1)), cache.add("b", _pack(seed=2))
+    a.run(x)
+    b.run(x)
+    a.run(x)                      # touch a: b becomes LRU
+    cache.add("c", _pack(seed=3)).run(x)
+    assert cache.has_hot("a") and cache.has_hot("c")
+    assert not cache.has_hot("b")
+
+
+def test_byte_budget_evicts_down():
+    cache = pc.PackCache()
+    x = np.ones((1, DIMS[0]), np.float32)
+    cache.add("a", _pack(seed=1)).run(x)
+    one_plan = cache.stats["resident_bytes"]
+    cache.hot_bytes = int(one_plan * 1.5)     # room for one, not two
+    cache.add("b", _pack(seed=2)).run(x)
+    assert cache.hot_ids() == ["b"]
+    assert cache.stats["resident_bytes"] <= cache.hot_bytes
+
+
+def test_evict_reload_bit_identical_int8():
+    """The acceptance-criteria parity: evict → reload on the int8 grid
+    returns the exact same bytes (lossless codecs + captured act_scales
+    + deterministic resolution)."""
+    cache = pc.PackCache(max_hot=1, plan_kwargs={"act_dtype": "int8"})
+    proxy = cache.add("m", _pack())
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(3, DIMS[0])).astype(np.float32)
+    y1 = np.asarray(proxy.run(x))
+    scales1 = list(proxy.act_scales)
+    assert cache.evict("m")
+    assert not cache.has_hot("m")
+    y2 = np.asarray(proxy.run(x))
+    np.testing.assert_array_equal(y1, y2)
+    assert list(proxy.act_scales) == scales1      # calib survived eviction
+
+
+def test_update_hot_swaps_without_breaking_handles():
+    cache = pc.PackCache()
+    proxy = cache.add("m", _pack(seed=1))
+    x = np.ones((2, DIMS[0]), np.float32)
+    y_old = np.asarray(proxy.run(x))
+    new_pack = _pack(seed=9)
+    cache.update("m", new_pack)
+    assert not cache.has_hot("m")                 # stale plan evicted
+    y_new = np.asarray(proxy.run(x))              # same handle, new weights
+    ref = np.asarray(build_plan(_pack(seed=9)).run(x))
+    np.testing.assert_allclose(y_new, ref, atol=1e-5, rtol=1e-5)
+    assert not np.array_equal(y_old, y_new)
+    assert cache.stats["updates"] == 1
+
+
+def test_unknown_model_raises_keyerror():
+    cache = pc.PackCache()
+    with pytest.raises(KeyError, match="nope"):
+        cache.plan("nope")
+    with pytest.raises(ValueError, match="max_hot"):
+        pc.PackCache(max_hot=0)
+    cache.add("m", _pack())
+    with pytest.raises(ValueError, match="already cached"):
+        cache.add("m", _pack())
+
+
+# ----------------------------------------------- plan-memo coordination
+
+def test_get_plan_returns_cache_managed_plan_not_duplicate():
+    """Regression (satellite 2): a compat-path get_plan on a
+    cache-managed pack must hit the adopted entry, not silently
+    re-resolve a duplicate beside it."""
+    cache = pc.PackCache()
+    proxy = cache.add("m", _pack())
+    plan = proxy.resolve()
+    assert get_plan(plan.pack) is plan
+
+
+def test_adopted_plan_survives_memo_churn_and_dies_on_evict():
+    """Pinned entries are exempt from the memo's insertion-order
+    eviction (the pre-fix bug: 32 unrelated get_plan calls dropped a
+    plan a frontend still served), and are released by cache eviction —
+    the memo can neither duplicate nor outlive a cache-managed plan."""
+    cache = pc.PackCache()
+    proxy = cache.add("m", _pack())
+    plan = proxy.resolve()
+    for i in range(_PLAN_MEMO.max_entries + 5):   # churn the memo hard
+        get_plan(_pack(seed=100 + i), mode="oracle")
+    assert get_plan(plan.pack) is plan            # pin held
+    cache.evict("m")
+    held = [key for key, (objs, _) in _PLAN_MEMO._entries.items()
+            if any(o is plan.pack for o in objs)]
+    assert held == []                             # released, not leaked
+    plan2 = proxy.resolve()                       # fresh resolve works
+    assert plan2 is not plan
+
+
+def test_forget_plan_releases_operand_memos():
+    from repro.kernels import ops as kops
+    cache = pc.PackCache(plan_kwargs={"act_dtype": "int8"})
+    proxy = cache.add("m", _pack())
+    x = np.ones((2, DIMS[0]), np.float32)
+    proxy.run(x)
+    plan = proxy.resolve()
+    layers = plan.layers
+    # the operand memos may or may not be populated depending on the
+    # resolved mode; the contract is that *after* eviction nothing keyed
+    # on this pack's layer list remains
+    cache.evict("m")
+    for memo in (kops._INT8_FOLD_MEMO, kops._WS_OPERAND_MEMO):
+        leaked = [key for key, (objs, _) in memo._entries.items()
+                  if any(o is layers for o in objs)]
+        assert leaked == []
+
+
+# --------------------------------------------------------- concurrency
+
+def test_racing_resolve_and_evict_never_fails():
+    """Requests racing eviction of the same model must either hit the
+    hot plan or re-resolve — never a KeyError or a wrong result."""
+    cache = pc.PackCache(max_hot=2)
+    proxies = [cache.add(f"m{i}", _pack(seed=i)) for i in range(4)]
+    x = np.ones((1, DIMS[0]), np.float32)
+    refs = [np.asarray(build_plan(_pack(seed=i)).run(x)) for i in range(4)]
+    errors = []
+    stop = threading.Event()
+
+    def hammer(i):
+        try:
+            while not stop.is_set():
+                y = np.asarray(proxies[i].run(x))
+                np.testing.assert_allclose(y, refs[i], atol=1e-5,
+                                           rtol=1e-5)
+        except Exception as exc:                   # noqa: BLE001
+            errors.append(exc)
+
+    def churner():
+        try:
+            while not stop.is_set():
+                for i in range(4):
+                    cache.evict(f"m{i}")
+        except Exception as exc:                   # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    threads.append(threading.Thread(target=churner))
+    for t in threads:
+        t.start()
+    stop_timer = threading.Timer(1.5, stop.set)
+    stop_timer.start()
+    for t in threads:
+        t.join(30.0)
+    stop_timer.cancel()
+    assert errors == []
+    assert cache.stats["evictions"] > 0           # the race actually ran

@@ -242,3 +242,130 @@ def test_close_drains_queued_requests():
     fe.close(drain=True)
     for f in futs:
         assert f.result(0.0).y.shape == (1, DIMS_A[-1])
+
+
+# ------------------------------------------------- lifecycle: unregister
+
+def test_unregister_fails_outstanding_futures_with_typed_cause():
+    """Satellite bugfix: a retired model's queued futures must resolve
+    promptly with Rejected("unregistered"), its registry entry must go
+    away (new submits are unknown-model KeyErrors), and other models
+    keep serving."""
+    fe = serving.ServingFrontend()
+    fe.register("m", _oracle_plan(DIMS_A), max_delay=30.0)  # sits queued
+    fe.register("other", _oracle_plan(DIMS_B, seed=3))
+    with fe:
+        futs = [fe.submit("m", np.zeros((1, 16), np.float32))
+                for _ in range(3)]
+        fe.unregister("m")
+        for f in futs:
+            with pytest.raises(serving.Rejected, match="unregistered"):
+                f.result(10.0)
+        assert "m" not in fe.registry
+        with pytest.raises(KeyError):
+            fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(KeyError):
+            fe.unregister("m")                    # idempotence is loud
+        s = fe.submit("other", np.zeros((1, 16), np.float32)).result(30.0)
+        assert s.model_id == "other"
+
+
+def test_unregister_releases_plan_memo_entries():
+    from repro.serving.plans import _PLAN_MEMO, get_plan
+
+    plan = _oracle_plan(DIMS_A)
+    get_plan(plan.pack)       # simulate a compat-path entry on this pack
+    fe = serving.ServingFrontend()
+    fe.register("m", plan)
+    fe.start()
+    fe.unregister("m")
+    fe.close()
+    held = [key for key, (objs, _) in _PLAN_MEMO._entries.items()
+            if any(o is plan.pack for o in objs)]
+    assert held == []
+
+
+def test_quarantine_unregisters_but_keeps_typed_rejection():
+    """Quarantine now retires the model through unregister() (no more
+    process-lifetime plan leak) while the submit contract is unchanged:
+    the typed 'quarantined' rejection, not 'unknown model'."""
+    fe = serving.ServingFrontend(
+        retry_policy=serving.RetryPolicy(max_retries=0, fallback=False))
+    fe.register("m", BoomPlan(_oracle_plan(DIMS_A)))
+    with fe:
+        fut = fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(ValueError, match="kernel exploded"):
+            fut.result(30.0)                      # root cause, not generic
+        assert "m" not in fe.registry             # actually retired
+        rej = fe.submit("m", np.zeros((1, 16), np.float32))
+        with pytest.raises(serving.Rejected, match="quarantined"):
+            rej.result(10.0)
+        # a fresh registration under the same id is a NEW model: it serves
+        fe.register("m", _oracle_plan(DIMS_A))
+        s = fe.submit("m", np.zeros((1, 16), np.float32)).result(30.0)
+        assert s.y.shape == (1, DIMS_A[-1])
+
+
+# ------------------------------------- pack-cache churn under the driver
+
+class _FakeClock:
+    """Deterministically auto-advancing clock: every read moves time
+    forward, so deadlines fire from clock *reads* instead of wall sleeps
+    — churn stress runs at CPU speed."""
+
+    def __init__(self, step=1e-3):
+        self._t = 0.0
+        self._step = step
+        self._lock = threading.Lock()
+
+    def __call__(self):
+        with self._lock:
+            self._t += self._step
+            return self._t
+
+
+def test_cache_churn_race_never_drops_requests():
+    """Eviction-correctness under concurrency (satellite 5): submits
+    racing eviction of the same models must either hit the hot plan or
+    trigger a re-resolve — never a dropped request, a KeyError, or a
+    wrong answer."""
+    n_models, n_reqs = 4, 48
+    cache = serving.PackCache(max_hot=2)
+    fe = serving.ServingFrontend(clock=_FakeClock(), cache=cache)
+    refs = {}
+    for i in range(n_models):
+        pack = _rand_pack(DIMS_A, seed=i)
+        fe.register_pack(f"m{i}", pack, plan_kwargs={"mode": "oracle"})
+        x_i = np.full((1, 16), float(i + 1), np.float32)
+        refs[f"m{i}"] = (x_i, np.asarray(
+            serving.build_plan(_rand_pack(DIMS_A, seed=i),
+                               mode="oracle").run(x_i)))
+    stop = threading.Event()
+    churn_errors = []
+
+    def churner():
+        try:
+            while not stop.is_set():
+                for i in range(n_models):
+                    cache.evict(f"m{i}")
+        except Exception as exc:                   # noqa: BLE001
+            churn_errors.append(exc)
+
+    t = threading.Thread(target=churner)
+    t.start()
+    try:
+        with fe:
+            futs = []
+            for r in range(n_reqs):
+                mid = f"m{r % n_models}"
+                futs.append((mid, fe.submit(mid, refs[mid][0])))
+            for mid, f in futs:
+                s = f.result(60.0)                # never dropped/hung
+                np.testing.assert_allclose(s.y, refs[mid][1],
+                                           atol=1e-5, rtol=1e-5)
+    finally:
+        stop.set()
+        t.join(30.0)
+    assert churn_errors == []
+    assert cache.stats["evictions"] > 0           # the race actually ran
+    assert cache.stats["resolves"] > n_models     # re-resolves happened
