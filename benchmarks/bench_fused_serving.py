@@ -218,6 +218,9 @@ def run(fast: bool = False):
         sched_rows.extend(schedule_table(cfg, pack, plan_fused,
                                          repeats=3 if fast else 7))
 
+    from benchmarks.common import topology
+    for r in rows + sched_rows:
+        r.update(topology())     # guard only compares matching topology
     payload = {"backend": jax.default_backend(), "batches": list(BATCHES),
                "rows": rows,
                "schedule_rows": sched_rows,

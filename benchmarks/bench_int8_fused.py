@@ -99,6 +99,9 @@ def run(fast: bool = False):
                   f"({row['int8_fused_speedup_vs_layer']:.2f}x vs layer)",
                   flush=True)
 
+    from benchmarks.common import topology
+    for r in rows:
+        r.update(topology())     # guard only compares matching topology
     summary = {
         "backend": jax.default_backend(),
         "batches": list(BATCHES),

@@ -154,6 +154,9 @@ def run(fast: bool = False) -> dict:
     assert budgeted["bit_identical_reload"], \
         "evict -> reload was not bit-identical on the int8 grid"
 
+    from benchmarks.common import topology
+    for r in rows:
+        r.update(topology())     # guard only compares matching topology
     payload = {"config": {"d_in": CFG.d_in, "features": list(CFG.features),
                           "models": N_MODELS, "zipf_s": ZIPF_S,
                           "requests": n_requests},

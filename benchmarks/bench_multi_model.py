@@ -174,6 +174,9 @@ def run(fast: bool = False):
               f" req/s vs best naive [{best_name}] {best_naive:8.1f} req/s "
               f"({row['aggregate_gain']:.2f}x)  {per}", flush=True)
 
+    from benchmarks.common import topology
+    for r in rows:
+        r.update(topology())     # guard only compares matching topology
     summary = {
         "backend": jax.default_backend(),
         "multi_model_loads": list(LOADS),   # serving_engine owns "loads"

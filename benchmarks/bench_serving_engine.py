@@ -135,6 +135,9 @@ def run(fast: bool = False):
                   f"{row['naive_latency_p95_ms']:7.2f} -> "
                   f"{row['engine_latency_p95_ms']:7.2f} ms", flush=True)
 
+    from benchmarks.common import topology
+    for r in rows:
+        r.update(topology())     # guard only compares matching topology
     summary = {
         "backend": jax.default_backend(),
         "loads": list(LOADS),

@@ -247,6 +247,9 @@ def run(fast: bool = False):
                   f"maxq={row['max_queued_rows_seen']}"
                   f"/{row['queue_bound_rows']}", flush=True)
 
+    from benchmarks.common import topology
+    for r in rows:
+        r.update(topology())     # guard only compares matching topology
     bounded = all(r["max_queued_rows_seen"] <= r["queue_bound_rows"]
                   for r in rows)
     summary = {

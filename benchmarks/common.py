@@ -25,6 +25,16 @@ def save(name: str, payload):
         json.dump(payload, f, indent=2, default=float)
 
 
+def topology() -> dict:
+    """The host execution topology every guarded bench row is tagged
+    with: the regression guard (scripts/check_bench_rows.py) only
+    compares a row against a snapshot taken on the SAME topology — a
+    1-device interpret number vs an 8-device one is a hardware change,
+    not a perf regression."""
+    return {"n_devices": int(jax.device_count()),
+            "backend": str(jax.default_backend())}
+
+
 def train_mlp(cfg_mlp: MLPConfig, *, lam: float, steps: int = 250,
               lr: float = 5e-3, seed: int = 0, lam_ramp: int = 60,
               quant: bool = True):

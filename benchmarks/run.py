@@ -31,6 +31,12 @@ model_churn           N compact packs behind the two-tier PackCache under
                       uncached engine, compression ratio, evict->reload
                       bit-identity; extends BENCH_fused_serving.json with
                       model_churn_rows
+multi_stream          scale-out serving: N replicated execution streams
+                      (deterministic multi-server replay) vs the
+                      single-stream engine at offered loads 1-10, plus
+                      bit-exactness legs for the threaded multi-stream
+                      frontend and the column-sharded plan; extends
+                      BENCH_fused_serving.json with multi_stream_rows
 """
 from __future__ import annotations
 
@@ -50,9 +56,9 @@ def main(argv=None):
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
                             bench_int8_fused, bench_model_churn,
-                            bench_multi_model, bench_pareto,
-                            bench_serving_engine, bench_serving_roofline,
-                            bench_slo_traces)
+                            bench_multi_model, bench_multi_stream,
+                            bench_pareto, bench_serving_engine,
+                            bench_serving_roofline, bench_slo_traces)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -65,7 +71,16 @@ def main(argv=None):
         "multi_model": lambda: bench_multi_model.run(fast=args.fast),
         "slo_traces": lambda: bench_slo_traces.run(fast=args.fast),
         "model_churn": lambda: bench_model_churn.run(fast=args.fast),
+        "multi_stream": lambda: bench_multi_stream.run(fast=args.fast),
     }
+    if args.only is not None and args.only not in benches:
+        # a typo used to silently run ZERO benchmarks and still print
+        # "all benchmarks complete" — fail loudly, list what exists.
+        print(f"--only {args.only!r}: no such benchmark; valid keys:",
+              file=sys.stderr)
+        for key in benches:
+            print(f"  {key}", file=sys.stderr)
+        return 2
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
@@ -74,7 +89,8 @@ def main(argv=None):
         fn()
         print(f"({name}: {time.time()-t0:.1f}s)")
     print("\nall benchmarks complete; json in results/bench/")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

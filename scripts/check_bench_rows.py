@@ -8,7 +8,9 @@ its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
 (model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
 by (model, bucket, schedule), ``multi_model_rows`` by (load,),
 ``slo_trace_rows`` by (trace, tier), ``model_churn_rows`` by
-(models, hot_budget)) and its guarded metric(s).
+(models, hot_budget), ``multi_stream_rows`` by (model, load, streams))
+and its guarded metric(s), plus the row's host topology (``n_devices``
++ ``backend``) when the bench tagged it.
 ``check`` then fails loudly if, after the benchmarks reran:
 
 * any recorded row identity is missing — a benchmark that silently stopped
@@ -23,7 +25,8 @@ by (model, bucket, schedule), ``multi_model_rows`` by (load,),
 * any guarded metric regressed more than ``CI_BENCH_REGRESSION_PCT``
   (default 25) percent against the snapshot.  The guarded metrics are the
   rows' *self-normalized A/B ratios* (fused-vs-per-layer ``speedup``,
-  ``int8_fused_speedup_vs_layer``, engine-vs-naive ``throughput_gain``)
+  ``int8_fused_speedup_vs_layer``, engine-vs-naive ``throughput_gain``,
+  N-streams-vs-one ``aggregate_gain`` in ``multi_stream_rows``)
   rather than absolute ms/rps: on a shared host absolute wall-clock
   tracks machine load (and the engine's low-load throughput is
   arrival-rate-bound by construction), while the ratios compare two
@@ -40,6 +43,14 @@ by (model, bucket, schedule), ``multi_model_rows`` by (load,),
   the regression leg (e.g. on a deliberately slower host); the row-loss
   and label guards always run.  ``scripts/ci.sh`` widens the bound on
   interpret hosts — see the measurement note there.
+
+Topology gating: every guarded bench tags its rows with the host
+execution topology (``n_devices``, ``backend`` — see
+``benchmarks.common.topology``).  The regression leg only compares a
+row against a snapshot taken on the SAME topology — a 1-device
+interpret number vs an 8-device one is a hardware change, not a perf
+regression.  The row-loss and label guards are topology-independent
+and always apply.
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ SECTIONS = {
     "multi_model_rows": ("load",),
     "slo_trace_rows": ("trace", "tier"),
     "model_churn_rows": ("models", "hot_budget"),
+    "multi_stream_rows": ("model", "load", "streams"),
 }
 
 # guarded metric per section and the direction that counts as regression.
@@ -68,6 +80,7 @@ METRICS = {
     "int8_rows": ("int8_fused_speedup_vs_layer", "higher_is_better"),
     "serving_engine_rows": ("throughput_gain", "higher_is_better"),
     "multi_model_rows": ("aggregate_gain", "higher_is_better"),
+    "multi_stream_rows": ("aggregate_gain", "higher_is_better"),
 }
 
 # sections guarded on several metrics at once.  ``*_abs`` directions are
@@ -103,8 +116,18 @@ def _load(path: str = ROOT_JSON) -> dict:
         return {}
 
 
+def _row_topology(row: dict):
+    """The (n_devices, backend) tag a bench stamped on the row, or None
+    for rows written before topology tagging existed."""
+    if "n_devices" not in row and "backend" not in row:
+        return None
+    return {"n_devices": row.get("n_devices"),
+            "backend": row.get("backend")}
+
+
 def row_records(path: str = ROOT_JSON) -> list:
-    """[[section, *key_values, metric_or_None], ...] for every row."""
+    """[[section, *key_values, metric_or_None, topology_or_None], ...]
+    for every row."""
     data = _load(path)
     records = []
     for section, keys in SECTIONS.items():
@@ -115,7 +138,8 @@ def row_records(path: str = ROOT_JSON) -> list:
                 val = {m: row.get(m) for m, _ in multi}
             else:
                 val = row.get(metric) if metric else None
-            records.append([section] + [row.get(k) for k in keys] + [val])
+            records.append([section] + [row.get(k) for k in keys]
+                           + [val, _row_topology(row)])
     return records
 
 
@@ -129,26 +153,38 @@ def regression_pct() -> float:
 def check(rows_file: str, path: str = ROOT_JSON) -> int:
     with open(rows_file) as f:
         before = json.load(f)
-    after = {tuple(r[:-1]): r[-1] for r in row_records(path)}
+    after = {tuple(r[:-2]): (r[-2], r[-1]) for r in row_records(path)}
     failures = []
+    guarded_ids = set()
 
     for rec in before:
         section = rec[0] if rec else None
         if section not in SECTIONS:
             continue                     # section retired: nothing to hold
-        if len(rec) == len(SECTIONS[section]) + 2:
-            rid, old_val = tuple(rec[:-1]), rec[-1]
+        n_keys = len(SECTIONS[section])
+        if len(rec) == n_keys + 3:
+            rid, old_val, old_topo = tuple(rec[:-2]), rec[-2], rec[-1]
+        elif len(rec) == n_keys + 2:
+            # pre-topology snapshot: metric but no host tag
+            rid, old_val, old_topo = tuple(rec[:-1]), rec[-1], None
         else:
             # pre-metric snapshot (older format): identity only
-            rid, old_val = tuple(rec), None
+            rid, old_val, old_topo = tuple(rec), None, None
+        guarded_ids.add(rid)
         if rid not in after:
             failures.append(f"lost row {rid}")
+            continue
+        new_val, new_topo = after[rid]
+        if old_topo and new_topo and old_topo != new_topo:
+            # host topology changed between snapshot and rerun: the
+            # wall-clock-derived metrics are not comparable.  Row-loss
+            # and label guards above/below still apply.
             continue
         pct = regression_pct()
         if section in MULTI_METRICS:
             if pct <= 0 or not isinstance(old_val, dict):
                 continue
-            new_vals = after[rid] if isinstance(after[rid], dict) else {}
+            new_vals = new_val if isinstance(new_val, dict) else {}
             tol = pct / 100.0
             for metric, direction in MULTI_METRICS[section]:
                 ov, nv = old_val.get(metric), new_vals.get(metric)
@@ -172,7 +208,6 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
         if pct <= 0 or old_val is None or section not in METRICS:
             continue
         metric, direction = METRICS[section]
-        new_val = after[rid]
         if not isinstance(old_val, (int, float)) or \
                 not isinstance(new_val, (int, float)):
             continue
@@ -206,8 +241,7 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
         for msg in failures:
             print(f"  {msg}")
         return 1
-    new_rows = len(after) - len({tuple(r[:-1]) for r in before
-                                 if tuple(r[:-1]) in after})
+    new_rows = len(after) - len(guarded_ids & set(after))
     print(f"bench rows OK ({len(before)} guarded, {max(new_rows, 0)} new; "
           f"regression bound {regression_pct():.0f}%)")
     return 0

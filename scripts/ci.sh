@@ -12,11 +12,14 @@
 # tiers with bounded queues, admission control and a 10%-fault leg) and
 # bench_model_churn (16 packs behind the two-tier PackCache under Zipf
 # popularity: resident-bytes high-water vs the hot budget, cold-start
-# p95, cache-hit vs uncached latency, evict->reload bit-identity) —
-# and rewrites BENCH_fused_serving.json at the repo root (fp32 rows +
-# int8_rows + serving_engine_rows + schedule_rows + multi_model_rows +
-# slo_trace_rows + model_churn_rows), so every PR leaves the cross-PR
-# perf trajectory current.  A benchmark overrun (budget exceeded) fails
+# p95, cache-hit vs uncached latency, evict->reload bit-identity) and
+# bench_multi_stream (the same Poisson trace at n_streams in {1,2,4}
+# under a bounded bucket, plus threaded-frontend and 4-device-sharded
+# bit-exact parity legs) — and rewrites BENCH_fused_serving.json at the
+# repo root (fp32 rows + int8_rows + serving_engine_rows +
+# schedule_rows + multi_model_rows + slo_trace_rows + model_churn_rows
+# + multi_stream_rows, every guarded row topology-tagged), so every PR
+# leaves the cross-PR perf trajectory current.  A benchmark overrun (budget exceeded) fails
 # CI loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows
 # the committed baseline had, dropped a row's kernel-schedule label, or

@@ -23,6 +23,40 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def fit_mesh(n_devices: Optional[int] = None, *,
+             model: Optional[int] = None) -> jax.sharding.Mesh:
+    """The largest valid ``('data', 'model')`` mesh the host actually has.
+
+    ``make_production_mesh`` hard-codes 256/512 chips and simply cannot be
+    constructed on a 1–8 device host; everything that wants a mesh sized
+    to reality (``launch.serve --shard``, the multi-stream bench, tests on
+    forced-host-device subprocesses) goes through here instead.
+
+    ``n_devices`` caps how many devices to use (default: all available —
+    never more than the host has).  ``model`` pins the tensor-parallel
+    axis; by default it is the largest power-of-two divisor of the device
+    count with ``model**2 <= n`` — balanced, and degenerating to
+    ``(n, 1)`` on non-power-of-two counts so the mesh always builds:
+
+        1 -> (1, 1)   2 -> (2, 1)   4 -> (2, 2)   8 -> (4, 2)
+        16 -> (4, 4)  64 -> (8, 8)  256 -> (16, 16)  6 -> (3, 2)
+    """
+    avail = jax.device_count()
+    n = avail if n_devices is None else min(int(n_devices), avail)
+    if n < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if model is not None:
+        model = int(model)
+        if model < 1 or n % model:
+            raise ValueError(
+                f"model axis {model} does not divide {n} devices")
+    else:
+        model = 1
+        while n % (model * 2) == 0 and (model * 2) ** 2 <= n:
+            model *= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 

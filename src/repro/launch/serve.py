@@ -38,6 +38,13 @@ bounds every model's queue in rows (overflow is a typed
 frontend's degradation ladder (retry -> chain fallback -> quarantine)
 can be watched live; the run reports retries/fallbacks/quarantines and
 validates the rows that completed.
+
+Scale-out (this PR): ``--streams N`` replicates the async frontend's
+execution stream N ways (one per device on a multi-device host —
+join-shortest-estimated-work dispatch, per-stream quarantine);
+``--shard`` column-shards the plan itself over the host's
+``('data','model')`` mesh (``launch.mesh.fit_mesh``) — the two compose
+with every robustness knob above.
 """
 from __future__ import annotations
 
@@ -72,6 +79,20 @@ def _freeze_mlp_pack(cfg, seed: int = 0):
     return pack
 
 
+def _mode_kwargs(args):
+    """The plan-mode kwargs the flags resolve to, shared by the primary
+    plan, --multi co-served packs and the pack-cache registration path
+    (all models must run the requested configuration)."""
+    if args.shard:
+        from .mesh import fit_mesh
+        mesh = fit_mesh()
+        print(f"shard: ('data','model') mesh "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))} over "
+              f"{mesh.devices.size} device(s)")
+        return {"mode": "sharded", "mesh": mesh}
+    return {"mode": "fused" if args.fused else "per_layer"}
+
+
 def serve_mlp(args):
     """Frozen paper-MLP serving through the unified serving engine."""
     cfg = MLPS[args.arch]
@@ -81,12 +102,13 @@ def serve_mlp(args):
     b = args.batch
     x = jax.random.normal(key, (b, cfg.d_in), jnp.float32)
 
+    args._mode_kwargs = _mode_kwargs(args)
     plan = serving.build_plan(
         pack,
-        mode="fused" if args.fused else "per_layer",
         act_dtype="int8" if args.int8 else "float32",
         double_buffer=args.double_buffer,
-        calib_x=x if args.int8 else None)
+        calib_x=x if args.int8 else None,
+        **args._mode_kwargs)
 
     # resolved-plan report BEFORE anything is timed: the label below is
     # what will actually execute for this batch, and every requested-but-
@@ -99,6 +121,11 @@ def serve_mlp(args):
           f"{desc['resolved_mode']} (batch {b}: {mode}; "
           f"block_m {desc['block_m']} [{desc['block_source']}], "
           f"buckets {desc['bucket_sizes']})")
+    if desc.get("sharding"):
+        sh = desc["sharding"]
+        print(f"plan: sharded over {sh['mesh']} — column-split layers "
+              f"{sh['col_sharded_layers']}, replicated "
+              f"{sh['replicated_layers'] or 'none'}")
     print("plan: bucket -> schedule " + ", ".join(
         f"{bk}:{desc['bucket_schedules'][bk]}"
         f"[bm={desc['bucket_block_m'][bk]},{desc['bucket_sources'][bk]}]"
@@ -186,10 +213,11 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
         # per-model latency lines are only comparable if every model runs
         # the requested configuration.
         mplan = serving.build_plan(
-            mpack, mode="fused" if args.fused else "per_layer",
+            mpack,
             act_dtype="int8" if args.int8 else "float32",
             double_buffer=args.double_buffer,
-            calib_x=mx if args.int8 else None)
+            calib_x=mx if args.int8 else None,
+            **args._mode_kwargs)
         models[mcfg.name] = (mplan, list(mx))
 
     names = list(models)
@@ -210,7 +238,12 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
               f"models / "
               f"{args.hot_bytes if args.hot_bytes else '∞'} bytes — "
               "models registered compressed, decoded on first traffic")
-    frontend = serving.ServingFrontend(cache=cache)
+    frontend = serving.ServingFrontend(cache=cache, streams=args.streams)
+    if args.streams > 1:
+        devs = [d if d is not None else "<default>"
+                for d in frontend._devices]
+        print(f"streams: {args.streams} replicated execution streams "
+              f"(devices {devs})")
     for name, (mplan, mx_) in models.items():
         if cache is not None:
             # compressed-tier registration: the frontend holds the cold
@@ -218,7 +251,7 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
             frontend.register_pack(
                 name, mplan.pack,
                 plan_kwargs={
-                    "mode": "fused" if args.fused else "per_layer",
+                    **args._mode_kwargs,
                     "act_dtype": "int8" if args.int8 else "float32",
                     "double_buffer": args.double_buffer,
                     "calib": ({"act_scales": list(mplan.act_scales)}
@@ -273,6 +306,11 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
           f"{len(models)} model(s) in {dt*1e3:.2f} ms total "
           f"({n/max(dt, 1e-12):.0f} samples/s, "
           f"{frontend.stats['launches']} launches)")
+    if args.streams > 1:
+        for i, ss in enumerate(frontend.stats["streams"]):
+            print(f"stream {i}: {ss['launches']} launches, "
+                  f"{ss['busy_s'] * 1e3:.1f} ms busy"
+                  + (", QUARANTINED" if ss["quarantined"] else ""))
     if args.inject_fault > 0 or rejected:
         fs = frontend.stats
         print(f"degradation: {fs['launch_failures']} launch failures, "
@@ -353,7 +391,26 @@ def main(argv=None):
                     help="with --engine --async: byte budget for the "
                          "pack cache's resident decoded plans (combines "
                          "with --max-hot-models)")
+    ap.add_argument("--streams", type=int, default=1, metavar="N",
+                    help="with --engine --async: N replicated execution "
+                         "streams (one per device on a multi-device "
+                         "host; thread-only on a single device) with "
+                         "join-shortest-estimated-work dispatch")
+    ap.add_argument("--shard", action="store_true",
+                    help="MLP path: column-shard the megakernel plan "
+                         "over the host's ('data','model') mesh "
+                         "(launch.mesh.fit_mesh) — wide layers split "
+                         "their output features per device, indivisible "
+                         "widths replicate")
     args = ap.parse_args(argv)
+    if args.streams < 1:
+        raise SystemExit(f"--streams must be >= 1, got {args.streams}")
+    if args.streams > 1 and not args.async_frontend:
+        raise SystemExit("--streams applies to the async frontend: add "
+                         "--engine --async")
+    if args.shard and args.arch not in MLPS:
+        raise SystemExit("--shard applies to the paper-MLP serving path "
+                         f"(--arch one of {sorted(MLPS)})")
     if (args.tier or args.max_delay or args.max_queued is not None
             or args.inject_fault) and not args.async_frontend:
         raise SystemExit("--tier/--max-delay/--max-queued/--inject-fault "

@@ -229,3 +229,39 @@ class Rules:
         return jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P))
+
+
+def serving_pack_specs(layers, rules: "Rules"):
+    """Partition specs for a frozen serving pack's layer tensors.
+
+    The serving pack is the packed-int4 form ``models.mlp.freeze_mlp``
+    emits: per layer ``packed`` (ceil(K/2), N) row-pair bit-planes, the
+    ω recombination vector, and the §V epilogue parameters (alpha1 /
+    bias / alpha2).  Each layer's ``packed`` flows through the SAME
+    ``//packed`` column rule the training-side tree uses (Megatron
+    column split over the output features, divisibility-guarded: an N
+    that does not divide by the model axis replicates), and the
+    epilogue vectors follow their layer's column split — they are
+    per-output-feature, so a sharded layer needs only its slice.  ω is
+    the paper's full-precision shared parameter and always replicates
+    (the ``//omega`` rule), like alpha2 (scalar).
+
+    Returns one dict of :class:`PartitionSpec` per layer with keys
+    ``packed / omega / alpha1 / bias / alpha2``.
+    """
+    specs = []
+    for i, layer in enumerate(layers):
+        shape = tuple(np.shape(layer["packed"]))
+        packed = rules.spec_for(f"layers//{i}//mlp//fc1//kernel//packed",
+                                shape)
+        col_ok = len(packed) == 2 and packed[1] is not None
+        vec = P("model") if col_ok else P(None)
+        specs.append({
+            "packed": packed,
+            "omega": rules.spec_for(f"layers//{i}//omega",
+                                    np.shape(layer["omega"])),
+            "alpha1": vec,
+            "bias": vec,
+            "alpha2": P(),
+        })
+    return specs

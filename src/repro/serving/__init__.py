@@ -15,8 +15,16 @@
 * :mod:`frontend` — :class:`ServingFrontend`: the live driver — a
   :class:`ModelRegistry` of packs behind one real-clock dispatch thread
   (sleep until ``min(next_deadline)``, oldest-deadline-first launches
-  with a full-tile fast path), futures / asyncio on the submit side —
-  multi-model serving on a single execution stream.
+  with a full-tile fast path), futures / asyncio on the submit side.
+  ``streams=N`` replicates the execution stream: N workers (one per
+  device when the host has them), join-shortest-estimated-work
+  assignment off the admission controller's service-time EWMA, and a
+  per-stream quarantine rung in the degradation ladder.
+* :mod:`sharded` — :class:`ShardedStack`: the column-split multi-device
+  program for ONE pack over a ``('data','model')`` mesh (Megatron
+  column split of the packed bit-planes, tiled all-gather per layer,
+  bit-exact vs the per-layer chain); served through
+  ``ExecutionPlan(mode="sharded", mesh=...)``.
 
 * :mod:`slo` — the robustness policy layer: :class:`SLOTier` latency
   classes (tiered ``max_delay``/deadline budgets + bounded dispatch
@@ -45,9 +53,10 @@ from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
                     forget_plan, get_plan)
 from .slo import (TIERS, AdmissionController, Rejected,       # noqa: F401
                   SLOTier, resolve_tier)
-from .batcher import Completion, MicroBatcher, replay         # noqa: F401
+from .batcher import Completion, MicroBatcher, Taken, replay  # noqa: F401
 from .pack_cache import (CachedPlan, ColdPack, PackCache,     # noqa: F401
                          compress_pack, decode_pack,
                          plan_resident_bytes)
+from .sharded import ShardedStack                             # noqa: F401
 from .frontend import (ModelRegistry, RetryPolicy, Served,    # noqa: F401
                        ServingFrontend)

@@ -63,6 +63,7 @@ blocking device round-trip so intake never stalls behind compute.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -93,6 +94,17 @@ class Completion:
     arrival: float
     bucket: int               # rows of the bucket that served it
     batched_rows: int         # real rows sharing the launch
+
+
+@dataclasses.dataclass
+class Taken:
+    """One coalesced bucket popped from the queue but not yet launched —
+    the handoff unit between a dispatcher that *decides* (which stream
+    runs this bucket) and the stream worker that *executes* it.  The
+    requests stay host-side numpy until :meth:`MicroBatcher.execute`
+    consumes them, so a failed launch can requeue them intact."""
+    requests: List[_Pending]
+    rows: int
 
 
 class MicroBatcher:
@@ -267,6 +279,28 @@ class MicroBatcher:
         with self._lock:
             self.stats["compute_s"] += dt
 
+    def take(self, now: Optional[float] = None) -> Optional[Taken]:
+        """Pop one coalesced bucket off the queue without launching it
+        (``None`` when the queue is empty).  The multi-stream frontend
+        separates the two halves of :meth:`run_one`: the dispatch thread
+        *takes* (so it can cost the bucket and pick the least-loaded
+        stream) and the chosen stream worker *executes*.  A taken bucket
+        the caller abandons can be returned via :meth:`requeue`."""
+        self._now(now)
+        with self._lock:
+            taken = self._take()
+        if not taken:
+            return None
+        return Taken(taken, sum(p.rows for p in taken))
+
+    def requeue(self, taken: Taken) -> None:
+        """Put a taken-but-never-launched bucket back at the queue head
+        (original order, original deadlines) — the dispatcher's undo."""
+        with self._lock:
+            for p in reversed(taken.requests):
+                self._queue.appendleft(p)
+            self._queued_rows += taken.rows
+
     def run_one(self, now: Optional[float] = None
                 ) -> Tuple[List[Completion], int, float]:
         """Serve one bucket now (no trigger checks — the caller decided).
@@ -274,12 +308,22 @@ class MicroBatcher:
         covers the blocking device round-trip for the whole bucket.  The
         lock is dropped around the round-trip so submits stay live.
         """
-        now = self._now(now)
-        with self._lock:
-            taken = self._take()
-        if not taken:
+        t = self.take(now)
+        if t is None:
             return [], 0, 0.0
-        rows = sum(p.rows for p in taken)
+        return self.execute(t)
+
+    def execute(self, t: Taken, *, device=None
+                ) -> Tuple[List[Completion], int, float]:
+        """Launch one taken bucket (the execution half of
+        :meth:`run_one`).  ``device`` routes the launch to a specific
+        device — ``jax.default_device`` scoped around the round-trip, so
+        per-device streams on a multi-device host each keep their own
+        executable and the compute really lands on their device; on the
+        single-device interpret host it is a no-op and streams degrade
+        to threads sharing the device.  A failed launch requeues the
+        taken requests at the queue head, exactly as before the split."""
+        taken, rows = t.requests, t.rows
         bucket = self.plan.bucket_for(rows)
         padded = (bucket or rows) - rows
         # coalesce/pad/scatter run host-side in numpy: every distinct
@@ -291,14 +335,17 @@ class MicroBatcher:
             if len(taken) > 1 else taken[0].x
         t0 = time.perf_counter()
         try:
-            if bucket is None:
-                y = self.plan.run(xb)             # oversized: exact rows
-                bucket = rows
-            else:
-                if padded:
-                    xb = np.pad(xb, ((0, padded), (0, 0)))
-                y = self.plan.entry(bucket)(jnp.asarray(xb))
-            y = np.asarray(jax.block_until_ready(y))
+            ctx = jax.default_device(device) if device is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                if bucket is None:
+                    y = self.plan.run(jnp.asarray(xb))  # oversized: exact
+                    bucket = rows
+                else:
+                    if padded:
+                        xb = np.pad(xb, ((0, padded), (0, 0)))
+                    y = self.plan.entry(bucket)(jnp.asarray(xb))
+                y = np.asarray(jax.block_until_ready(y))
         except BaseException:
             # a failed launch loses NOTHING: requests are host-side numpy
             # until the kernel consumes them, so put the taken batch back
@@ -394,11 +441,12 @@ class MicroBatcher:
 
 def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
            max_delay: float = 2e-3, max_bucket: Optional[int] = None,
-           service_times: Optional[Dict[int, float]] = None) -> dict:
+           service_times: Optional[Dict[int, float]] = None,
+           n_streams: int = 1) -> dict:
     """Replay a ragged arrival trace through the engine, work-conserving:
-    the (single) execution stream starts a bucket as soon as it is free
-    and work is queued, absorbing every request that arrived by then —
-    continuous batching under backlog, immediate dispatch when idle.
+    an execution stream starts a bucket as soon as it is free and work is
+    queued, absorbing every request that arrived by then — continuous
+    batching under backlog, immediate dispatch when idle.
 
     ``arrivals`` are virtual timestamps (e.g. a Poisson process);
     launches run for real on device.  When ``service_times`` maps bucket
@@ -409,7 +457,17 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
     virtual-makespan accounting and ``stats["wall_compute_s"]`` the live
     launches, never mixed.  Returns per-request latencies and throughput
     over the virtual makespan.
+
+    ``n_streams`` replays the same trace against N replicated execution
+    streams sharing the one queue (the scale-out frontend's shape): each
+    bucket launches on the earliest-free stream.  ``n_streams=1`` is
+    bit-for-bit the old single-server simulation, and because streams
+    replicate the same plan the scattered results are identical at any
+    N — only the virtual timeline changes.  Per-stream launch counts are
+    returned as ``stream_launches``.
     """
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1, got {n_streams}")
     order = np.argsort(np.asarray(arrivals), kind="stable")
     batcher = MicroBatcher(plan, max_delay=max_delay, max_bucket=max_bucket,
                            clock=None)
@@ -418,12 +476,14 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
     completions: Dict[int, Completion] = {}
     finish: Dict[int, float] = {}
     rid_to_req: Dict[int, int] = {}
-    engine_free = 0.0
+    free = [0.0] * n_streams            # per-stream earliest-free time
+    launches = [0] * n_streams
     while todo or batcher.pending_rows:
         if not batcher.pending_rows:
             t_arr, i = todo.popleft()
             rid_to_req[batcher.submit(xs[i], now=t_arr)] = i
-        start = max(engine_free, batcher.oldest_arrival())
+        stream = min(range(n_streams), key=free.__getitem__)
+        start = max(free[stream], batcher.oldest_arrival())
         # continuous batching: absorb everything that arrived by the time
         # this bucket actually launches.
         while todo and todo[0][0] <= start and \
@@ -434,10 +494,11 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
         if service_times is not None:
             dt = service_times.get(bucket, dt)
         batcher.account_compute(dt)
-        engine_free = start + dt
+        free[stream] = start + dt
+        launches[stream] += 1
         for c in done:
             completions[rid_to_req[c.rid]] = c
-            finish[rid_to_req[c.rid]] = engine_free
+            finish[rid_to_req[c.rid]] = free[stream]
     n = len(xs)
     lat = np.asarray([finish[i] - float(arrivals[i]) for i in range(n)])
     makespan = max(max(finish.values()), max(float(a) for a in arrivals))
@@ -448,5 +509,7 @@ def replay(plan, xs: Sequence, arrivals: Sequence[float], *,
         "latency_max_ms": float(lat.max() * 1e3),
         "makespan_s": float(makespan),
         "throughput_rps": n / max(makespan, 1e-12),
+        "n_streams": n_streams,
+        "stream_launches": launches,
         "stats": batcher.stats,
     }

@@ -98,10 +98,41 @@ Every rung is counted in ``stats`` (``retries`` / ``fallbacks`` /
 ``quarantined`` / per-model mirrors) — degradation is measurable, never
 silent.  Errors in the dispatch machinery itself (not a launch) still
 fail everything loudly, exactly as before.
+
+Replicated execution streams (scale-out)
+----------------------------------------
+
+``ServingFrontend(streams=N)`` splits the driver into one dispatch
+thread plus N stream workers — one per device on a multi-device host
+(``devices=`` pins the assignment; default round-robin over
+``jax.devices()``), one per thread on the single-device interpret host
+(where streams time-share the device through the GIL: the correctness
+and dispatch machinery are identical, the speedup is not — see README).
+The dispatch thread still owns *what* launches (same tier-weighted
+oldest-deadline pick), but instead of executing inline it **takes** the
+coalesced bucket (``MicroBatcher.take``) and assigns it to the stream
+with the least estimated backlog — join-shortest-estimated-work over
+the admission controller's per-bucket service-time EWMA
+(``AdmissionController.launch_estimate``), so a slow stream accrues
+backlog and stops winning assignments.  The worker **executes**
+(``MicroBatcher.execute``) with the batcher's requeue-on-failure
+contract intact, and resolves the futures; :class:`Served` carries the
+``stream`` that ran it.
+
+The degradation ladder gains a per-stream rung: launch failures count
+against the stream that ran them as well as the model, and a stream
+whose failures survive the retry budget is **quarantined by itself**
+(its queued tickets reroute to healthy streams, the model's ladder
+restarts) as long as another stream is active — one poisoned device
+degrades the fleet by 1/N instead of killing it.  Failures that follow
+the model across streams still walk the model ladder (retry → chain
+fallback → model quarantine) exactly as before.  ``streams=1``
+(default) is byte-for-byte the single-stream driver above.
 """
 from __future__ import annotations
 
 import asyncio
+import collections
 import concurrent.futures
 import dataclasses
 import threading
@@ -110,7 +141,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batcher import MicroBatcher
+from .batcher import MicroBatcher, Taken
 from .pack_cache import CachedPlan, ColdPack, PackCache
 from .plans import ExecutionPlan, forget_plan
 from .slo import (REJECT_QUARANTINED, REJECT_UNREGISTERED, Rejected,
@@ -146,6 +177,7 @@ class Served:
     latency: float            # finish - arrival (wall seconds)
     bucket: int               # rows of the bucket that served it
     batched_rows: int         # real rows sharing the launch
+    stream: int = 0           # execution stream that ran the launch
 
 
 class ModelRegistry:
@@ -286,11 +318,32 @@ class ServingFrontend:
     def __init__(self, registry: Optional[ModelRegistry] = None, *,
                  clock: Callable[[], float] = time.monotonic,
                  retry_policy: Optional[RetryPolicy] = RetryPolicy(),
-                 cache: Optional[PackCache] = None):
+                 cache: Optional[PackCache] = None,
+                 streams: Optional[int] = None,
+                 devices: Optional[Sequence] = None):
         self.registry = registry if registry is not None \
             else ModelRegistry(clock=clock, cache=cache)
         self.clock = self.registry.clock
         self.retry_policy = retry_policy
+        if streams is None:
+            streams = len(devices) if devices else 1
+        if streams < 1:
+            raise ValueError(f"streams must be >= 1, got {streams}")
+        if devices is not None and len(devices) != streams:
+            raise ValueError(f"devices ({len(devices)}) must match "
+                             f"streams ({streams})")
+        self.streams = streams
+        if devices is None:
+            devices = [None] * streams
+            if streams > 1:
+                # one stream per device when the host has them; on a
+                # single-device host streams stay thread-only (no
+                # default_device overhead on every launch).
+                import jax
+                devs = jax.devices()
+                if len(devs) > 1:
+                    devices = [devs[i % len(devs)] for i in range(streams)]
+        self._devices = list(devices)
         self._cond = threading.Condition()
         self._futures: Dict[Tuple[str, int],
                             concurrent.futures.Future] = {}
@@ -300,9 +353,22 @@ class ServingFrontend:
         self._error: Optional[BaseException] = None
         self._quarantined: set = set()
         self._fail_streak: Dict[str, int] = {}
+        # multi-stream state (all no-ops at streams=1): per-stream ticket
+        # queues, estimated-backlog accounting for the JSW assignment,
+        # failure streaks and the stream quarantine set.
+        self._tickets: List[collections.deque] = \
+            [collections.deque() for _ in range(streams)]
+        self._stream_load = [0.0] * streams
+        self._stream_streak = [0] * streams
+        self._stream_quarantined: set = set()
+        self._stream_inflight = 0
+        self._workers_stop = False
         self.stats = {"launches": 0, "rejected": 0, "launch_failures": 0,
                       "retries": 0, "fallbacks": 0, "quarantined": [],
-                      "by_model": {}}
+                      "by_model": {},
+                      "streams": [{"launches": 0, "launch_failures": 0,
+                                   "busy_s": 0.0, "quarantined": False}
+                                  for _ in range(streams)]}
 
     def _model_stats(self, model_id: str) -> dict:
         # lazy: models may be registered through self.register OR straight
@@ -523,10 +589,13 @@ class ServingFrontend:
         with self._cond:
             self._error = exc
             self._running = False
+            self._draining = False      # nothing left worth draining
+            self._workers_stop = True
             for fut in self._futures.values():
                 if not fut.cancelled():
                     fut.set_exception(exc)
             self._futures.clear()
+            self._cond.notify_all()
 
     def _quarantine(self, model_id: str, batcher: MicroBatcher,
                     exc: BaseException) -> None:
@@ -604,6 +673,8 @@ class ServingFrontend:
             self._fatal(exc)
 
     def _loop_inner(self) -> None:
+        if self.streams > 1:
+            return self._loop_multi()
         while True:
             with self._cond:
                 if not self._running:
@@ -640,3 +711,173 @@ class ServingFrontend:
                         fut.set_result(Served(
                             model_id, c.rid, c.y, c.arrival, finish,
                             finish - c.arrival, c.bucket, c.batched_rows))
+
+    # ------------------------------------------- multi-stream dispatch
+
+    def _active_streams(self) -> List[int]:
+        return [i for i in range(self.streams)
+                if i not in self._stream_quarantined]
+
+    def _assign_stream(self) -> int:
+        """Join-shortest-estimated-work: the active stream with the least
+        estimated backlog (queued ticket costs + in-flight remainder).
+        Caller holds the lock."""
+        active = self._active_streams()
+        return min(active, key=lambda i: (self._stream_load[i], i))
+
+    def _quarantine_stream(self, idx: int, exc: BaseException) -> None:
+        """Isolate one execution stream: its queued tickets reroute to
+        healthy streams (nothing is lost — requests go back to their
+        batcher queues and re-fire), its worker exits, and dispatch
+        never assigns to it again.  Only reachable while another stream
+        is active — the last stream walks the model ladder instead."""
+        requeued = []
+        with self._cond:
+            if idx in self._stream_quarantined:
+                return
+            self._stream_quarantined.add(idx)
+            self.stats["streams"][idx]["quarantined"] = True
+            self.stats["streams"][idx]["error"] = repr(exc)
+            self._stream_load[idx] = 0.0
+            while self._tickets[idx]:
+                requeued.append(self._tickets[idx].popleft())
+            self._cond.notify_all()
+        for _model_id, batcher, taken, _est in requeued:
+            batcher.requeue(taken)
+
+    def _degrade_stream(self, idx: int, model_id: str,
+                        batcher: MicroBatcher, exc: Exception) -> None:
+        """The multi-stream failure ladder: the model's retry rung first
+        (the requeued requests re-dispatch — often to a different
+        stream, which is what separates a poisoned device from a
+        poisoned model), then stream quarantine while other streams are
+        healthy, then the model's own fallback/quarantine rungs."""
+        policy = self.retry_policy
+        with self._cond:
+            self._stream_streak[idx] += 1
+            self.stats["streams"][idx]["launch_failures"] += 1
+            stream_streak = self._stream_streak[idx]
+            others_active = len(self._active_streams()) > 1
+        if policy is not None and policy.quarantine and \
+                stream_streak > policy.max_retries and others_active:
+            self._quarantine_stream(idx, exc)
+            with self._cond:
+                # fresh ladder for the model on the surviving streams:
+                # its failures so far are attributed to the bad stream.
+                self._fail_streak.pop(model_id, None)
+            return
+        self._degrade(model_id, batcher, exc)
+
+    def _worker(self, idx: int) -> None:
+        try:
+            self._worker_inner(idx)
+        except BaseException as exc:          # noqa: BLE001
+            self._fatal(exc)
+
+    def _worker_inner(self, idx: int) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if idx in self._stream_quarantined:
+                        return
+                    if self._tickets[idx] and not (
+                            self._workers_stop and not self._draining):
+                        model_id, batcher, taken, est = \
+                            self._tickets[idx].popleft()
+                        self._stream_inflight += 1
+                        break
+                    if self._workers_stop:
+                        return
+                    self._cond.wait()
+            t0 = time.perf_counter()
+            try:
+                done, _bucket, _dt = batcher.execute(
+                    taken, device=self._devices[idx])
+            except Exception as exc:          # noqa: BLE001
+                with self._cond:
+                    self._stream_load[idx] = max(
+                        0.0, self._stream_load[idx] - est)
+                    self._stream_inflight -= 1
+                    self._cond.notify_all()
+                self._degrade_stream(idx, model_id, batcher, exc)
+                continue
+            finish = self.clock()
+            dt = time.perf_counter() - t0
+            with self._cond:
+                self._stream_load[idx] = max(
+                    0.0, self._stream_load[idx] - est)
+                self._stream_inflight -= 1
+                self._stream_streak[idx] = 0
+                self._fail_streak.pop(model_id, None)
+                self.stats["launches"] += 1
+                self._model_stats(model_id)["launches"] += 1
+                ss = self.stats["streams"][idx]
+                ss["launches"] += 1
+                ss["busy_s"] += dt
+                for c in done:
+                    fut = self._futures.pop((model_id, c.rid), None)
+                    if fut is not None and not fut.cancelled():
+                        fut.set_result(Served(
+                            model_id, c.rid, c.y, c.arrival, finish,
+                            finish - c.arrival, c.bucket, c.batched_rows,
+                            stream=idx))
+                self._cond.notify_all()
+
+    def _loop_multi(self) -> None:
+        with self._cond:
+            self._workers_stop = False
+        workers = [threading.Thread(target=self._worker, args=(i,),
+                                    name=f"serving-stream-{i}",
+                                    daemon=True)
+                   for i in range(self.streams)]
+        for w in workers:
+            w.start()
+        try:
+            while True:
+                with self._cond:
+                    if not self._running:
+                        if not self._draining:
+                            break
+                        pick = next(
+                            ((m, b) for m, b in self.registry.items()
+                             if b.pending_rows
+                             and m not in self._quarantined), None)
+                        if pick is None:
+                            if self._stream_inflight or any(
+                                    self._tickets[i]
+                                    for i in self._active_streams()):
+                                # a failing launch may requeue during the
+                                # drain — re-check for pending rows after
+                                # every completion instead of blocking on
+                                # an empty-queue forever wait.
+                                self._cond.wait(0.05)
+                                continue
+                            break
+                    else:
+                        now = self.clock()
+                        pick = self._pick(now)
+                        if pick is None:
+                            deadline = self.registry.next_deadline()
+                            self._cond.wait(
+                                None if deadline is None
+                                else max(deadline - now, 0.0))
+                            continue
+                model_id, batcher = pick
+                taken = batcher.take()
+                if taken is None:
+                    continue
+                est = batcher.admission.launch_estimate(taken.rows)
+                if est is None:
+                    est = 1e-3      # unmeasured: any small constant ranks
+                with self._cond:
+                    idx = self._assign_stream()
+                    self._tickets[idx].append(
+                        (model_id, batcher, taken, est))
+                    self._stream_load[idx] += est
+                    self._cond.notify_all()
+        finally:
+            with self._cond:
+                self._workers_stop = True
+                self._cond.notify_all()
+            for w in workers:
+                w.join()

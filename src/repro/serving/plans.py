@@ -9,10 +9,13 @@ slightly differently.  An :class:`ExecutionPlan` captures the whole
 decision once per frozen pack:
 
 * **mode** — ``fused`` (megakernel) / ``per_layer`` (chained kernel) /
-  ``oracle`` (pure jnp), with ``auto`` resolving to the fastest mode that
-  fits; the VMEM-budget check runs at build time, so a stack that cannot
-  fuse is *reported* as ``per_layer`` instead of silently falling back
-  inside the kernel wrapper on every call.
+  ``oracle`` (pure jnp) / ``sharded`` (the column-split multi-device
+  program over a ``('data','model')`` mesh — pass ``mesh=``, see
+  ``serving.sharded``), with ``auto`` resolving to the fastest
+  single-device mode that fits; the VMEM-budget check runs at build
+  time, so a stack that cannot fuse is *reported* as ``per_layer``
+  instead of silently falling back inside the kernel wrapper on every
+  call.
 * **activation dtype** — fp32 or the paper's §VI-C int8 inter-layer
   activations; int8 calibration runs once at plan build (a provided calib
   dict, a calibration batch, or a deterministic synthetic batch), never
@@ -58,7 +61,7 @@ from ..kernels.fantastic4_fused_mlp import (VMEM_BUDGET_BYTES,
 from ..kernels import autotune
 from ..memo import MISS, IdentityMemo
 
-MODES = ("auto", "fused", "per_layer", "oracle")
+MODES = ("auto", "fused", "per_layer", "oracle", "sharded")
 ACT_DTYPES = ("float32", "int8")
 # weight-stationary latency prior: one f32 sublane tile — the dataflow-
 # motivated *pre-measurement* answer only.  On a real backend the
@@ -137,9 +140,14 @@ class ExecutionPlan:
                  interpret: Optional[bool] = None,
                  block_m: Optional[int] = None,
                  max_bucket: int = DEFAULT_MAX_BUCKET,
-                 vmem_budget_bytes: int = VMEM_BUDGET_BYTES):
+                 vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                 mesh=None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if mode == "sharded" and mesh is None:
+            raise ValueError("mode='sharded' requires mesh= (build one "
+                             "with launch.mesh.fit_mesh)")
+        self.mesh = mesh
         if act_dtype not in ACT_DTYPES:
             raise ValueError(
                 f"act_dtype must be one of {ACT_DTYPES}, got {act_dtype!r}")
@@ -199,6 +207,16 @@ class ExecutionPlan:
                         "for task-realistic scales")
                 self.act_scales = list(
                     calibrate_act_scales(pack, calib_x)["act_scales"])
+
+        # ---- sharded: the column-split multi-device program
+        # (serving.sharded), built once here — operands device_put under
+        # the partition rules, one jitted program per batch shape.
+        self._sharded = None
+        if mode == "sharded":
+            from .sharded import ShardedStack
+            self._sharded = ShardedStack(
+                pack, mesh, act_dtype=act_dtype,
+                act_scales=self.act_scales, interpret=self.interpret)
 
         # ---- mode resolution: the VMEM-fit decision happens HERE, not
         # per call inside the kernel wrapper, so callers can report the
@@ -278,7 +296,7 @@ class ExecutionPlan:
         self.bucket_sizes = _pow2_buckets(max(top, 1))
         self.buckets: Dict[int, BucketPlan] = {}
         self.ws_crossover_rows: Optional[int] = None
-        if mode in ("per_layer", "oracle"):
+        if mode in ("per_layer", "oracle", "sharded"):
             for b in self.bucket_sizes:
                 self.buckets[b] = BucketPlan(b, mode)
             self.default_path = mode
@@ -459,7 +477,7 @@ class ExecutionPlan:
         return bp
 
     def _resolve_oversize(self, m: int) -> BucketPlan:
-        if self.resolved_mode in ("per_layer", "oracle"):
+        if self.resolved_mode in ("per_layer", "oracle", "sharded"):
             return BucketPlan(m, self.resolved_mode, source="mode")
         top = self.buckets[max(self.bucket_sizes)]
         if top.path.startswith("fused"):
@@ -511,6 +529,8 @@ class ExecutionPlan:
 
     def _execute(self, x: jax.Array, path: str,
                  block_m: Optional[int] = None) -> jax.Array:
+        if path == "sharded":
+            return self._sharded(x)
         if path == "oracle":
             if self.act_dtype == "int8":
                 return kops.fantastic4_mlp_chain_int8(
@@ -609,6 +629,8 @@ class ExecutionPlan:
             "ws_prior_source": self.ws_prior_source,
             "default_path": self.default_path,
             "interpret": self.interpret,
+            "sharding": (None if self._sharded is None
+                         else self._sharded.describe()),
             "notes": list(self.notes),
         }
 
@@ -619,6 +641,7 @@ class ExecutionPlan:
                  "fused_db": "fused megakernel (double-buffered)",
                  "fused_ws": "fused megakernel (weight-stationary)",
                  "fused_stream": "fused megakernel (streaming)",
+                 "sharded": "column-sharded multi-device stack",
                  "per_layer": "per-layer kernel",
                  "oracle": "jnp oracle"}
         if m is not None:
@@ -627,7 +650,8 @@ class ExecutionPlan:
             paths = {p.path for p in self.buckets.values()}
             label = " / ".join(names[p] for p in
                                ("fused_ws", "fused", "fused_db",
-                                "fused_stream", "per_layer", "oracle")
+                                "fused_stream", "sharded", "per_layer",
+                                "oracle")
                                if p in paths)
         if self.act_dtype == "int8":
             label += " [int8 activations]"

@@ -161,6 +161,23 @@ class AdmissionController:
     def estimate(self, bucket: int) -> Optional[float]:
         return self._svc.get(bucket)
 
+    def launch_estimate(self, rows: int) -> Optional[float]:
+        """Predicted service seconds for one launch of ``rows`` rows —
+        the multi-stream frontend's join-shortest-estimated-work input.
+        Unlike :meth:`admit` this never gates anything, so it may be
+        loose: with no measurement for the exact bucket it scales the
+        nearest measured bucket linearly by row count (the launch cost
+        of these kernels is close to linear in the row tile), and only
+        abstains (``None``) when nothing was ever measured."""
+        bucket = self._bucket_for(rows) or rows
+        est = self._svc.get(bucket)
+        if est is not None:
+            return est
+        if not self._svc:
+            return None
+        nearest = min(self._svc, key=lambda b: abs(b - bucket))
+        return self._svc[nearest] * (bucket / max(nearest, 1))
+
     def service_times(self) -> Dict[int, float]:
         return dict(self._svc)
 
