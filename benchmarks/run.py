@@ -37,6 +37,12 @@ multi_stream          scale-out serving: N replicated execution streams
                       bit-exactness legs for the threaded multi-stream
                       frontend and the column-sharded plan; extends
                       BENCH_fused_serving.json with multi_stream_rows
+integrity             checksummed-pack robustness: background-scrubber
+                      hot-path overhead (paired p95, <=1.10x bound) and
+                      detection->recovery under seeded per-launch bit
+                      flips (detection_frac, recovery p95, bit-identical
+                      outputs vs a no-fault run); extends
+                      BENCH_fused_serving.json with integrity_rows
 """
 from __future__ import annotations
 
@@ -55,10 +61,11 @@ def main(argv=None):
 
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
-                            bench_int8_fused, bench_model_churn,
-                            bench_multi_model, bench_multi_stream,
-                            bench_pareto, bench_serving_engine,
-                            bench_serving_roofline, bench_slo_traces)
+                            bench_int8_fused, bench_integrity,
+                            bench_model_churn, bench_multi_model,
+                            bench_multi_stream, bench_pareto,
+                            bench_serving_engine, bench_serving_roofline,
+                            bench_slo_traces)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -72,6 +79,7 @@ def main(argv=None):
         "slo_traces": lambda: bench_slo_traces.run(fast=args.fast),
         "model_churn": lambda: bench_model_churn.run(fast=args.fast),
         "multi_stream": lambda: bench_multi_stream.run(fast=args.fast),
+        "integrity": lambda: bench_integrity.run(fast=args.fast),
     }
     if args.only is not None and args.only not in benches:
         # a typo used to silently run ZERO benchmarks and still print

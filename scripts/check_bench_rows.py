@@ -8,7 +8,8 @@ its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
 (model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
 by (model, bucket, schedule), ``multi_model_rows`` by (load,),
 ``slo_trace_rows`` by (trace, tier), ``model_churn_rows`` by
-(models, hot_budget), ``multi_stream_rows`` by (model, load, streams))
+(models, hot_budget), ``multi_stream_rows`` by (model, load, streams),
+``integrity_rows`` by (model, flip_rate))
 and its guarded metric(s), plus the row's host topology (``n_devices``
 + ``backend``) when the bench tagged it.
 ``check`` then fails loudly if, after the benchmarks reran:
@@ -39,7 +40,10 @@ and its guarded metric(s), plus the row's host topology (``n_devices``
   ``hot_over_uncached``, high-water-vs-budget ``resident_over_bound``)
   guarded multiplicatively (``*_ratio`` directions) — the latter two are
   cache-mechanics invariants, so a blow-up there is a real bug, not
-  host noise.  Set the env var to 0 or less to disable
+  host noise.  ``integrity_rows`` guards ``detection_frac`` additively
+  (a [0, 1] rate pinned at 1.0 — every injected bit flip must be
+  caught) and ``scrub_overhead_ratio`` multiplicatively (paired
+  scrubber-on/off p95).  Set the env var to 0 or less to disable
   the regression leg (e.g. on a deliberately slower host); the row-loss
   and label guards always run.  ``scripts/ci.sh`` widens the bound on
   interpret hosts — see the measurement note there.
@@ -70,6 +74,7 @@ SECTIONS = {
     "slo_trace_rows": ("trace", "tier"),
     "model_churn_rows": ("models", "hot_budget"),
     "multi_stream_rows": ("model", "load", "streams"),
+    "integrity_rows": ("model", "flip_rate"),
 }
 
 # guarded metric per section and the direction that counts as regression.
@@ -99,6 +104,15 @@ MULTI_METRICS = {
         ("compression_ratio", "higher_ratio"),
         ("hot_over_uncached", "lower_ratio"),
         ("resident_over_bound", "lower_ratio"),
+    ),
+    # integrity_rows: detection_frac is a [0, 1] rate (must stay at 1.0
+    # — additive pct-point bound); scrub_overhead_ratio is a paired
+    # on/off p95 ratio (multiplicative).  The flip_rate=0 row carries
+    # the scrub metric, the flip rows the detection metric; absent
+    # metrics on a row are skipped, not treated as regressions.
+    "integrity_rows": (
+        ("detection_frac", "higher_abs"),
+        ("scrub_overhead_ratio", "lower_ratio"),
     ),
 }
 

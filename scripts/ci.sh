@@ -15,10 +15,14 @@
 # p95, cache-hit vs uncached latency, evict->reload bit-identity) and
 # bench_multi_stream (the same Poisson trace at n_streams in {1,2,4}
 # under a bounded bucket, plus threaded-frontend and 4-device-sharded
-# bit-exact parity legs) — and rewrites BENCH_fused_serving.json at the
+# bit-exact parity legs) and bench_integrity (background-scrubber
+# hot-path overhead plus detection->recovery under seeded per-launch
+# bit flips, outputs bit-identical to a no-fault run) — and rewrites
+# BENCH_fused_serving.json at the
 # repo root (fp32 rows + int8_rows + serving_engine_rows +
 # schedule_rows + multi_model_rows + slo_trace_rows + model_churn_rows
-# + multi_stream_rows, every guarded row topology-tagged), so every PR
+# + multi_stream_rows + integrity_rows, every guarded row
+# topology-tagged), so every PR
 # leaves the cross-PR perf trajectory current.  A benchmark overrun (budget exceeded) fails
 # CI loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows

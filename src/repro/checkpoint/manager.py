@@ -33,6 +33,7 @@ import jax
 import numpy as np
 
 from ..core import ecl, formats, qat
+from ..runtime.integrity import IntegrityError
 
 SEP = "//"
 
@@ -244,9 +245,23 @@ def export_pack(path: str, pack_or_cold, *, meta: Optional[dict] = None
         "compression_ratio": cold.compression_ratio,
         **(meta or {}),
     }
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=os.path.dirname(path) or ".",
-                           prefix=".tmp_pack_")
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    # a crash between mkdtemp and os.replace leaves an orphaned temp
+    # behind; sweep stale ones (ours are dirs, but tolerate plain *.tmp
+    # files from other writers) before paying for the new write
+    for name in os.listdir(parent):
+        if not (name.startswith(".tmp_pack_") or name.endswith(".tmp")):
+            continue
+        stale = os.path.join(parent, name)
+        try:
+            if os.path.isdir(stale):
+                shutil.rmtree(stale, ignore_errors=True)
+            else:
+                os.remove(stale)
+        except OSError:
+            pass
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".tmp_pack_")
     try:
         np.savez(os.path.join(tmp, "pack.npz"), **payload)
         with open(os.path.join(tmp, "report.json"), "w") as f:
@@ -260,12 +275,45 @@ def export_pack(path: str, pack_or_cold, *, meta: Optional[dict] = None
     return report
 
 
-def load_pack(path: str):
+def load_pack(path: str, *, verify: bool = True):
     """Load an :func:`export_pack` artifact as a
     :class:`~repro.serving.pack_cache.ColdPack` — feed it to
     ``PackCache.add`` (cold registration) or ``PackCache.update`` (plan
-    hot-swap on pack update) without decoding anything here."""
-    from ..serving.pack_cache import cold_pack_from_payload
-    with np.load(os.path.join(path, "pack.npz")) as z:
-        payload = {k: z[k] for k in z.files}
-    return cold_pack_from_payload(payload)
+    hot-swap on pack update) without decoding anything here.
+
+    Partial-write hardening: a truncated / garbled / field-stripped
+    ``pack.npz`` raises a typed
+    :class:`~repro.runtime.integrity.IntegrityError` naming the file
+    instead of a bare numpy/zlib traceback, and (``verify=True``) the
+    stored payload checksums are re-verified before the pack is
+    trusted."""
+    from ..serving.pack_cache import cold_pack_from_payload, \
+        verify_cold_pack
+    npz = os.path.join(path, "pack.npz")
+    try:
+        with np.load(npz) as z:
+            payload = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as exc:       # zipfile/zlib/pickle decode failures
+        raise IntegrityError(
+            f"pack artifact {npz} is truncated or garbled: {exc}",
+            kind="artifact", path=npz) from exc
+    try:
+        cold = cold_pack_from_payload(payload)
+    except IntegrityError as exc:
+        raise IntegrityError(
+            f"pack artifact {npz} failed verification: {exc}",
+            kind="artifact", path=npz) from exc
+    except (KeyError, ValueError) as exc:
+        raise IntegrityError(
+            f"pack artifact {npz} is missing fields (partial write?): "
+            f"{exc}", kind="artifact", path=npz) from exc
+    if verify:
+        try:
+            verify_cold_pack(cold)
+        except IntegrityError as exc:
+            raise IntegrityError(
+                f"pack artifact {npz} failed checksum verification: "
+                f"{exc}", kind="artifact", path=npz) from exc
+    return cold

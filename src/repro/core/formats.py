@@ -42,6 +42,14 @@ class CompressedTensor:
     def size_bytes(self) -> int:
         return (self.size_bits + 7) // 8
 
+    def canonical_items(self):
+        """Payload arrays in sorted key order — the canonical walk every
+        payload-level checksum (``runtime.integrity.payload_crc``) and
+        byte-level fault injector uses, so digests are stable across
+        dict insertion orders."""
+        return [(key, np.asarray(self.payload[key]))
+                for key in sorted(self.payload)]
+
 
 def _pack_nibbles(flat: np.ndarray) -> np.ndarray:
     flat = flat.astype(np.uint8)

@@ -238,16 +238,34 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
               f"models / "
               f"{args.hot_bytes if args.hot_bytes else '∞'} bytes — "
               "models registered compressed, decoded on first traffic")
-    frontend = serving.ServingFrontend(cache=cache, streams=args.streams)
+    integrity = True if args.verify_launch else None
+    frontend = serving.ServingFrontend(
+        cache=cache, streams=args.streams,
+        scrub_interval_s=(None if args.scrub_interval is None
+                          else args.scrub_interval / 1e3))
+    if args.verify_launch or args.scrub_interval is not None:
+        print("integrity: "
+              + ("per-launch checksum verification + output screen"
+                 if args.verify_launch else "no launch guard")
+              + (f", scrubber every {args.scrub_interval:.1f} ms"
+                 if args.scrub_interval is not None else ""))
     if args.streams > 1:
         devs = [d if d is not None else "<default>"
                 for d in frontend._devices]
         print(f"streams: {args.streams} replicated execution streams "
               f"(devices {devs})")
     for name, (mplan, mx_) in models.items():
+        wrap = None
+        if args.inject_fault > 0 or args.flip_rate > 0:
+            def wrap(p):
+                return serving.FaultInjector(p, rate=args.inject_fault,
+                                             flip_rate=args.flip_rate)
         if cache is not None:
             # compressed-tier registration: the frontend holds the cold
-            # pack; the resolved plan lives (and churns) under the LRU
+            # pack; the resolved plan lives (and churns) under the LRU.
+            # The injector (if any) wraps the cache handle and the guard
+            # wraps the injector, so injected corruption is detected by
+            # the guard and recovered from the verified cold tier.
             frontend.register_pack(
                 name, mplan.pack,
                 plan_kwargs={
@@ -257,15 +275,15 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
                     "calib": ({"act_scales": list(mplan.act_scales)}
                               if mplan.act_scales is not None else None),
                 },
+                wrap=wrap, integrity=integrity,
                 tier=tiers[name], max_delay=delays[name],
                 max_queued_rows=args.max_queued)
             continue
-        target = mplan
-        if args.inject_fault > 0:
-            target = serving.FaultInjector(mplan, rate=args.inject_fault)
+        target = mplan if wrap is None else wrap(mplan)
         frontend.register(name, target, tier=tiers[name],
                           max_delay=delays[name],
-                          max_queued_rows=args.max_queued)
+                          max_queued_rows=args.max_queued,
+                          integrity=integrity)
         if tiers[name] is not None or delays[name] is not None:
             b = frontend.registry.batcher(name)
             print(f"model [{name}]: tier {b.tier.name}, max_delay "
@@ -287,6 +305,10 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
                 # quarantined model under --inject-fault: its futures
                 # carry the injected root cause instead of hanging.
                 rejected.append((name, i, f"fault: {exc}"))
+            except serving.IntegrityError as exc:
+                # corruption that could not be recovered (no cold tier,
+                # or the cold copy failed too): typed root cause.
+                rejected.append((name, i, f"corrupted: {exc}"))
     dt = time.time() - t0
     n = len(served)
     for name in models:
@@ -316,6 +338,17 @@ def serve_mlp_async(args, cfg, plan, x, y_ref):
         print(f"degradation: {fs['launch_failures']} launch failures, "
               f"{fs['retries']} retries, {fs['fallbacks']} chain "
               f"fallbacks, quarantined {fs['quarantined'] or 'none'}")
+    if args.flip_rate > 0 or args.verify_launch \
+            or args.scrub_interval is not None:
+        it = frontend.stats["integrity"]
+        sc = frontend.stats["scrub"]
+        rec = (f", recovery p95 "
+               f"{np.percentile(it['recovery_s'], 95) * 1e3:.2f} ms"
+               if it["recovery_s"] else "")
+        print(f"integrity: {it['detected']} corruptions detected, "
+              f"{it['recovered']} recovered from cold tier{rec}; "
+              f"scrubber {sc['cycles']} cycles / {sc['checked']} checks "
+              f"({sc['deferred']} busy deferrals)")
     if cache is not None:
         d = cache.describe()
         print(f"pack cache: {d['resolves']} resolves / {d['hits']} hits "
@@ -379,7 +412,26 @@ def main(argv=None):
                     metavar="RATE",
                     help="with --engine --async: wrap every plan in a "
                          "FaultInjector failing launches at RATE to "
-                         "exercise the retry/fallback/quarantine ladder")
+                         "exercise the retry/fallback/quarantine ladder "
+                         "(composes with --max-hot-models/--hot-bytes: "
+                         "the injector wraps the cache handle)")
+    ap.add_argument("--flip-rate", type=float, default=0.0,
+                    metavar="RATE",
+                    help="with --engine --async: FaultInjector bit-flip "
+                         "corruption of live plan operands at RATE per "
+                         "launch; requires --verify-launch (detection) "
+                         "and, for transparent recovery, the pack cache "
+                         "flags (cold-tier re-decode)")
+    ap.add_argument("--verify-launch", action="store_true",
+                    help="with --engine --async: wrap every model in a "
+                         "GuardedPlan — per-launch operand checksum "
+                         "verification + NaN/Inf output screen")
+    ap.add_argument("--scrub-interval", type=float, default=None,
+                    metavar="MS",
+                    help="with --engine --async: background integrity "
+                         "scrubber cadence in ms (idle-aware; verifies "
+                         "cold payload checksums and resident guarded "
+                         "plans)")
     ap.add_argument("--max-hot-models", type=int, default=None,
                     metavar="N",
                     help="with --engine --async: register models by "
@@ -419,10 +471,15 @@ def main(argv=None):
         if not args.async_frontend:
             raise SystemExit("--max-hot-models/--hot-bytes apply to the "
                              "async frontend: add --engine --async")
-        if args.inject_fault > 0:
-            raise SystemExit("--inject-fault registers wrapped plans "
-                             "directly; it cannot combine with the pack "
-                             "cache flags")
+    if (args.flip_rate > 0 or args.scrub_interval is not None
+            or args.verify_launch) and not args.async_frontend:
+        raise SystemExit("--flip-rate/--scrub-interval/--verify-launch "
+                         "apply to the async frontend: add --engine "
+                         "--async")
+    if args.flip_rate > 0 and not args.verify_launch:
+        raise SystemExit("--flip-rate corrupts live weights; add "
+                         "--verify-launch so the corruption is caught "
+                         "(and, with the pack cache flags, recovered)")
     if args.multi and not (args.engine and args.async_frontend):
         raise SystemExit("--multi requires --engine --async")
     if args.async_frontend and not args.engine:

@@ -47,6 +47,7 @@ import numpy as np
 
 from ..configs.paper_mlps import MLPConfig
 from ..core import acm, bitplanes, ecl, formats, qat
+from ..runtime import integrity
 from .. import serving
 from ..nn.module import QuantCtx
 
@@ -162,6 +163,11 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
             "format": fmt,
             "size_bytes": ct.size_bytes,
             "dense_bytes": codes_np.size * 4,   # fp32 original, for CR
+            # frozen-at-birth content digest: every downstream tier
+            # (GuardedPlan, compress_pack, export_pack) verifies against
+            # this same value
+            "crc": integrity.layer_content_crc(
+                codes_np, node["omega"], alpha1, bias, alpha2),
         })
     return {"layers": layers, "act_bits": act_bits}
 

@@ -96,22 +96,66 @@ class FaultInjector:
       chain path does not share.  With ``only_fused=False`` the fault is
       model-wide and the ladder ends in quarantine.
 
+    Beyond raising, the injector models **silent data corruption**:
+    seeded bit-flips landed in the live bytes rather than thrown as
+    exceptions, which is what the integrity subsystem
+    (``runtime.integrity`` + the frontend's recovery rung) exists to
+    catch:
+
+    * ``flip_rate`` / ``flip_nth`` — when a launch flips (probabilistic
+      per launch, or deterministic launch indices);
+    * ``flip_targets`` — where the flip lands, drawn uniformly per
+      event: ``"packed"`` (a resolved plan's packed bit-plane operand —
+      one nibble, i.e. one 4-bit code, corrupted), ``"epilogue"`` (one
+      byte of omega/alpha1/bias fp32), or ``"cold"`` (one byte of a
+      cold-tier ``CompressedTensor`` payload, reached through a wrapped
+      :class:`~repro.serving.pack_cache.CachedPlan`).
+
+    Every RNG path is explicitly seeded and *separate*: the failure
+    schedule draws from ``seed`` and the flip schedule from a child of
+    ``seed``, so enabling flips never perturbs the failure sequence (and
+    vice versa) — two runs with the same seed produce identical
+    ``failures`` and ``flips`` logs (pinned by the reproducibility
+    regression test).
+
     ``injected`` counts fired faults; ``launches`` counts every launch
-    attempt.  Single-dispatch-thread use (the frontend's contract) needs
-    no locking here.
+    attempt; ``failures`` / ``flips`` log the exact schedule (launch
+    index, and for flips the target / layer / byte / bit).  Plan-operand
+    flips are applied in place and the kernel operand memos invalidated
+    (``ops.forget_pack_operands``), so the corrupted bytes genuinely
+    flow into subsequent launches.  Single-dispatch-thread use (the
+    frontend's contract) needs no locking here.
     """
+
+    FLIP_TARGETS = ("packed", "epilogue", "cold")
 
     def __init__(self, plan, *, rate: float = 0.0, seed: int = 0,
                  fail_nth: tuple = (), fail_buckets: tuple = (),
-                 only_fused: bool = False):
+                 only_fused: bool = False, flip_rate: float = 0.0,
+                 flip_nth: tuple = (), flip_targets: tuple = ("packed",)):
         self._plan = plan
         self.rate = rate
         self.fail_nth = frozenset(fail_nth)
         self.fail_buckets = frozenset(fail_buckets)
         self.only_fused = only_fused
+        self.flip_rate = flip_rate
+        self.flip_nth = frozenset(flip_nth)
+        for t in flip_targets:
+            if t not in self.FLIP_TARGETS:
+                raise ValueError(f"unknown flip target {t!r}; choose "
+                                 f"from {self.FLIP_TARGETS}")
+        self.flip_targets = tuple(flip_targets)
         self._rng = np.random.default_rng(seed)
+        self._flip_rng = np.random.default_rng(
+            np.random.SeedSequence((int(seed), 0x4B17F11B)))
         self.launches = 0
         self.injected = 0
+        self.failures: list = []    # launch indices that raised
+        self.flips: list = []       # (launch, target, layer, field, byte, bit)
+
+    @property
+    def flipped(self) -> int:
+        return len(self.flips)
 
     @property
     def plan(self):
@@ -128,12 +172,80 @@ class FaultInjector:
                 return
         idx = self.launches
         self.launches += 1
+        self._maybe_flip(idx)
         fire = (bucket in self.fail_buckets or idx in self.fail_nth
                 or (self.rate > 0 and self._rng.random() < self.rate))
         if fire:
             self.injected += 1
+            self.failures.append(idx)
             raise InjectedFault(
                 f"injected launch failure (launch {idx}, bucket {bucket})")
+
+    # ------------------------------------------------- silent corruption
+
+    def _maybe_flip(self, idx: int) -> None:
+        fire = idx in self.flip_nth
+        if self.flip_rate > 0 and \
+                self._flip_rng.random() < self.flip_rate:
+            fire = True
+        if not fire:
+            return
+        target = self.flip_targets[
+            int(self._flip_rng.integers(len(self.flip_targets)))]
+        if target == "cold":
+            self._flip_cold(idx)
+        else:
+            self._flip_hot(idx, target)
+
+    def _flip_hot(self, idx: int, target: str) -> None:
+        """Flip one bit of a resolved plan's live operands: the packed
+        bit-plane bytes or an epilogue fp32."""
+        layers = self._plan.layers
+        li = int(self._flip_rng.integers(len(layers)))
+        layer = layers[li]
+        if target == "packed":
+            field = "packed"
+            host = np.asarray(layer["packed"], np.uint8).copy()
+        else:
+            field = ("omega", "alpha1", "bias")[
+                int(self._flip_rng.integers(3))]
+            host = np.asarray(layer[field], np.float32).copy()
+        flat = host.reshape(-1).view(np.uint8)
+        byte = int(self._flip_rng.integers(flat.size))
+        bit = int(self._flip_rng.integers(8))
+        flat[byte] ^= np.uint8(1 << bit)
+        import jax.numpy as jnp
+        layer[field] = jnp.asarray(host)
+        # the kernel-level operand memos are keyed by layer-list identity
+        # under a no-mutation assumption this flip just violated — drop
+        # them so the corrupted bytes reach the next launch
+        from ..kernels import ops as kops
+        kops.forget_pack_operands(layers)
+        self.flips.append((idx, target, li, field, byte, bit))
+
+    def _flip_cold(self, idx: int) -> None:
+        """Flip one bit of the cold-tier compressed payload backing a
+        wrapped CachedPlan (in place: the cache's ColdPack references
+        the same arrays)."""
+        from ..runtime.integrity import unwrap_chain
+        from ..serving.pack_cache import CachedPlan
+        cached = next((p for p in unwrap_chain(self._plan)
+                       if isinstance(p, CachedPlan)), None)
+        if cached is None:
+            raise ValueError(
+                'flip target "cold" needs a cache-backed plan '
+                "(CachedPlan) somewhere in the wrapped chain")
+        cold = cached.cache.cold(cached.model_id)
+        li = int(self._flip_rng.integers(len(cold.layers)))
+        ct = cold.layers[li].codes
+        items = [(key, arr) for key, arr in ct.canonical_items()
+                 if arr.nbytes > 0]
+        key, arr = items[int(self._flip_rng.integers(len(items)))]
+        flat = ct.payload[key].view(np.uint8).reshape(-1)
+        byte = int(self._flip_rng.integers(flat.size))
+        bit = int(self._flip_rng.integers(8))
+        flat[byte] ^= np.uint8(1 << bit)
+        self.flips.append((idx, "cold", li, key, byte, bit))
 
     def entry(self, bucket: int):
         inner = self._plan.entry(bucket)

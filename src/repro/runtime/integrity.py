@@ -1,0 +1,306 @@
+"""End-to-end integrity for compact packs: checksums, guards, recovery.
+
+A FantastIC4 pack concentrates an entire fp32 layer into a handful of
+4-bit bit-plane bytes plus a §V epilogue — the highest value-density
+bytes in the system, where a single flipped bit silently corrupts a
+whole column.  This module makes corruption *detectable* at every tier
+the bytes live in:
+
+* ``layer_content_crc`` — the canonical per-layer checksum over the
+  TRUE-shape code matrix (``codes[:k]``, uint8) and the epilogue arrays
+  (omega / alpha1 / bias / alpha2, float32).  It is invariant across
+  representations: the frozen hot dict (row-pair packed nibbles), the
+  cold ``CompressedTensor`` tier, and the on-disk ``pack.npz`` artifact
+  all verify against the same value, so a flip anywhere in the chain is
+  caught at the next boundary crossing.
+* ``payload_crc`` — a cheap checksum over a ``CompressedTensor``'s raw
+  payload arrays; lets the cold tier be scrubbed without decoding.
+* ``GuardedPlan`` — a delegating plan proxy that re-verifies the live
+  operands after each launch (detection happens before results are
+  returned, so the micro-batcher's requeue-on-failure keeps the bucket
+  intact), screens outputs for NaN/Inf, and can replay a golden canary
+  probe through the live plan.
+* ``IntegrityError`` — the typed failure every verification raises;
+  ``ServingFrontend`` catches it to run the recovery rung (evict the
+  poisoned plan, re-decode from the verified cold tier).
+
+Checksum algorithm: CRC32C when the optional ``crc32c`` package is
+importable (hardware-accelerated on most hosts), else zlib's CRC-32 —
+no new dependencies.  Artifacts record which algorithm produced their
+digests (``CRC_ALGO``) so a mismatched reader fails loudly instead of
+mis-verifying.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+try:                                    # pragma: no cover - env-dependent
+    from crc32c import crc32c as _crc_impl
+
+    CRC_ALGO = "crc32c"
+except ImportError:                     # no new deps: fall back to zlib
+    import zlib
+
+    _crc_impl = zlib.crc32
+    CRC_ALGO = "crc32"
+
+
+class IntegrityError(RuntimeError):
+    """Typed corruption signal.
+
+    ``kind`` says which tier failed verification:
+
+    * ``"hot"``      — a resolved plan's live operands drifted from the
+      frozen checksums (recoverable: re-decode from cold);
+    * ``"cold"``     — a cold-tier payload or its decoded content failed
+      (NOT recoverable from this cache: quarantine);
+    * ``"artifact"`` — an on-disk pack (``pack.npz``) is truncated,
+      garbled, or fails its stored checksums;
+    * ``"content"``  — a hot pack's stamped ``"crc"`` disagrees with its
+      arrays at compress time;
+    * ``"output"``   — a launch produced NaN/Inf;
+    * ``"canary"``   — the golden probe's output changed.
+    """
+
+    def __init__(self, message: str, *, kind: str = "hot",
+                 model_id: Optional[str] = None,
+                 layer: Optional[int] = None,
+                 path: Optional[str] = None):
+        super().__init__(message)
+        self.kind = kind
+        self.model_id = model_id
+        self.layer = layer
+        self.path = path
+
+
+def _crc(data, crc: int = 0) -> int:
+    return _crc_impl(data, crc) & 0xFFFFFFFF
+
+
+def crc_update(crc: int, arr: np.ndarray, name: str = "") -> int:
+    """Fold one array into a running CRC.  The header (name, dtype,
+    shape) is part of the digest so a reshape or dtype change never
+    aliases to the same value."""
+    arr = np.ascontiguousarray(arr)
+    header = f"{name}:{arr.dtype.str}:{arr.shape}".encode()
+    crc = _crc(header, crc)
+    return _crc(arr.tobytes(), crc)
+
+
+def layer_content_crc(codes: np.ndarray, omega, alpha1, bias,
+                      alpha2) -> int:
+    """Canonical checksum of one frozen layer: true-shape (k, n) uint8
+    codes + float32 epilogue arrays.  Representation-independent — hot
+    packed dicts, cold ``CompressedTensor`` layers, and disk artifacts
+    all reduce to this before digesting."""
+    crc = crc_update(0, np.asarray(codes, np.uint8), "codes")
+    for name, a in (("omega", omega), ("alpha1", alpha1),
+                    ("bias", bias), ("alpha2", alpha2)):
+        crc = crc_update(crc, np.asarray(a, np.float32), name)
+    return crc
+
+
+def unpack_codes_np(packed: np.ndarray, k: int, n: int) -> np.ndarray:
+    """Host-side inverse of ``bitplanes.pack_codes_rows``: row-pair
+    nibbles back to the true (k, n) uint8 code matrix (dropping the
+    odd-k zero pad row if one was appended at freeze time)."""
+    packed = np.asarray(packed, np.uint8)
+    lo = packed & np.uint8(0xF)
+    hi = packed >> np.uint8(4)
+    full = np.stack([lo, hi], axis=1).reshape(2 * packed.shape[0], n)
+    return full[:k]
+
+
+def hot_layer_crc(layer: Dict[str, Any]) -> int:
+    """``layer_content_crc`` of a hot (resolved / frozen) layer dict."""
+    k, n = (int(s) for s in layer["shape"])
+    codes = unpack_codes_np(layer["packed"], k, n)
+    return layer_content_crc(codes, layer["omega"], layer["alpha1"],
+                             layer["bias"], layer["alpha2"])
+
+
+def stamp_pack_crcs(pack: Dict[str, Any]) -> Dict[str, Any]:
+    """Stamp ``layer["crc"]`` into every layer of a frozen pack that
+    does not already carry one (idempotent; mutates in place)."""
+    for layer in pack["layers"]:
+        if layer.get("crc") is None:
+            layer["crc"] = hot_layer_crc(layer)
+    return pack
+
+
+def payload_crc(ct) -> int:
+    """Checksum of a ``CompressedTensor``'s raw payload (format tag,
+    logical shape, and every payload array in sorted key order) —
+    verifies the cold tier without paying for a decode."""
+    crc = _crc(f"{ct.format}:{tuple(ct.shape)}".encode())
+    for key, arr in ct.canonical_items():
+        crc = crc_update(crc, arr, key)
+    return crc
+
+
+def unwrap_chain(plan, limit: int = 8) -> List[Any]:
+    """The plan and every ``.plan``-linked inner proxy, outermost first.
+    Wrapper proxies (GuardedPlan, FaultInjector) expose the wrapped
+    plan as ``.plan``; terminal plans (ExecutionPlan, CachedPlan) do
+    not, which ends the walk."""
+    chain: List[Any] = []
+    p = plan
+    while p is not None and len(chain) < limit:
+        chain.append(p)
+        nxt = getattr(p, "plan", None)
+        if nxt is p:
+            break
+        p = nxt
+    return chain
+
+
+@dataclass(frozen=True)
+class IntegrityPolicy:
+    """What ``GuardedPlan`` checks and when.
+
+    ``verify_launch``   re-checksum the live operands after every launch
+                        (the acceptance guarantee: every corrupted
+                        launch is caught before results return).
+    ``screen_outputs``  reject launches that produce NaN/Inf.
+    ``canary``          keep a golden probe (seeded input + captured
+                        output) and re-play it through the live plan at
+                        scrub time; bit-equality required.  Only sound
+                        while the plan's bucket bindings are stable — a
+                        degradation-ladder ``demote_bucket`` legally
+                        changes fp32 accumulation order, so leave the
+                        canary off for models subject to fallback.
+    """
+
+    verify_launch: bool = True
+    screen_outputs: bool = True
+    canary: bool = False
+    canary_rows: int = 1
+    canary_seed: int = 0
+
+
+class GuardedPlan:
+    """Delegating plan proxy that verifies operand checksums and screens
+    outputs on the live launch path.
+
+    Expected per-layer checksums come from the stamped ``layer["crc"]``
+    when the pack carries them (freeze / decode both stamp), else are
+    computed from the first-seen operands (trust-on-first-use for
+    hand-built test packs).  Verification runs AFTER the inner launch —
+    a flip injected during the same call is still caught before results
+    are returned, and the raising entry keeps the micro-batcher's
+    requeue-on-failure contract intact.
+
+    After the frontend's recovery rung re-decodes from the cold tier,
+    the same expected checksums re-verify the fresh operands — recovery
+    is bit-identical, so no re-arming is needed.
+    """
+
+    def __init__(self, plan, *, policy: Optional[IntegrityPolicy] = None,
+                 model_id: Optional[str] = None):
+        self._plan = plan
+        self.policy = policy or IntegrityPolicy()
+        self.model_id = model_id
+        self._expected: Optional[List[int]] = None
+        self._canary_x: Optional[np.ndarray] = None
+        self._canary_y: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+        self.stats = {"verifies": 0, "detected": 0, "screened": 0,
+                      "canary_runs": 0, "canary_failures": 0}
+
+    # -- delegation --------------------------------------------------
+    @property
+    def plan(self):
+        return self._plan
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    # -- checksums ---------------------------------------------------
+    def expected_crcs(self) -> List[int]:
+        with self._lock:
+            if self._expected is None:
+                exp = []
+                for layer in self._plan.layers:
+                    crc = layer.get("crc")
+                    exp.append(int(crc) if crc is not None
+                               else hot_layer_crc(layer))
+                self._expected = exp
+            return list(self._expected)
+
+    def verify(self) -> None:
+        """Re-checksum the live operands against the frozen values."""
+        expected = self.expected_crcs()
+        layers = self._plan.layers
+        if len(layers) != len(expected):
+            raise IntegrityError(
+                f"layer count changed ({len(expected)} -> {len(layers)})",
+                kind="hot", model_id=self.model_id)
+        for i, (layer, exp) in enumerate(zip(layers, expected)):
+            got = hot_layer_crc(layer)
+            if got != exp:
+                self.stats["detected"] += 1
+                raise IntegrityError(
+                    f"hot operand checksum mismatch at layer {i} "
+                    f"(expected {exp:#010x}, got {got:#010x})",
+                    kind="hot", model_id=self.model_id, layer=i)
+        self.stats["verifies"] += 1
+
+    def _after_launch(self, y):
+        if self.policy.verify_launch:
+            self.verify()
+        if self.policy.screen_outputs:
+            host = np.asarray(y)
+            if not bool(np.all(np.isfinite(host))):
+                self.stats["screened"] += 1
+                raise IntegrityError(
+                    "non-finite values in launch output",
+                    kind="output", model_id=self.model_id)
+        return y
+
+    # -- launch surface ----------------------------------------------
+    def entry(self, bucket: int):
+        inner = self._plan.entry(bucket)
+
+        def guarded_entry(xb):
+            return self._after_launch(inner(xb))
+
+        return guarded_entry
+
+    def run(self, x):
+        return self._after_launch(self._plan.run(x))
+
+    # -- canary ------------------------------------------------------
+    def arm_canary(self, x: Optional[np.ndarray] = None) -> None:
+        """Capture the golden (input, output) pair through the live
+        plan.  Called lazily by the first ``check_canary`` when the
+        policy enables the canary."""
+        if x is None:
+            rng = np.random.default_rng(self.policy.canary_seed)
+            x = rng.standard_normal(
+                (self.policy.canary_rows, self._plan.d_in)).astype(
+                    np.float32)
+        self._canary_x = np.asarray(x, np.float32)
+        self._canary_y = np.asarray(self._plan.run(self._canary_x))
+
+    def check_canary(self) -> None:
+        if self._canary_y is None:
+            self.arm_canary()
+            return
+        y = np.asarray(self._plan.run(self._canary_x))
+        if y.shape != self._canary_y.shape or \
+                not np.array_equal(y, self._canary_y):
+            self.stats["canary_failures"] += 1
+            raise IntegrityError(
+                "canary probe output changed", kind="canary",
+                model_id=self.model_id)
+        self.stats["canary_runs"] += 1
+
+    def describe(self) -> Dict[str, Any]:
+        inner = self._plan.describe() if hasattr(self._plan, "describe") \
+            else {}
+        return {**inner, "guarded": True,
+                "integrity_stats": dict(self.stats)}

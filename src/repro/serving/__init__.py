@@ -48,6 +48,8 @@ the benchmarks, the examples) flows through this package instead of
 threading mode keywords down to the kernels.
 """
 from ..runtime.fault import FaultInjector, InjectedFault      # noqa: F401
+from ..runtime.integrity import (GuardedPlan, IntegrityError,  # noqa: F401
+                                 IntegrityPolicy, unwrap_chain)
 from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
                     adopt_plan, build_plan, calibrate_act_scales,
                     forget_plan, get_plan)
@@ -56,7 +58,7 @@ from .slo import (TIERS, AdmissionController, Rejected,       # noqa: F401
 from .batcher import Completion, MicroBatcher, Taken, replay  # noqa: F401
 from .pack_cache import (CachedPlan, ColdPack, PackCache,     # noqa: F401
                          compress_pack, decode_pack,
-                         plan_resident_bytes)
+                         plan_resident_bytes, verify_cold_pack)
 from .sharded import ShardedStack                             # noqa: F401
 from .frontend import (ModelRegistry, RetryPolicy, Served,    # noqa: F401
                        ServingFrontend)

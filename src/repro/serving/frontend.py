@@ -141,11 +141,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..runtime.integrity import (GuardedPlan, IntegrityError,
+                                 IntegrityPolicy, unwrap_chain)
 from .batcher import MicroBatcher, Taken
-from .pack_cache import CachedPlan, ColdPack, PackCache
+from .pack_cache import (CachedPlan, ColdPack, PackCache,
+                         verify_cold_pack)
 from .plans import ExecutionPlan, forget_plan
-from .slo import (REJECT_QUARANTINED, REJECT_UNREGISTERED, Rejected,
-                  resolve_tier)
+from .slo import (REJECT_CORRUPTED, REJECT_QUARANTINED,
+                  REJECT_UNREGISTERED, Rejected, resolve_tier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,11 +162,19 @@ class RetryPolicy:
                        per-layer chain before giving up on the model.
     ``quarantine``   — isolate the model after the ladder; ``False``
                        escalates to the pre-ladder contract instead
-                       (stream-fatal, every future fails)."""
+                       (stream-fatal, every future fails).
+    ``recover``      — detected corruption (a typed ``IntegrityError``
+                       from a :class:`~repro.runtime.integrity.\
+GuardedPlan`) takes the recovery rung instead of the retry ladder:
+                       evict the poisoned plan and re-decode from the
+                       verified cold tier (bit-identical — captured
+                       ``act_scales`` survive).  Only quarantines when
+                       the cold copy itself fails verification."""
     max_retries: int = 2
     backoff_s: float = 0.0
     fallback: bool = True
     quarantine: bool = True
+    recover: bool = True
 
 
 @dataclasses.dataclass
@@ -206,7 +217,8 @@ class ModelRegistry:
                  max_bucket: Optional[int] = None,
                  max_queued_rows: Optional[int] = None,
                  service_times: Optional[Dict[int, float]] = None,
-                 keep_results: bool = False) -> MicroBatcher:
+                 keep_results: bool = False,
+                 integrity=None) -> MicroBatcher:
         """Register a model.  ``tier`` (an ``SLOTier`` or a name from
         ``serving.TIERS``) attaches a latency class: its ``max_delay``
         becomes the batching budget (an explicit ``max_delay`` still
@@ -214,7 +226,14 @@ class ModelRegistry:
         batcher's cost model (seed it with measured per-bucket
         ``service_times``; live launches keep it current via EWMA).
         ``max_queued_rows`` bounds the queue — submits past it are
-        rejected, typed, instead of growing memory."""
+        rejected, typed, instead of growing memory.  ``integrity``
+        (``True`` or an :class:`~repro.runtime.integrity.\
+IntegrityPolicy`) wraps the plan in a ``GuardedPlan`` — per-launch
+        operand checksums, NaN/Inf output screen, scrubbable surface."""
+        if integrity:
+            policy = integrity if isinstance(integrity, IntegrityPolicy) \
+                else IntegrityPolicy()
+            plan = GuardedPlan(plan, policy=policy, model_id=model_id)
         resolved = resolve_tier(tier) if tier is not None else None
         if max_delay is None and resolved is None:
             max_delay = 2e-3          # pre-tier default, kept stable
@@ -234,6 +253,7 @@ class ModelRegistry:
     def register_pack(self, model_id: str,
                       pack: "dict | ColdPack", *,
                       plan_kwargs: Optional[dict] = None,
+                      wrap: Optional[Callable] = None,
                       **reg_kwargs) -> MicroBatcher:
         """Register a model by its *pack* (frozen serving pack or cold
         :class:`~.pack_cache.ColdPack`) through the registry's
@@ -241,14 +261,19 @@ class ModelRegistry:
         first traffic, and its resolved plan lives under the cache's LRU
         budget.  A registry built without a cache gets an unbounded one
         on first use.  ``plan_kwargs`` go to the plan resolve
-        (``act_dtype=...``, ``max_bucket=...``); the remaining kwargs are
-        :meth:`register`'s (tier, max_delay, ...)."""
+        (``act_dtype=...``, ``max_bucket=...``); ``wrap`` (a callable)
+        interposes a proxy between the cache handle and the batcher —
+        e.g. a ``runtime.fault.FaultInjector``, which composes with
+        ``integrity=`` as GuardedPlan(wrap(CachedPlan)) so injected
+        corruption is caught by the guard; the remaining kwargs are
+        :meth:`register`'s (tier, max_delay, integrity, ...)."""
         with self._lock:
             if self.cache is None:
                 self.cache = PackCache()
         proxy = self.cache.add(model_id, pack, plan_kwargs=plan_kwargs)
+        plan = proxy if wrap is None else wrap(proxy)
         try:
-            return self.register(model_id, proxy, **reg_kwargs)
+            return self.register(model_id, plan, **reg_kwargs)
         except BaseException:
             self.cache.remove(model_id)
             raise
@@ -269,8 +294,12 @@ class ModelRegistry:
             plan = self._plans.pop(model_id)
             batcher = self._batchers.pop(model_id)
         dropped = batcher.drop_all()
-        if isinstance(plan, CachedPlan):
-            plan.cache.remove(model_id)
+        # the registered plan may be wrapped (GuardedPlan / FaultInjector
+        # proxies) — release the *innermost* plan's caches
+        target = next((p for p in unwrap_chain(plan)
+                       if isinstance(p, CachedPlan)), None)
+        if target is not None:
+            target.cache.remove(model_id)
         else:
             pack = getattr(plan, "pack", None)
             if isinstance(pack, dict):
@@ -320,11 +349,20 @@ class ServingFrontend:
                  retry_policy: Optional[RetryPolicy] = RetryPolicy(),
                  cache: Optional[PackCache] = None,
                  streams: Optional[int] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 scrub_interval_s: Optional[float] = None,
+                 stall_threshold_s: Optional[float] = None):
         self.registry = registry if registry is not None \
             else ModelRegistry(clock=clock, cache=cache)
         self.clock = self.registry.clock
         self.retry_policy = retry_policy
+        # background scrubber cadence (None disables the thread;
+        # scrub_once() is always callable) and the launch-watchdog
+        # threshold (None disables check_stalls' flagging)
+        self.scrub_interval_s = scrub_interval_s
+        self.stall_threshold_s = stall_threshold_s
+        self._scrub_stop = threading.Event()
+        self._scrub_thread: Optional[threading.Thread] = None
         if streams is None:
             streams = len(devices) if devices else 1
         if streams < 1:
@@ -352,6 +390,7 @@ class ServingFrontend:
         self._draining = True
         self._error: Optional[BaseException] = None
         self._quarantined: set = set()
+        self._quarantine_reasons: Dict[str, str] = {}
         self._fail_streak: Dict[str, int] = {}
         # multi-stream state (all no-ops at streams=1): per-stream ticket
         # queues, estimated-backlog accounting for the JSW assignment,
@@ -366,8 +405,16 @@ class ServingFrontend:
         self.stats = {"launches": 0, "rejected": 0, "launch_failures": 0,
                       "retries": 0, "fallbacks": 0, "quarantined": [],
                       "by_model": {},
+                      "integrity": {"detected": 0, "recovered": 0,
+                                    "recovery_failed": 0,
+                                    "recovery_s": []},
+                      "scrub": {"cycles": 0, "checked": 0, "detected": 0,
+                                "recovered": 0, "deferred": 0,
+                                "errors": 0},
                       "streams": [{"launches": 0, "launch_failures": 0,
-                                   "busy_s": 0.0, "quarantined": False}
+                                   "busy_s": 0.0, "quarantined": False,
+                                   "last_launch_s": None,
+                                   "inflight": False, "stalled": False}
                                   for _ in range(streams)]}
 
     def _model_stats(self, model_id: str) -> dict:
@@ -391,6 +438,13 @@ class ServingFrontend:
             self._thread = threading.Thread(
                 target=self._loop, name="serving-frontend", daemon=True)
             self._thread.start()
+            if self.scrub_interval_s is not None and \
+                    self._scrub_thread is None:
+                self._scrub_stop = threading.Event()
+                self._scrub_thread = threading.Thread(
+                    target=self._scrub_loop, name="serving-scrubber",
+                    daemon=True)
+                self._scrub_thread.start()
         return self
 
     def close(self, *, drain: bool = True,
@@ -401,6 +455,12 @@ class ServingFrontend:
         dispatch thread is still draining after ``timeout`` — the caller
         must retry (idempotent) rather than believe the stream stopped;
         futures are only cancelled once the thread is provably dead."""
+        scrubber = self._scrub_thread
+        if scrubber is not None:
+            self._scrub_stop.set()
+            scrubber.join(timeout)
+            if not scrubber.is_alive():
+                self._scrub_thread = None
         with self._cond:
             self._draining = drain
             if self._running:
@@ -433,32 +493,41 @@ class ServingFrontend:
                  max_delay: Optional[float] = None,
                  max_bucket: Optional[int] = None,
                  max_queued_rows: Optional[int] = None,
-                 service_times: Optional[Dict[int, float]] = None
-                 ) -> MicroBatcher:
+                 service_times: Optional[Dict[int, float]] = None,
+                 integrity=None) -> MicroBatcher:
         batcher = self.registry.register(model_id, plan, tier=tier,
                                          max_delay=max_delay,
                                          max_bucket=max_bucket,
                                          max_queued_rows=max_queued_rows,
-                                         service_times=service_times)
+                                         service_times=service_times,
+                                         integrity=integrity)
         self._model_stats(model_id)
         with self._cond:
             # a fresh registration under a quarantined id is a new model
             # (the old one was unregistered): it serves, not auto-rejects
             self._quarantined.discard(model_id)
+            self._quarantine_reasons.pop(model_id, None)
             self._cond.notify_all()
         return batcher
 
     def register_pack(self, model_id: str, pack, *,
                       plan_kwargs: Optional[dict] = None,
+                      wrap: Optional[Callable] = None,
                       **reg_kwargs) -> MicroBatcher:
         """Compressed-tier registration (see
         :meth:`ModelRegistry.register_pack`): the model stays in its
-        entropy-coded cold form until first traffic."""
+        entropy-coded cold form until first traffic.  ``integrity=``
+        wraps the cache handle in a GuardedPlan; together with the cold
+        tier this enables the recovery rung — detected corruption
+        re-decodes from the verified compressed copy instead of
+        quarantining."""
         batcher = self.registry.register_pack(
-            model_id, pack, plan_kwargs=plan_kwargs, **reg_kwargs)
+            model_id, pack, plan_kwargs=plan_kwargs, wrap=wrap,
+            **reg_kwargs)
         self._model_stats(model_id)
         with self._cond:
             self._quarantined.discard(model_id)
+            self._quarantine_reasons.pop(model_id, None)
             self._cond.notify_all()
         return batcher
 
@@ -509,10 +578,15 @@ class ServingFrontend:
             if model_id in self._quarantined:
                 self.stats["rejected"] += 1
                 self._model_stats(model_id)["rejected"] += 1
-                fut.set_exception(Rejected(
-                    REJECT_QUARANTINED,
-                    "model is quarantined after repeated launch failures",
-                    model_id=model_id))
+                reason = self._quarantine_reasons.get(
+                    model_id, REJECT_QUARANTINED)
+                detail = ("model weights failed integrity verification "
+                          "and could not be recovered from the cold tier"
+                          if reason == REJECT_CORRUPTED else
+                          "model is quarantined after repeated launch "
+                          "failures")
+                fut.set_exception(Rejected(reason, detail,
+                                           model_id=model_id))
                 return fut
             batcher = self.registry.batcher(model_id)
             if not self._running:
@@ -607,6 +681,8 @@ class ServingFrontend:
         racing submit sees the typed rejection, never "unknown model"."""
         with self._cond:
             self._quarantined.add(model_id)
+            if isinstance(exc, IntegrityError):
+                self._quarantine_reasons[model_id] = REJECT_CORRUPTED
             self._model_stats(model_id)["quarantined"] = True
             if model_id not in self.stats["quarantined"]:
                 self.stats["quarantined"].append(model_id)
@@ -637,6 +713,25 @@ class ServingFrontend:
             self._fail_streak[model_id] = streak
         if policy is None:
             raise exc
+        if isinstance(exc, IntegrityError) and policy.recover:
+            # recovery rung: corruption is not transient — retrying the
+            # same poisoned operands cannot succeed, and demoting the
+            # bucket would serve corrupt bytes through the chain path.
+            # Evict the plan and re-decode from the verified cold tier
+            # (bit-identical); quarantine only when the cold copy itself
+            # fails.
+            with self._cond:
+                self.stats["integrity"]["detected"] += 1
+            if self._recover(model_id, batcher, exc):
+                with self._cond:
+                    self._fail_streak[model_id] = 0
+                return
+            with self._cond:
+                self.stats["integrity"]["recovery_failed"] += 1
+            if policy.quarantine:
+                self._quarantine(model_id, batcher, exc)
+                return
+            raise exc
         if streak <= policy.max_retries:
             with self._cond:
                 self.stats["retries"] += 1
@@ -661,6 +756,162 @@ class ServingFrontend:
             self._quarantine(model_id, batcher, exc)
             return
         raise exc
+
+    # ------------------------------------------- integrity: recovery
+
+    def _recover(self, model_id: str, batcher: MicroBatcher,
+                 exc: BaseException) -> bool:
+        """The recovery rung: evict the poisoned resolved plan and
+        re-decode from the cold tier (``decode_pack`` verifies every
+        payload and content checksum on the way up; the captured
+        ``act_scales`` make the rebuild bit-identical).  The failed
+        bucket's requests are already back in the queue (the batcher's
+        requeue-on-failure contract), so the next pick re-serves them on
+        the fresh operands.  Returns False — quarantine territory — when
+        there is no cold tier to recover from (a directly-registered
+        plan) or the cold copy fails verification too."""
+        cached = next((p for p in unwrap_chain(batcher.plan)
+                       if isinstance(p, CachedPlan)), None)
+        if cached is None:
+            return False
+        t0 = time.perf_counter()
+        try:
+            cached.cache.evict(model_id)
+            cached.cache.plan(model_id)     # verified cold-tier re-decode
+            guard = next((p for p in unwrap_chain(batcher.plan)
+                          if isinstance(p, GuardedPlan)), None)
+            if guard is not None:
+                guard.verify()              # fresh operands must check out
+        except (IntegrityError, KeyError):
+            return False
+        dt = time.perf_counter() - t0
+        with self._cond:
+            it = self.stats["integrity"]
+            it["recovered"] += 1
+            it["recovery_s"].append(dt)
+        return True
+
+    # ------------------------------------------- integrity: scrubbing
+
+    def scrub_once(self) -> dict:
+        """One scrub pass over every registered model: verify the cold
+        tier's payload checksums (cheap, no decode), re-verify resident
+        guarded plans against their content checksums, and replay the
+        canary probe where the policy arms one.  Detected corruption
+        walks the same recover-or-quarantine path as a launch-time
+        detection.  Non-resident cache-managed plans are NOT resolved —
+        scrubbing never defeats the hot tier's laziness."""
+        report = {"checked": 0, "detected": 0, "recovered": 0,
+                  "quarantined": []}
+        for model_id, batcher in self.registry.items():
+            with self._cond:
+                if model_id in self._quarantined:
+                    continue
+            chain = unwrap_chain(batcher.plan)
+            guard = next((p for p in chain
+                          if isinstance(p, GuardedPlan)), None)
+            cached = next((p for p in chain
+                           if isinstance(p, CachedPlan)), None)
+            try:
+                checked = False
+                if cached is not None:
+                    verify_cold_pack(cached.cache.cold(model_id))
+                    checked = True
+                if guard is not None and \
+                        (cached is None or cached.resident):
+                    guard.verify()
+                    if guard.policy.canary:
+                        guard.check_canary()
+                    checked = True
+                if checked:
+                    report["checked"] += 1
+            except KeyError:
+                continue            # racing unregister: nothing to scrub
+            except IntegrityError as exc:
+                report["detected"] += 1
+                with self._cond:
+                    self.stats["integrity"]["detected"] += 1
+                if exc.kind == "cold" or \
+                        not self._recover(model_id, batcher, exc):
+                    with self._cond:
+                        self.stats["integrity"]["recovery_failed"] += 1
+                    self._quarantine(model_id, batcher, exc)
+                    report["quarantined"].append(model_id)
+                else:
+                    report["recovered"] += 1
+        with self._cond:
+            sc = self.stats["scrub"]
+            sc["cycles"] += 1
+            sc["checked"] += report["checked"]
+            sc["detected"] += report["detected"]
+            sc["recovered"] += report["recovered"]
+        self.check_stalls()
+        return report
+
+    def _busy(self) -> bool:
+        """Is the engine doing (or about to do) latency-sensitive work?"""
+        with self._cond:
+            if self._stream_inflight or \
+                    any(ss.get("inflight")
+                        for ss in self.stats["streams"]):
+                return True
+        return any(b.pending_rows for _, b in self.registry.items())
+
+    #: consecutive busy cycles the scrubber will skip before scrubbing
+    #: anyway — bounds starvation under sustained load to
+    #: ``(SCRUB_MAX_DEFERS + 1) * scrub_interval_s``.
+    SCRUB_MAX_DEFERS = 20
+
+    def _scrub_loop(self) -> None:
+        """Idle-aware cadence: wake every ``scrub_interval_s`` and scrub
+        only when the engine is idle at that instant; a busy wake skips
+        the whole cycle (bounded — after :data:`SCRUB_MAX_DEFERS`
+        consecutive skips a saturated server gets scrubbed anyway).
+        Deferring by whole intervals rather than polling in sub-interval
+        slices keeps the thread's wakeup rate — and hence its GIL /
+        scheduler interference with in-flight launches, which dwarfs the
+        actual CRC work — independent of how busy the engine is.  A
+        scrub failure is counted, never fatal: the scrubber is an
+        auxiliary safety net and must not take the server down."""
+        interval = max(float(self.scrub_interval_s), 1e-4)
+        deferred = 0
+        while not self._scrub_stop.wait(interval):
+            if deferred < self.SCRUB_MAX_DEFERS and self._busy():
+                deferred += 1
+                with self._cond:
+                    self.stats["scrub"]["deferred"] += 1
+                continue
+            deferred = 0
+            try:
+                self.scrub_once()
+            except Exception:       # noqa: BLE001
+                with self._cond:
+                    self.stats["scrub"]["errors"] += 1
+
+    # ------------------------------------------- launch watchdog
+
+    def check_stalls(self, now: Optional[float] = None) -> List[int]:
+        """Flag streams whose launch has been in flight longer than
+        ``stall_threshold_s`` (a wedged device blocks its worker thread
+        inside the launch — it cannot report on itself, so the scrubber
+        / caller polls this).  Returns the stalled stream indices and
+        mirrors them in ``stats["streams"][i]["stalled"]``; a stream
+        that completes a launch clears its own flag."""
+        if self.stall_threshold_s is None:
+            return []
+        if now is None:
+            now = self.clock()
+        stalled = []
+        with self._cond:
+            for i, ss in enumerate(self.stats["streams"]):
+                last = ss.get("last_launch_s")
+                if ss.get("inflight") and last is not None and \
+                        now - last > self.stall_threshold_s:
+                    ss["stalled"] = True
+                    stalled.append(i)
+                else:
+                    ss["stalled"] = False
+        return stalled
 
     def _loop(self) -> None:
         try:
@@ -695,11 +946,18 @@ class ServingFrontend:
                             else max(deadline - now, 0.0))
                         continue
             model_id, batcher = pick
+            with self._cond:
+                ss = self.stats["streams"][0]
+                ss["last_launch_s"] = self.clock()   # watchdog heartbeat
+                ss["inflight"] = True
             try:
                 done, _bucket, _dt = batcher.run_one()
             except Exception as exc:           # noqa: BLE001
                 self._degrade(model_id, batcher, exc)
                 continue
+            finally:
+                with self._cond:
+                    ss["inflight"] = False
             finish = self.clock()
             with self._cond:
                 self._fail_streak.pop(model_id, None)
@@ -759,7 +1017,11 @@ class ServingFrontend:
             stream_streak = self._stream_streak[idx]
             others_active = len(self._active_streams()) > 1
         if policy is not None and policy.quarantine and \
+                not isinstance(exc, IntegrityError) and \
                 stream_streak > policy.max_retries and others_active:
+            # (corrupted weights follow the *model* across streams —
+            # an IntegrityError never indicts the stream that ran it,
+            # it goes straight to the model's recovery rung)
             self._quarantine_stream(idx, exc)
             with self._cond:
                 # fresh ladder for the model on the surviving streams:
@@ -790,11 +1052,16 @@ class ServingFrontend:
                         return
                     self._cond.wait()
             t0 = time.perf_counter()
+            with self._cond:
+                ss = self.stats["streams"][idx]
+                ss["last_launch_s"] = self.clock()   # watchdog heartbeat
+                ss["inflight"] = True
             try:
                 done, _bucket, _dt = batcher.execute(
                     taken, device=self._devices[idx])
             except Exception as exc:          # noqa: BLE001
                 with self._cond:
+                    ss["inflight"] = False
                     self._stream_load[idx] = max(
                         0.0, self._stream_load[idx] - est)
                     self._stream_inflight -= 1
@@ -804,6 +1071,7 @@ class ServingFrontend:
             finish = self.clock()
             dt = time.perf_counter() - t0
             with self._cond:
+                ss["inflight"] = False
                 self._stream_load[idx] = max(
                     0.0, self._stream_load[idx] - est)
                 self._stream_inflight -= 1

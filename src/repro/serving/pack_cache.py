@@ -55,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import bitplanes, formats
+from ..runtime import integrity
+from ..runtime.integrity import IntegrityError
 from .plans import (DEFAULT_MAX_BUCKET, ExecutionPlan, _pow2_buckets,
                     adopt_plan, build_plan, forget_plan)
 
@@ -62,6 +64,7 @@ __all__ = [
     "ColdLayer", "ColdPack", "CachedPlan", "PackCache",
     "compress_pack", "decode_pack", "plan_resident_bytes",
     "cold_pack_to_payload", "cold_pack_from_payload",
+    "verify_cold_pack",
 ]
 
 
@@ -82,6 +85,12 @@ class ColdLayer:
     alpha2: np.ndarray                  # scalar §V rescale
     shape: Tuple[int, int]              # (k, n) true shape (pre-padding)
     activation: Optional[str]           # "relu" | None
+    # integrity digests (None on packs built before checksumming existed):
+    # content_crc is the representation-independent layer_content_crc;
+    # payload_crc covers the raw CompressedTensor payload so the cold
+    # tier can be scrubbed without a decode.
+    content_crc: Optional[int] = None
+    payload_crc: Optional[int] = None
 
     @property
     def size_bytes(self) -> int:
@@ -139,20 +148,51 @@ def compress_pack(pack: dict) -> ColdPack:
     (including huffman).  Lossless: :func:`decode_pack` rebuilds a pack
     whose plan output is bit-identical to the original's."""
     layers = []
-    for layer in pack["layers"]:
+    for i, layer in enumerate(pack["layers"]):
         k, n = (int(d) for d in layer["shape"])
         codes = np.asarray(bitplanes.unpack_codes_rows(layer["packed"]),
                            np.uint8)[:k]
+        omega = np.asarray(layer["omega"], np.float32)
+        alpha1 = np.asarray(layer["alpha1"], np.float32)
+        bias = np.asarray(layer["bias"], np.float32)
+        alpha2 = np.asarray(layer["alpha2"], np.float32)
+        crc = integrity.layer_content_crc(codes, omega, alpha1, bias,
+                                          alpha2)
+        stamped = layer.get("crc")
+        if stamped is not None and int(stamped) != crc:
+            raise IntegrityError(
+                f"pack layer {i} content disagrees with its stamped "
+                f"checksum (expected {int(stamped):#010x}, got "
+                f"{crc:#010x})", kind="content", layer=i)
         ct = formats.encode(codes, formats.select_format_ext(codes))
         layers.append(ColdLayer(
             codes=ct,
-            omega=np.asarray(layer["omega"], np.float32),
-            alpha1=np.asarray(layer["alpha1"], np.float32),
-            bias=np.asarray(layer["bias"], np.float32),
-            alpha2=np.asarray(layer["alpha2"], np.float32),
+            omega=omega,
+            alpha1=alpha1,
+            bias=bias,
+            alpha2=alpha2,
             shape=(k, n),
-            activation=layer.get("activation")))
+            activation=layer.get("activation"),
+            content_crc=crc,
+            payload_crc=integrity.payload_crc(ct)))
     return ColdPack(layers=tuple(layers), act_bits=pack.get("act_bits"))
+
+
+def verify_cold_pack(cold: ColdPack) -> None:
+    """Payload-level scrub of the cold tier: re-checksum every layer's
+    raw ``CompressedTensor`` payload against ``payload_crc``.  Cheap (no
+    decode) — the full content check happens on every
+    :func:`decode_pack`.  Layers without digests (pre-checksum packs)
+    are skipped."""
+    for i, cl in enumerate(cold.layers):
+        if cl.payload_crc is None:
+            continue
+        got = integrity.payload_crc(cl.codes)
+        if got != cl.payload_crc:
+            raise IntegrityError(
+                f"cold payload checksum mismatch at layer {i} "
+                f"(expected {cl.payload_crc:#010x}, got {got:#010x})",
+                kind="cold", layer=i)
 
 
 def decode_pack(cold: ColdPack) -> dict:
@@ -160,9 +200,30 @@ def decode_pack(cold: ColdPack) -> dict:
     row-pair packing, odd-``k`` zero pad, compression metadata kept so
     ``models.mlp.pack_compression_summary`` still reads it)."""
     layers = []
-    for cl in cold.layers:
+    for i, cl in enumerate(cold.layers):
         k, n = cl.shape
-        codes = formats.decode(cl.codes).astype(np.uint8).reshape(k, n)
+        if cl.payload_crc is not None:
+            got = integrity.payload_crc(cl.codes)
+            if got != cl.payload_crc:
+                raise IntegrityError(
+                    f"cold payload checksum mismatch at layer {i} "
+                    f"(expected {cl.payload_crc:#010x}, got {got:#010x})",
+                    kind="cold", layer=i)
+        try:
+            codes = formats.decode(cl.codes).astype(np.uint8).reshape(k, n)
+        except IntegrityError:
+            raise
+        except Exception as exc:
+            raise IntegrityError(
+                f"cold payload at layer {i} failed to decode: {exc}",
+                kind="cold", layer=i) from exc
+        content_crc = integrity.layer_content_crc(
+            codes, cl.omega, cl.alpha1, cl.bias, cl.alpha2)
+        if cl.content_crc is not None and content_crc != cl.content_crc:
+            raise IntegrityError(
+                f"decoded content checksum mismatch at layer {i} "
+                f"(expected {cl.content_crc:#010x}, got "
+                f"{content_crc:#010x})", kind="cold", layer=i)
         full = codes
         if k % 2:
             full = np.concatenate([codes, np.zeros((1, n), np.uint8)],
@@ -178,6 +239,7 @@ def decode_pack(cold: ColdPack) -> dict:
             "format": cl.codes.format,
             "size_bytes": cl.codes.size_bytes,
             "dense_bytes": k * n * 4,
+            "crc": content_crc,
         })
     pack = {"layers": layers}
     if cold.act_bits is not None:
@@ -198,12 +260,17 @@ def cold_pack_to_payload(cold: ColdPack, prefix: str = "") -> Dict[str, np.ndarr
         prefix + "num_layers": np.int64(len(cold.layers)),
         prefix + "act_bits": np.int64(-1 if cold.act_bits is None
                                       else cold.act_bits),
+        prefix + "crc_algo": np.array(integrity.CRC_ALGO),
     }
     for i, cl in enumerate(cold.layers):
         p = f"{prefix}layer{i}{_SEP}"
         out[p + "format"] = np.array(cl.codes.format)
         out[p + "shape"] = np.asarray(cl.shape, np.int64)
         out[p + "activation"] = np.array(cl.activation or "")
+        out[p + "content_crc"] = np.int64(
+            -1 if cl.content_crc is None else cl.content_crc)
+        out[p + "payload_crc"] = np.int64(
+            -1 if cl.payload_crc is None else cl.payload_crc)
         out[p + "omega"] = np.asarray(cl.omega, np.float32)
         out[p + "alpha1"] = np.asarray(cl.alpha1, np.float32)
         out[p + "bias"] = np.asarray(cl.bias, np.float32)
@@ -219,6 +286,21 @@ def cold_pack_from_payload(payload: Dict[str, np.ndarray],
     loaded ``NpzFile``)."""
     n_layers = int(np.asarray(payload[prefix + "num_layers"]))
     act_bits = int(np.asarray(payload[prefix + "act_bits"]))
+    algo_key = prefix + "crc_algo"
+    if algo_key in payload:
+        algo = str(np.asarray(payload[algo_key]))
+        if algo != integrity.CRC_ALGO:
+            raise IntegrityError(
+                f"pack digests use checksum algorithm {algo!r} but this "
+                f"host verifies with {integrity.CRC_ALGO!r}; refusing to "
+                "mis-verify", kind="artifact")
+
+    def _opt_crc(key: str) -> Optional[int]:
+        if key not in payload:
+            return None           # pre-checksum artifact
+        v = int(np.asarray(payload[key]))
+        return None if v < 0 else v
+
     layers = []
     for i in range(n_layers):
         p = f"{prefix}layer{i}{_SEP}"
@@ -235,7 +317,9 @@ def cold_pack_from_payload(payload: Dict[str, np.ndarray],
             alpha1=np.asarray(payload[p + "alpha1"], np.float32),
             bias=np.asarray(payload[p + "bias"], np.float32),
             alpha2=np.asarray(payload[p + "alpha2"], np.float32),
-            shape=shape, activation=act))
+            shape=shape, activation=act,
+            content_crc=_opt_crc(p + "content_crc"),
+            payload_crc=_opt_crc(p + "payload_crc")))
     return ColdPack(layers=tuple(layers),
                     act_bits=None if act_bits < 0 else act_bits)
 
@@ -414,6 +498,17 @@ class PackCache:
             self._cold.pop(model_id, None)
             self._plan_kwargs.pop(model_id, None)
             self._calib.pop(model_id, None)
+
+    def cold(self, model_id: str) -> ColdPack:
+        """The at-rest form of a cached model (the recovery source of
+        truth the scrubber verifies against)."""
+        with self._lock:
+            try:
+                return self._cold[model_id]
+            except KeyError:
+                raise KeyError(
+                    f"model {model_id!r} not cached; have "
+                    f"{sorted(self._cold)}") from None
 
     # ----------------------------------------------------------- serving
 

@@ -631,6 +631,11 @@ class ExecutionPlan:
             "interpret": self.interpret,
             "sharding": (None if self._sharded is None
                          else self._sharded.describe()),
+            # per-layer content digests when the pack was stamped at
+            # freeze/decode time (None entries on legacy packs) — lets
+            # operators fingerprint exactly which weights are serving
+            "layer_crcs": [layer.get("crc")
+                           for layer in self.layers],
             "notes": list(self.notes),
         }
 

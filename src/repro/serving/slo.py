@@ -42,6 +42,8 @@ REJECT_QUEUE_FULL = "queue_full"        # bounded queue at capacity
 REJECT_DEADLINE = "deadline"            # cost model: SLO provably missed
 REJECT_QUARANTINED = "quarantined"      # model isolated after faults
 REJECT_UNREGISTERED = "unregistered"    # model removed while request queued
+REJECT_CORRUPTED = "corrupted"          # weights failed integrity checks
+                                        # and cold-tier recovery
 
 
 class Rejected(RuntimeError):

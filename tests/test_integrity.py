@@ -1,0 +1,323 @@
+"""End-to-end integrity: checksummed packs at every tier (hot dict /
+cold CompressedTensor / disk artifact), GuardedPlan launch verification
+and output screening, the frontend's detect → evict → cold-re-decode
+recovery rung (bit-identical on the int8 grid), scrub-time detection,
+and quarantine with a typed "corrupted" rejection when the cold copy is
+poisoned too."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.runtime import integrity
+from repro.runtime.integrity import (GuardedPlan, IntegrityError,
+                                     IntegrityPolicy, unwrap_chain)
+from repro.serving import pack_cache as pc
+from test_serving_plans import _rand_pack
+
+DIMS = (16, 12, 4)      # even K everywhere: no pad row, every bit covered
+
+
+def _flip_payload_bit(cold, li=0, which="codes"):
+    ct = getattr(cold.layers[li], which)
+    key, _ = ct.canonical_items()[0]
+    ct.payload[key].view(np.uint8).reshape(-1)[0] ^= 1
+
+
+def _corrupt_hot_layer(plan, li=0, field="packed"):
+    """Copy-modify-reassign (jnp arrays are immutable) + drop the
+    identity-keyed kernel operand memos, exactly as the injector does."""
+    from repro.kernels import ops as kops
+    host = np.asarray(plan.layers[li][field])
+    if field == "packed":
+        host = host.copy().astype(np.uint8)
+        host.reshape(-1)[0] ^= 2
+    else:
+        host = host.copy()
+        host.reshape(-1)[0] += np.float32(1.0)
+    plan.layers[li][field] = jnp.asarray(host)
+    kops.forget_pack_operands(plan.layers)
+
+
+# ------------------------------------------------- checksums per tier
+
+def test_layer_content_crc_deterministic_and_sensitive():
+    pack = _rand_pack(DIMS, seed=3)
+    crc0 = integrity.hot_layer_crc(pack["layers"][0])
+    assert crc0 == integrity.hot_layer_crc(pack["layers"][0])
+    for field in ("packed", "omega", "alpha1", "bias", "alpha2"):
+        mutated = {**pack["layers"][0]}
+        host = np.asarray(mutated[field]).copy()
+        if field == "packed":
+            host.reshape(-1)[0] ^= 1
+        else:
+            host = host.reshape(-1) if host.ndim else host[None]
+            host[0] += 1.0
+            host = host.reshape(np.asarray(mutated[field]).shape)
+        mutated[field] = jnp.asarray(host)
+        assert integrity.hot_layer_crc(mutated) != crc0, field
+
+
+def test_crc_header_separates_dtype_and_shape():
+    a = np.zeros(8, np.float32)
+    assert integrity.crc_update(0, a, "x") != \
+        integrity.crc_update(0, a.astype(np.float64), "x")
+    assert integrity.crc_update(0, a, "x") != \
+        integrity.crc_update(0, a.reshape(2, 4), "x")
+    assert integrity.crc_update(0, a, "x") != \
+        integrity.crc_update(0, a, "y")
+
+
+def test_freeze_mlp_stamps_content_crc():
+    import jax
+
+    from repro.configs.paper_mlps import MLPConfig
+    from repro.core import qat
+    from repro.models import mlp as M
+    cfg = MLPConfig("tiny", features=(8, 4), d_in=6)
+    params, bn = M.mlp_init(jax.random.PRNGKey(0), cfg)
+    pack = M.freeze_mlp(params, qat.build_qstate(params), bn, lam=0.02)
+    for layer in pack["layers"]:
+        assert layer["crc"] == integrity.hot_layer_crc(layer)
+
+
+def test_compress_pack_verifies_stamped_crc():
+    pack = _rand_pack(DIMS, seed=1)
+    integrity.stamp_pack_crcs(pack)
+    cold = pc.compress_pack(pack)          # consistent: fine
+    for cl in cold.layers:
+        assert cl.content_crc is not None and cl.payload_crc is not None
+    pack["layers"][0]["crc"] ^= 1          # stamped lie
+    with pytest.raises(IntegrityError) as ei:
+        pc.compress_pack(pack)
+    assert ei.value.kind == "content" and ei.value.layer == 0
+
+
+def test_decode_pack_stamps_and_roundtrips():
+    pack = _rand_pack(DIMS, seed=2)
+    hot = pc.decode_pack(pc.compress_pack(pack))
+    for orig, layer in zip(pack["layers"], hot["layers"]):
+        assert layer["crc"] == integrity.hot_layer_crc(layer)
+        np.testing.assert_array_equal(np.asarray(orig["packed"]),
+                                      np.asarray(layer["packed"]))
+
+
+def test_cold_payload_flip_caught_by_scrub_and_decode():
+    cold = pc.compress_pack(_rand_pack(DIMS, seed=4))
+    _flip_payload_bit(cold, li=1)
+    with pytest.raises(IntegrityError) as ei:
+        pc.verify_cold_pack(cold)          # payload CRC, no decode
+    assert ei.value.kind == "cold" and ei.value.layer == 1
+    with pytest.raises(IntegrityError):
+        pc.decode_pack(cold)
+
+
+def test_payload_roundtrip_preserves_crcs_and_checks_algo():
+    cold = pc.compress_pack(_rand_pack(DIMS, seed=5))
+    payload = pc.cold_pack_to_payload(cold)
+    back = pc.cold_pack_from_payload(payload)
+    for a, b in zip(cold.layers, back.layers):
+        assert (a.content_crc, a.payload_crc) == \
+            (b.content_crc, b.payload_crc)
+    pc.decode_pack(back)                   # all digests verify
+    payload["crc_algo"] = np.array("md5-not-really")
+    with pytest.raises(IntegrityError) as ei:
+        pc.cold_pack_from_payload(payload)
+    assert ei.value.kind == "artifact"
+
+
+# ------------------------------------------------- disk artifacts
+
+def test_load_pack_truncated_npz_raises_typed_error(tmp_path):
+    from repro.checkpoint.manager import export_pack, load_pack
+    path = str(tmp_path / "pack")
+    export_pack(path, _rand_pack(DIMS, seed=6))
+    npz = os.path.join(path, "pack.npz")
+    blob = open(npz, "rb").read()
+    with open(npz, "wb") as f:
+        f.write(blob[: len(blob) // 2])    # torn write
+    with pytest.raises(IntegrityError) as ei:
+        load_pack(path)
+    assert ei.value.kind == "artifact" and "pack.npz" in str(ei.value)
+
+
+def test_load_pack_flipped_bit_on_disk_fails_verification(tmp_path):
+    from repro.checkpoint.manager import export_pack, load_pack
+    path = str(tmp_path / "pack")
+    export_pack(path, _rand_pack(DIMS, seed=7))
+    npz = os.path.join(path, "pack.npz")
+    data = dict(np.load(npz, allow_pickle=False))
+    # largest compressed-codes payload array: flip one stored bit
+    key = max((k for k in data if "//codes//" in k),
+              key=lambda k: data[k].nbytes)
+    data[key] = data[key].copy()
+    data[key].view(np.uint8).reshape(-1)[0] ^= 1
+    np.savez(npz.removesuffix(".npz"), **data)
+    with pytest.raises(IntegrityError):
+        load_pack(path)
+    load_pack(path, verify=False)          # opt-out stays available
+
+
+def test_export_pack_sweeps_stray_tmp_litter(tmp_path):
+    from repro.checkpoint.manager import export_pack
+    stray_dir = tmp_path / ".tmp_pack_killed9"
+    stray_dir.mkdir()
+    (stray_dir / "x").write_text("partial")
+    stray_file = tmp_path / "half.tmp"
+    stray_file.write_text("partial")
+    export_pack(str(tmp_path / "pack"), _rand_pack(DIMS, seed=8))
+    assert not stray_dir.exists() and not stray_file.exists()
+
+
+# ------------------------------------------------- the guarded plan
+
+def test_guarded_plan_detects_hot_flip_before_results():
+    plan = serving.build_plan(_rand_pack(DIMS, seed=9), mode="oracle")
+    guard = GuardedPlan(plan, model_id="m")
+    x = np.zeros((1, DIMS[0]), np.float32)
+    np.asarray(guard.run(x))               # clean launch verifies
+    _corrupt_hot_layer(plan, li=1, field="packed")
+    with pytest.raises(IntegrityError) as ei:
+        guard.run(x)
+    assert ei.value.kind == "hot" and ei.value.layer == 1
+    assert guard.stats["detected"] == 1
+
+
+def test_guarded_plan_screens_nonfinite_outputs():
+    plan = serving.build_plan(_rand_pack(DIMS, seed=10), mode="oracle")
+    guard = GuardedPlan(
+        plan, policy=IntegrityPolicy(verify_launch=False), model_id="m")
+    x = np.zeros((1, DIMS[0]), np.float32)
+    np.asarray(guard.run(x))
+    bias = np.asarray(plan.layers[-1]["bias"]).copy()
+    bias[0] = np.nan
+    plan.layers[-1]["bias"] = jnp.asarray(bias)
+    from repro.kernels import ops as kops
+    kops.forget_pack_operands(plan.layers)
+    with pytest.raises(IntegrityError) as ei:
+        guard.run(x)
+    assert ei.value.kind == "output"
+
+
+def test_canary_probe_catches_silent_drift():
+    plan = serving.build_plan(_rand_pack(DIMS, seed=11), mode="oracle")
+    guard = GuardedPlan(
+        plan, policy=IntegrityPolicy(verify_launch=False, canary=True),
+        model_id="m")
+    guard.check_canary()                   # arms the golden pair
+    guard.check_canary()                   # stable: passes
+    _corrupt_hot_layer(plan, li=0, field="alpha1")
+    with pytest.raises(IntegrityError) as ei:
+        guard.check_canary()
+    assert ei.value.kind == "canary"
+
+
+# ------------------------------------------------- frontend recovery
+
+def _frontend(pack, **kw):
+    fe = serving.ServingFrontend(cache=serving.PackCache())
+    fe.register_pack("m", pack,
+                     plan_kwargs={"mode": "oracle", "act_dtype": "int8"},
+                     max_delay=1e-4, **kw)
+    return fe
+
+
+def test_e2e_flips_detected_recovered_bit_identical():
+    """The acceptance criterion: under per-launch bit flips (cold tier
+    intact) every corrupted launch is detected, recovered by cold-tier
+    re-decode, and the served outputs are bit-identical on the int8
+    grid to a no-fault run."""
+    pack = _rand_pack(DIMS, seed=12)
+    injector = None
+
+    def wrap(plan):
+        nonlocal injector
+        injector = serving.FaultInjector(
+            plan, rate=0.0, seed=11, flip_rate=0.06,
+            flip_targets=("packed", "epilogue"))
+        return injector
+
+    rng = np.random.default_rng(0)
+    xs = [rng.normal(size=(1, DIMS[0])).astype(np.float32)
+          for _ in range(80)]
+    ref = serving.build_plan(
+        pc.decode_pack(pc.compress_pack(pack)),
+        mode="oracle", act_dtype="int8")
+    baseline = [np.asarray(ref.run(x)) for x in xs]
+
+    fe = _frontend(pack, wrap=wrap, integrity=True)
+    with fe:
+        ys = [np.asarray(fe.submit("m", x).result(timeout=60).y)
+              for x in xs]
+        integ = fe.stats["integrity"]
+        assert injector.flipped > 0
+        assert integ["detected"] == injector.flipped
+        assert integ["recovered"] == integ["detected"]
+        assert not fe.stats["quarantined"]
+    for y, b in zip(ys, baseline):
+        np.testing.assert_array_equal(y, b)
+
+
+def test_scrub_once_detects_and_recovers_hot_corruption():
+    pack = _rand_pack(DIMS, seed=13)
+    fe = _frontend(pack, integrity=True)
+    x = np.zeros((1, DIMS[0]), np.float32)
+    with fe:
+        y0 = np.asarray(fe.submit("m", x).result(timeout=60).y)
+        _corrupt_hot_layer(fe.registry.cache.plan("m"))
+        report = fe.scrub_once()
+        assert report["detected"] == 1 and report["recovered"] == 1
+        assert not report["quarantined"]
+        y1 = np.asarray(fe.submit("m", x).result(timeout=60).y)
+    np.testing.assert_array_equal(y0, y1)
+
+
+def test_cold_corruption_quarantines_with_corrupted_reason():
+    pack = _rand_pack(DIMS, seed=14)
+    fe = _frontend(pack, integrity=True)
+    x = np.zeros((1, DIMS[0]), np.float32)
+    with fe:
+        fe.submit("m", x).result(timeout=60)
+        _flip_payload_bit(fe.registry.cache.cold("m"))
+        report = fe.scrub_once()
+        assert report["quarantined"] == ["m"]
+        with pytest.raises(serving.Rejected) as ei:
+            fe.submit("m", x).result(timeout=60)
+    assert ei.value.reason == "corrupted"
+
+
+def test_hot_and_cold_both_corrupted_quarantines_not_loops():
+    """Recovery must refuse to 'recover' from a poisoned cold tier: the
+    re-decoded plan would fail verification again — quarantine instead
+    of evict/re-decode forever."""
+    pack = _rand_pack(DIMS, seed=15)
+    fe = _frontend(pack, integrity=True)
+    x = np.zeros((1, DIMS[0]), np.float32)
+    with fe:
+        fe.submit("m", x).result(timeout=60)
+        _flip_payload_bit(fe.registry.cache.cold("m"))
+        _corrupt_hot_layer(fe.registry.cache.plan("m"))
+        # the triggering request gets the typed root cause...
+        with pytest.raises(IntegrityError):
+            fe.submit("m", x).result(timeout=60)
+        assert fe.stats["quarantined"] == ["m"]
+        assert fe.stats["integrity"]["recovery_failed"] == 1
+        # ...and every later submit the typed "corrupted" rejection
+        with pytest.raises(serving.Rejected) as ei:
+            fe.submit("m", x).result(timeout=60)
+        assert ei.value.reason == "corrupted"
+
+
+def test_unregister_unwraps_guard_and_injector_chain():
+    pack = _rand_pack(DIMS, seed=16)
+    fe = _frontend(
+        pack, integrity=True,
+        wrap=lambda p: serving.FaultInjector(p, rate=0.0))
+    chain = unwrap_chain(dict(fe.registry.items())["m"].plan)
+    assert [type(p).__name__ for p in chain] == \
+        ["GuardedPlan", "FaultInjector", "CachedPlan"]
+    fe.registry.unregister("m")
+    with pytest.raises(KeyError):
+        fe.registry.cache.cold("m")

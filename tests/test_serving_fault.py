@@ -2,7 +2,10 @@
 plan wrapper, the batcher's requeue-on-failure (nothing lost), retry
 parity under a 10% transient launch-failure rate (100% completion,
 bit-identical to the no-fault run), and the poisoned-bucket fallback to
-the per-layer chain."""
+the per-layer chain.  Also the injector's seeded corruption mode (the
+flip schedule must be reproducible run-to-run and independent of the
+failure schedule) and the hung-launch watchdog (fake-clock stall
+flagging + the real heartbeat)."""
 import numpy as np
 import pytest
 
@@ -168,3 +171,83 @@ def test_poisoned_fused_bucket_falls_back_to_chain():
     assert "m" not in fe.stats["quarantined"]     # ladder stopped early
     np.testing.assert_allclose(s.y, np.asarray(oracle.run(x)),
                                atol=1e-3, rtol=1e-4)
+
+
+# --------------------------------------- seeded flip reproducibility
+
+def test_flip_schedule_reproducible_across_same_seed_runs():
+    """Two same-seed injectors over identical plans must fire the same
+    failures AND the same bit flips (target, layer, byte, bit) — the
+    flip RNG is derived from (seed, salt), so enabling flips never
+    perturbs the failure schedule either."""
+    def drive(seed):
+        plan = _oracle_plan(seed=3)
+        inj = FaultInjector(plan, rate=0.15, seed=seed, flip_rate=0.3,
+                            flip_targets=("packed", "epilogue"))
+        x = np.zeros((1, DIMS[0]), np.float32)
+        for _ in range(25):
+            try:
+                inj.run(x)
+            except InjectedFault:
+                pass
+            except serving.IntegrityError:
+                pass
+        return list(inj.failures), list(inj.flips)
+
+    fails_a, flips_a = drive(seed=7)
+    fails_b, flips_b = drive(seed=7)
+    assert fails_a == fails_b and flips_a == flips_b
+    assert flips_a, "flip schedule never fired at flip_rate=0.3"
+    fails_c, flips_c = drive(seed=8)
+    assert (fails_c, flips_c) != (fails_a, flips_a)
+
+
+def test_failure_schedule_unchanged_by_enabling_flips():
+    """The flip RNG is salted off the failure RNG: turning flips on
+    must not move WHICH launches fail."""
+    def failures(flip_rate):
+        plan = _oracle_plan(seed=4)
+        inj = FaultInjector(plan, rate=0.2, seed=5, flip_rate=flip_rate)
+        x = np.zeros((1, DIMS[0]), np.float32)
+        for _ in range(30):
+            try:
+                inj.run(x)
+            except (InjectedFault, serving.IntegrityError):
+                pass
+        return list(inj.failures)
+
+    assert failures(0.0) == failures(0.5)
+
+
+# --------------------------------------- hung-launch watchdog
+
+def test_watchdog_flags_stalled_stream_on_fake_clock():
+    t = [0.0]
+    fe = serving.ServingFrontend(clock=lambda: t[0],
+                                 stall_threshold_s=5.0)
+    fe.register("m", _oracle_plan(), max_delay=1e-3)
+    ss = fe.stats["streams"][0]
+    # a launch that entered the device at t=0 and never came back
+    with fe._cond:
+        ss["last_launch_s"] = 0.0
+        ss["inflight"] = True
+    t[0] = 4.0
+    assert fe.check_stalls() == [] and not ss["stalled"]
+    t[0] = 6.0
+    assert fe.check_stalls() == [0] and ss["stalled"]
+    # the launch finally returns: the flag clears on the next poll
+    with fe._cond:
+        ss["inflight"] = False
+    assert fe.check_stalls() == [] and not ss["stalled"]
+
+
+def test_watchdog_disabled_without_threshold_and_heartbeat_is_live():
+    fe = serving.ServingFrontend()
+    fe.register("m", _oracle_plan(), max_delay=1e-3)
+    assert fe.check_stalls() == []          # no threshold: never flags
+    x = np.zeros((1, DIMS[0]), np.float32)
+    with fe:
+        fe.submit("m", x).result(30.0)
+    ss = fe.stats["streams"][0]
+    assert ss["last_launch_s"] is not None  # real launch stamped it
+    assert ss["inflight"] is False
