@@ -1,0 +1,157 @@
+"""4-bit transformer prefill/decode through the LM serving engine.
+
+Two smoke archs — smollm-360m (swiglu, tied head) and h2o-danube-1.8b
+(sliding-window attention, untied head) — are frozen to packed int4
+codes and served as :class:`repro.serving.lm.LMProgram` programs behind
+a ``ServingFrontend``: every sequence prefilled as one wire row, then
+lockstep single-token decode steps (each flush reaches the per-block FFN
+plans as an ``m = n_seqs`` weight-stationary bucket).  The A/B baseline
+is the direct ``models.lm`` greedy loop over the *same* frozen tree
+(eager ``lm_apply``, per-request — no batcher, no plans).
+
+Parity gates every row: the engine's tokens must be bit-identical to the
+program's own ``generate`` loop (same kernels, no wire framing) AND to
+the direct-loop baseline's tokens.
+
+Reported per (model, phase): prefill tokens/s and decode token-steps/s
+for both paths plus their ``engine_over_direct`` ratio — self-normalized
+A/B on the same host, which is what the cross-PR guard tracks.  Extends
+the repo-root ``BENCH_fused_serving.json`` with a ``lm_serving_rows``
+section (guarded by scripts/check_bench_rows.py on row identity and
+``engine_over_direct``); also writes results/bench/lm_serving.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fused_serving import merge_root_json
+from benchmarks.common import save, topology
+from repro import serving
+from repro.configs import get_config
+from repro.core import qat
+from repro.models import lm
+from repro.nn import transformer as T
+from repro.nn.module import QuantCtx
+
+ARCHS = ("smollm-360m", "h2o-danube-1.8b")
+PROMPT_LEN, MAX_NEW = 8, 8      # 16 total: engages danube's smoke window
+
+
+def _direct_loop(frozen, cfg, prompt, new):
+    """Per-phase-timed reference: the models.lm greedy loop (eager
+    lm_apply over the frozen tree, full-length KV cache)."""
+    ctx = QuantCtx(quant=False, compute_dtype=jnp.float32)
+    b, s = prompt.shape
+    cache = T.init_cache(cfg, b, s + new, dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    t0 = time.perf_counter()
+    nxt, cache = lm.greedy_step(frozen, 0, jnp.asarray(prompt), ctx, cfg,
+                                positions=pos, cache=cache)
+    jax.block_until_ready(nxt)
+    t_prefill = time.perf_counter() - t0
+    outs = [nxt]
+    t0 = time.perf_counter()
+    for t in range(new - 1):
+        p_t = jnp.full((b, 1), s + t, jnp.int32)
+        nxt, cache = lm.greedy_step(frozen, 0, nxt, ctx, cfg,
+                                    positions=p_t, cache=cache)
+        outs.append(nxt)
+    jax.block_until_ready(outs[-1])
+    t_decode = time.perf_counter() - t0
+    return (np.asarray(jnp.concatenate(outs, axis=1), np.int64),
+            t_prefill, t_decode)
+
+
+def _serve_engine(prog, prompt, new):
+    """Per-phase-timed engine leg: wire rows through a ServingFrontend."""
+    b = prompt.shape[0]
+    toks = []
+    frontend = serving.ServingFrontend()
+    with frontend:
+        frontend.register("lm", prog, max_delay=1e-3)
+        t0 = time.perf_counter()
+        futs = [frontend.submit(
+                    "lm", prog.encode_prefill(500 + i, prompt[i])[None])
+                for i in range(b)]
+        toks.append([int(f.result(120.0).y[0, 0]) for f in futs])
+        t_prefill = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(new - 1):
+            futs = [frontend.submit(
+                        "lm", prog.encode_decode(500 + i)[None])
+                    for i in range(b)]
+            toks.append([int(f.result(120.0).y[0, 0]) for f in futs])
+        t_decode = time.perf_counter() - t0
+    for i in range(b):
+        prog.release(500 + i)
+    return np.asarray(toks, np.int64).T, t_prefill, t_decode
+
+
+def _bench_arch(arch: str, b: int) -> list:
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = T.lm_init(key, cfg)
+    qstate = qat.build_qstate(params)
+    frozen = qat.freeze_tree(params, qstate, cfg.lam)
+    prompt = np.asarray(jax.random.randint(
+        key, (b, PROMPT_LEN), 0, cfg.vocab))
+    prog = serving.LMProgram(frozen, cfg, max_prompt=PROMPT_LEN,
+                             max_new=MAX_NEW,
+                             max_bucket=1 << (max(b, 8) - 1).bit_length())
+
+    # warmup both paths (tracing/compiles), keeping the parity references
+    _direct_loop(frozen, cfg, prompt, MAX_NEW)
+    ref, t_dp, t_dd = _direct_loop(frozen, cfg, prompt, MAX_NEW)
+    gen = np.asarray(prog.generate(prompt, MAX_NEW), np.int64)
+
+    engine, t_ep, t_ed = _serve_engine(prog, prompt, MAX_NEW)
+    if not np.array_equal(engine, gen):
+        raise RuntimeError(f"{arch}: engine decode is not bit-identical "
+                           "to LMProgram.generate")
+    if not np.array_equal(engine, ref):
+        raise RuntimeError(f"{arch}: engine tokens diverged from the "
+                           "direct models.lm greedy loop")
+
+    sched = prog.describe()["ffn_schedules"]
+    topo = topology()
+    n_steps = b * (MAX_NEW - 1)
+    rows = [
+        {"model": arch, "phase": "prefill", "batch": b,
+         "prompt_len": PROMPT_LEN,
+         "engine_tok_s": b * PROMPT_LEN / t_ep,
+         "direct_tok_s": b * PROMPT_LEN / t_dp,
+         "engine_over_direct": t_dp / t_ep,
+         "schedules": sched, **topo},
+        {"model": arch, "phase": "decode", "batch": b,
+         "steps": MAX_NEW - 1,
+         "engine_steps_s": n_steps / t_ed,
+         "direct_steps_s": n_steps / t_dd,
+         "engine_over_direct": t_dd / t_ed,
+         "schedules": sched, **topo},
+    ]
+    for r in rows:
+        ratio = r["engine_over_direct"]
+        print(f"  {arch:18s} {r['phase']:7s} engine/direct = {ratio:5.2f}x "
+              f"(schedules {sched})")
+    prog.forget()
+    return rows
+
+
+def run(fast: bool = False) -> dict:
+    b = 2 if fast else 4
+    rows = []
+    for arch in ARCHS:
+        rows.extend(_bench_arch(arch, b))
+    payload = {"rows": rows, "batch": b, "prompt_len": PROMPT_LEN,
+               "max_new": MAX_NEW}
+    save("lm_serving", payload)
+    merge_root_json({"lm_serving_rows": rows})
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -43,6 +43,11 @@ integrity             checksummed-pack robustness: background-scrubber
                       flips (detection_frac, recovery p95, bit-identical
                       outputs vs a no-fault run); extends
                       BENCH_fused_serving.json with integrity_rows
+lm_serving            4-bit transformer prefill/decode as an LMProgram
+                      behind the ServingFrontend vs the direct models.lm
+                      greedy loop (two smoke archs, per-phase tokens/s,
+                      bit-identical parity gates); extends
+                      BENCH_fused_serving.json with lm_serving_rows
 """
 from __future__ import annotations
 
@@ -62,10 +67,10 @@ def main(argv=None):
     from benchmarks import (bench_acm_vs_mac, bench_compression,
                             bench_entropy_energy, bench_fused_serving,
                             bench_int8_fused, bench_integrity,
-                            bench_model_churn, bench_multi_model,
-                            bench_multi_stream, bench_pareto,
-                            bench_serving_engine, bench_serving_roofline,
-                            bench_slo_traces)
+                            bench_lm_serving, bench_model_churn,
+                            bench_multi_model, bench_multi_stream,
+                            bench_pareto, bench_serving_engine,
+                            bench_serving_roofline, bench_slo_traces)
     benches = {
         "acm_vs_mac": lambda: bench_acm_vs_mac.run(),
         "table2_compression": lambda: bench_compression.run(steps=steps),
@@ -80,6 +85,7 @@ def main(argv=None):
         "model_churn": lambda: bench_model_churn.run(fast=args.fast),
         "multi_stream": lambda: bench_multi_stream.run(fast=args.fast),
         "integrity": lambda: bench_integrity.run(fast=args.fast),
+        "lm_serving": lambda: bench_lm_serving.run(fast=args.fast),
     }
     if args.only is not None and args.only not in benches:
         # a typo used to silently run ZERO benchmarks and still print

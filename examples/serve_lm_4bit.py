@@ -1,17 +1,25 @@
 """Serve an LM with frozen 4-bit weights and batched greedy decoding.
 
-    PYTHONPATH=src python examples/serve_lm_4bit.py [--arch mamba2-1.3b]
+    PYTHONPATH=src python examples/serve_lm_4bit.py [--arch smollm-360m]
 
 Initialises a (smoke-sized) assigned architecture, freezes every FC weight
 to packed int4 codes + 4 centroids (weights live at 4 bits/weight from then
 on — the paper's data-movement win), then runs prefill + decode over a
-request batch.  Works for any of the 10 assigned archs; attention archs use
-the KV cache, mamba2 the recurrent SSM state, hymba both.
+request batch.
+
+Dense-attention archs serve through the engine by default: a
+``serving.LMProgram`` (one megakernel-backed FFN plan set per block)
+registered in a ``ServingFrontend`` — prefill and decode steps arrive as
+wire rows and each lockstep decode flush hits the FFN kernels as an
+``m = n_seqs`` weight-stationary bucket.  ``--no-engine`` (and any arch
+outside the program's dense contract: mamba2 / hymba / global-attn) falls
+back to the direct ``models.lm.generate`` loop over the frozen tree.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, list_configs
 from repro.core import qat
@@ -20,12 +28,42 @@ from repro.nn import transformer as T
 from repro.nn.module import QuantCtx
 
 
+def serve_engine(frozen, cfg, prompt, max_new):
+    """Prefill + decode as wire rows through the serving frontend."""
+    from repro import serving
+
+    b, s = prompt.shape
+    prog = serving.LMProgram(frozen, cfg, max_prompt=s, max_new=max_new,
+                             max_bucket=1 << (max(s, b, 8) - 1).bit_length())
+    toks = []
+    frontend = serving.ServingFrontend()
+    with frontend:
+        frontend.register(cfg.name, prog, max_delay=1e-3)
+        futs = [frontend.submit(cfg.name,
+                                prog.encode_prefill(i + 1, prompt[i])[None])
+                for i in range(b)]
+        toks.append([int(f.result(60.0).y[0, 0]) for f in futs])
+        for _ in range(max_new - 1):
+            futs = [frontend.submit(cfg.name,
+                                    prog.encode_decode(i + 1)[None])
+                    for i in range(b)]
+            toks.append([int(f.result(60.0).y[0, 0]) for f in futs])
+    print(f"engine: {frontend.stats['launches']} launches, schedules "
+          f"{prog.describe()['ffn_schedules']}")
+    return np.asarray(toks, np.int64).T
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mamba2-1.3b", choices=list_configs())
+    ap.add_argument("--arch", default="smollm-360m", choices=list_configs())
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--engine", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve through serving.LMProgram + ServingFrontend "
+                         "(dense archs); --no-engine uses the direct "
+                         "models.lm.generate loop")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
@@ -35,8 +73,6 @@ def main():
     params = T.lm_init(key, cfg)
     qstate = qat.build_qstate(params)
 
-    n_quant = sum(l.size for l in jax.tree_util.tree_leaves(params)
-                  if l.dtype == jnp.float32) // 1
     frozen = qat.freeze_tree(params, qstate, cfg.lam)
     packed_bytes = sum(l.size for p, l in
                        jax.tree_util.tree_flatten_with_path(frozen)[0]
@@ -44,13 +80,21 @@ def main():
     print(f"{args.arch} (smoke): frozen FC weights -> {packed_bytes} bytes "
           f"of packed int4 codes")
 
-    ctx = QuantCtx(quant=False, compute_dtype=jnp.float32)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len),
-                                0, cfg.vocab)
-    out = generate(frozen, 0, prompt, ctx, cfg, max_new=args.max_new)
+    prompt = np.asarray(jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab))
+    out = None
+    if args.engine:
+        try:
+            out = serve_engine(frozen, cfg, prompt, args.max_new)
+        except ValueError as e:
+            print(f"engine path unavailable ({e}); using the direct loop")
+    if out is None:
+        ctx = QuantCtx(quant=False, compute_dtype=jnp.float32)
+        out = generate(frozen, 0, jnp.asarray(prompt), ctx, cfg,
+                       max_new=args.max_new)
     print(f"generated {out.shape[1]} tokens for {out.shape[0]} requests:")
     for i in range(args.batch):
-        print(f"  req{i}: {out[i].tolist()}")
+        print(f"  req{i}: {np.asarray(out)[i].tolist()}")
 
 
 if __name__ == "__main__":

@@ -4,49 +4,48 @@
     python scripts/check_bench_rows.py check ROWS_FILE      # after benches
 
 ``snapshot`` records, for every row present in the current repo-root JSON,
-its identity (per section: fp32 ``rows`` and ``int8_rows`` keyed by
-(model, batch), ``serving_engine_rows`` by (model, load), ``schedule_rows``
-by (model, bucket, schedule), ``multi_model_rows`` by (load,),
-``slo_trace_rows`` by (trace, tier), ``model_churn_rows`` by
-(models, hot_budget), ``multi_stream_rows`` by (model, load, streams),
-``integrity_rows`` by (model, flip_rate))
-and its guarded metric(s), plus the row's host topology (``n_devices``
-+ ``backend``) when the bench tagged it.
-``check`` then fails loudly if, after the benchmarks reran:
+its identity, its guarded metric values, and the row's host topology
+(``n_devices`` + ``backend``) when the bench tagged it.  ``check`` then
+fails loudly if, after the benchmarks reran:
 
 * any recorded row identity is missing — a benchmark that silently stopped
   emitting a section would ship a shrunken perf file and break the
   PR-over-PR comparison;
-* any ``rows`` / ``int8_rows`` row lost its ``schedule`` label — the label
-  says which kernel schedule produced the number, without it a b≤8
-  ``fused_ms`` entry is ambiguous between the ws and batch-tiled paths;
-  likewise any ``multi_model_rows`` per-model entry missing its
-  ``bucket_schedules`` table (the aggregate number is only meaningful
-  against the schedules each model's buckets bound);
+* any row lost a required label (e.g. the kernel ``schedule`` that
+  produced a ``fused_ms`` number, or a ``multi_model_rows`` per-model
+  ``bucket_schedules`` table) — unlabeled numbers are ambiguous between
+  kernel paths;
 * any guarded metric regressed more than ``CI_BENCH_REGRESSION_PCT``
-  (default 25) percent against the snapshot.  The guarded metrics are the
-  rows' *self-normalized A/B ratios* (fused-vs-per-layer ``speedup``,
-  ``int8_fused_speedup_vs_layer``, engine-vs-naive ``throughput_gain``,
-  N-streams-vs-one ``aggregate_gain`` in ``multi_stream_rows``)
-  rather than absolute ms/rps: on a shared host absolute wall-clock
-  tracks machine load (and the engine's low-load throughput is
-  arrival-rate-bound by construction), while the ratios compare two
-  paths measured interleaved on the same host and are what the perf
-  trajectory actually promises.  ``slo_trace_rows`` rate metrics
-  (``within_slo_frac``, ``goodput_fault``, ``shed_rate``) live in [0, 1]
-  and are guarded ADDITIVELY — the bound is percentage points, not a
-  ratio.  ``model_churn_rows`` carries three self-normalized ratios
-  (cold-tier ``compression_ratio``, cache-hit-vs-uncached
-  ``hot_over_uncached``, high-water-vs-budget ``resident_over_bound``)
-  guarded multiplicatively (``*_ratio`` directions) — the latter two are
-  cache-mechanics invariants, so a blow-up there is a real bug, not
-  host noise.  ``integrity_rows`` guards ``detection_frac`` additively
-  (a [0, 1] rate pinned at 1.0 — every injected bit flip must be
-  caught) and ``scrub_overhead_ratio`` multiplicatively (paired
-  scrubber-on/off p95).  Set the env var to 0 or less to disable
-  the regression leg (e.g. on a deliberately slower host); the row-loss
-  and label guards always run.  ``scripts/ci.sh`` widens the bound on
-  interpret hosts — see the measurement note there.
+  (default 25) percent against the snapshot.
+
+Everything a family guards lives in ONE entry of the ``FAMILIES`` table
+below: its identity ``keys``, its ``metrics`` as (name, direction)
+pairs, and any required ``labels`` / ``nested_labels``.  Adding a new
+bench section to the guard is a one-entry diff.
+
+Metric directions:
+
+* ``higher_ratio`` / ``lower_ratio`` — MULTIPLICATIVE bounds, for the
+  self-normalized A/B ratios the perf trajectory actually promises
+  (fused-vs-per-layer ``speedup``, engine-vs-naive ``throughput_gain``,
+  N-streams-vs-one ``aggregate_gain``, the LM engine-vs-direct-loop
+  ratio, the churn/cache ratios): on a shared host absolute wall-clock
+  tracks machine load, while a ratio compares two paths measured
+  interleaved on the same host.
+* ``higher_abs`` / ``lower_abs`` — ADDITIVE bounds in percentage POINTS,
+  for rate metrics living in [0, 1] (``within_slo_frac``, ``shed_rate``,
+  ``detection_frac``): a multiplicative bound on a near-zero shed rate
+  would trip on any nonzero value while letting a 0.9 -> 0.4 goodput
+  drop through.
+
+Metrics absent on a row are skipped, not treated as regressions (e.g.
+``integrity_rows``: the flip_rate=0 row carries the scrub metric, the
+flip rows the detection metric).  ``schedule_rows`` carries
+interpreter-grade timings recorded for documentation, not hardware
+truth — identity-guarded only (no metrics entry).  Set the env var to 0
+or less to disable the regression leg (e.g. on a deliberately slower
+host); the row-loss and label guards always run.  ``scripts/ci.sh``
+widens the bound on interpret hosts — see the measurement note there.
 
 Topology gating: every guarded bench tags its rows with the host
 execution topology (``n_devices``, ``backend`` — see
@@ -65,59 +64,61 @@ import sys
 ROOT_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_fused_serving.json")
 
-SECTIONS = {
-    "rows": ("model", "batch"),
-    "int8_rows": ("model", "batch"),
-    "serving_engine_rows": ("model", "load"),
-    "schedule_rows": ("model", "bucket", "schedule"),
-    "multi_model_rows": ("load",),
-    "slo_trace_rows": ("trace", "tier"),
-    "model_churn_rows": ("models", "hot_budget"),
-    "multi_stream_rows": ("model", "load", "streams"),
-    "integrity_rows": ("model", "flip_rate"),
+# The whole guard, one entry per bench-row family:
+#   keys          identity columns (row loss is checked per identity)
+#   metrics       ((name, direction), ...) regression-guarded values
+#   labels        row fields that must be present and truthy
+#   nested_labels (outer_field, inner_field): every entry of the row's
+#                 ``outer_field`` dict must carry a truthy ``inner_field``
+FAMILIES = {
+    "rows": {
+        "keys": ("model", "batch"),
+        "metrics": (("speedup", "higher_ratio"),),
+        "labels": ("schedule",),
+    },
+    "int8_rows": {
+        "keys": ("model", "batch"),
+        "metrics": (("int8_fused_speedup_vs_layer", "higher_ratio"),),
+        "labels": ("schedule",),
+    },
+    "serving_engine_rows": {
+        "keys": ("model", "load"),
+        "metrics": (("throughput_gain", "higher_ratio"),),
+    },
+    "schedule_rows": {
+        "keys": ("model", "bucket", "schedule"),
+    },
+    "multi_model_rows": {
+        "keys": ("load",),
+        "metrics": (("aggregate_gain", "higher_ratio"),),
+        "nested_labels": ("per_model", "bucket_schedules"),
+    },
+    "slo_trace_rows": {
+        "keys": ("trace", "tier"),
+        "metrics": (("within_slo_frac", "higher_abs"),
+                    ("goodput_fault", "higher_abs"),
+                    ("shed_rate", "lower_abs")),
+    },
+    "model_churn_rows": {
+        "keys": ("models", "hot_budget"),
+        "metrics": (("compression_ratio", "higher_ratio"),
+                    ("hot_over_uncached", "lower_ratio"),
+                    ("resident_over_bound", "lower_ratio")),
+    },
+    "multi_stream_rows": {
+        "keys": ("model", "load", "streams"),
+        "metrics": (("aggregate_gain", "higher_ratio"),),
+    },
+    "integrity_rows": {
+        "keys": ("model", "flip_rate"),
+        "metrics": (("detection_frac", "higher_abs"),
+                    ("scrub_overhead_ratio", "lower_ratio")),
+    },
+    "lm_serving_rows": {
+        "keys": ("model", "phase"),
+        "metrics": (("engine_over_direct", "higher_ratio"),),
+    },
 }
-
-# guarded metric per section and the direction that counts as regression.
-# schedule_rows carries interpreter-grade timings recorded for
-# documentation, not hardware truth — identity-guarded only.
-METRICS = {
-    "rows": ("speedup", "higher_is_better"),
-    "int8_rows": ("int8_fused_speedup_vs_layer", "higher_is_better"),
-    "serving_engine_rows": ("throughput_gain", "higher_is_better"),
-    "multi_model_rows": ("aggregate_gain", "higher_is_better"),
-    "multi_stream_rows": ("aggregate_gain", "higher_is_better"),
-}
-
-# sections guarded on several metrics at once.  ``*_abs`` directions are
-# ADDITIVE (pct as percentage POINTS) for rate metrics living in [0, 1]
-# — a multiplicative bound on a near-zero shed rate would trip on any
-# nonzero value while letting a 0.9 -> 0.4 goodput drop through.
-# ``*_ratio`` directions are MULTIPLICATIVE, for self-normalized A/B
-# ratios where relative movement is what matters.
-MULTI_METRICS = {
-    "slo_trace_rows": (
-        ("within_slo_frac", "higher_abs"),
-        ("goodput_fault", "higher_abs"),
-        ("shed_rate", "lower_abs"),
-    ),
-    "model_churn_rows": (
-        ("compression_ratio", "higher_ratio"),
-        ("hot_over_uncached", "lower_ratio"),
-        ("resident_over_bound", "lower_ratio"),
-    ),
-    # integrity_rows: detection_frac is a [0, 1] rate (must stay at 1.0
-    # — additive pct-point bound); scrub_overhead_ratio is a paired
-    # on/off p95 ratio (multiplicative).  The flip_rate=0 row carries
-    # the scrub metric, the flip rows the detection metric; absent
-    # metrics on a row are skipped, not treated as regressions.
-    "integrity_rows": (
-        ("detection_frac", "higher_abs"),
-        ("scrub_overhead_ratio", "lower_ratio"),
-    ),
-}
-
-# sections whose rows must name the kernel schedule that produced them
-LABELED = ("rows", "int8_rows")
 
 
 def _load(path: str = ROOT_JSON) -> dict:
@@ -140,19 +141,15 @@ def _row_topology(row: dict):
 
 
 def row_records(path: str = ROOT_JSON) -> list:
-    """[[section, *key_values, metric_or_None, topology_or_None], ...]
-    for every row."""
+    """[[section, *key_values, metrics_dict_or_None, topology_or_None],
+    ...] for every row."""
     data = _load(path)
     records = []
-    for section, keys in SECTIONS.items():
-        metric = METRICS.get(section, (None,))[0]
-        multi = MULTI_METRICS.get(section)
+    for section, spec in FAMILIES.items():
+        metrics = spec.get("metrics", ())
         for row in data.get(section, []):
-            if multi:
-                val = {m: row.get(m) for m, _ in multi}
-            else:
-                val = row.get(metric) if metric else None
-            records.append([section] + [row.get(k) for k in keys]
+            val = {m: row.get(m) for m, _ in metrics} if metrics else None
+            records.append([section] + [row.get(k) for k in spec["keys"]]
                            + [val, _row_topology(row)])
     return records
 
@@ -164,18 +161,30 @@ def regression_pct() -> float:
         return 25.0
 
 
+def _as_metric_dict(val, metrics) -> dict:
+    """Normalize a snapshot value: current snapshots store a metrics
+    dict; older ones stored the single guarded metric as a scalar."""
+    if isinstance(val, dict):
+        return val
+    if val is not None and metrics:
+        return {metrics[0][0]: val}
+    return {}
+
+
 def check(rows_file: str, path: str = ROOT_JSON) -> int:
     with open(rows_file) as f:
         before = json.load(f)
     after = {tuple(r[:-2]): (r[-2], r[-1]) for r in row_records(path)}
     failures = []
     guarded_ids = set()
+    pct = regression_pct()
 
     for rec in before:
         section = rec[0] if rec else None
-        if section not in SECTIONS:
+        spec = FAMILIES.get(section)
+        if spec is None:
             continue                     # section retired: nothing to hold
-        n_keys = len(SECTIONS[section])
+        n_keys = len(spec["keys"])
         if len(rec) == n_keys + 3:
             rid, old_val, old_topo = tuple(rec[:-2]), rec[-2], rec[-1]
         elif len(rec) == n_keys + 2:
@@ -192,63 +201,45 @@ def check(rows_file: str, path: str = ROOT_JSON) -> int:
         if old_topo and new_topo and old_topo != new_topo:
             # host topology changed between snapshot and rerun: the
             # wall-clock-derived metrics are not comparable.  Row-loss
-            # and label guards above/below still apply.
+            # and label guards still apply.
             continue
-        pct = regression_pct()
-        if section in MULTI_METRICS:
-            if pct <= 0 or not isinstance(old_val, dict):
+        if pct <= 0:
+            continue
+        metrics = spec.get("metrics", ())
+        old_vals = _as_metric_dict(old_val, metrics)
+        new_vals = _as_metric_dict(new_val, metrics)
+        tol = pct / 100.0
+        for metric, direction in metrics:
+            ov, nv = old_vals.get(metric), new_vals.get(metric)
+            if not isinstance(ov, (int, float)) or \
+                    not isinstance(nv, (int, float)):
                 continue
-            new_vals = new_val if isinstance(new_val, dict) else {}
-            tol = pct / 100.0
-            for metric, direction in MULTI_METRICS[section]:
-                ov, nv = old_val.get(metric), new_vals.get(metric)
-                if not isinstance(ov, (int, float)) or \
-                        not isinstance(nv, (int, float)):
-                    continue
-                if direction.endswith("_ratio"):     # multiplicative
-                    worse = (nv > ov * (1 + tol)
-                             if direction == "lower_ratio"
-                             else nv < ov * (1 - tol))
-                    bound = f"> {pct:.0f}% bound"
-                else:                                # additive, pct points
-                    worse = (nv > ov + tol if direction == "lower_abs"
-                             else nv < ov - tol)
-                    bound = f"> {pct:.0f} pct-point bound"
-                if worse:
-                    failures.append(
-                        f"{rid}: {metric} regressed {ov:.3f} -> "
-                        f"{nv:.3f} ({bound})")
-            continue
-        if pct <= 0 or old_val is None or section not in METRICS:
-            continue
-        metric, direction = METRICS[section]
-        if not isinstance(old_val, (int, float)) or \
-                not isinstance(new_val, (int, float)):
-            continue
-        if direction == "lower_is_better":
-            if new_val > old_val * (1 + pct / 100.0):
+            if direction.endswith("_ratio"):         # multiplicative
+                worse = (nv > ov * (1 + tol) if direction == "lower_ratio"
+                         else nv < ov * (1 - tol))
+                bound = f"> {pct:.0f}% bound"
+            else:                                    # additive, pct points
+                worse = (nv > ov + tol if direction == "lower_abs"
+                         else nv < ov - tol)
+                bound = f"> {pct:.0f} pct-point bound"
+            if worse:
                 failures.append(
-                    f"{rid}: {metric} regressed {old_val:.3f} -> "
-                    f"{new_val:.3f} (> {pct:.0f}% bound)")
-        else:
-            if new_val < old_val * (1 - pct / 100.0):
-                failures.append(
-                    f"{rid}: {metric} regressed {old_val:.3f} -> "
-                    f"{new_val:.3f} (> {pct:.0f}% bound)")
+                    f"{rid}: {metric} regressed {ov:.3f} -> "
+                    f"{nv:.3f} ({bound})")
 
     data = _load(path)
-    for section in LABELED:
+    for section, spec in FAMILIES.items():
         for row in data.get(section, []):
-            if not row.get("schedule"):
-                keys = SECTIONS[section]
-                rid = [section] + [row.get(k) for k in keys]
-                failures.append(f"{rid}: missing schedule label")
-    for row in data.get("multi_model_rows", []):
-        for model, entry in (row.get("per_model") or {}).items():
-            if not entry.get("bucket_schedules"):
-                failures.append(
-                    f"['multi_model_rows', {row.get('load')}, {model}]: "
-                    "missing bucket_schedules labels")
+            rid = [section] + [row.get(k) for k in spec["keys"]]
+            for label in spec.get("labels", ()):
+                if not row.get(label):
+                    failures.append(f"{rid}: missing {label} label")
+            if "nested_labels" in spec:
+                outer, inner = spec["nested_labels"]
+                for name, entry in (row.get(outer) or {}).items():
+                    if not entry.get(inner):
+                        failures.append(
+                            f"{rid + [name]}: missing {inner} labels")
 
     if failures:
         print("BENCH_fused_serving.json failed the bench guard:")

@@ -17,12 +17,15 @@
 # under a bounded bucket, plus threaded-frontend and 4-device-sharded
 # bit-exact parity legs) and bench_integrity (background-scrubber
 # hot-path overhead plus detection->recovery under seeded per-launch
-# bit flips, outputs bit-identical to a no-fault run) — and rewrites
+# bit flips, outputs bit-identical to a no-fault run) and
+# bench_lm_serving (4-bit transformer prefill/decode as an LMProgram
+# behind the ServingFrontend vs the direct greedy loop, parity-gated
+# bit-identical) — and rewrites
 # BENCH_fused_serving.json at the
 # repo root (fp32 rows + int8_rows + serving_engine_rows +
 # schedule_rows + multi_model_rows + slo_trace_rows + model_churn_rows
-# + multi_stream_rows + integrity_rows, every guarded row
-# topology-tagged), so every PR
+# + multi_stream_rows + integrity_rows + lm_serving_rows, every guarded
+# row topology-tagged), so every PR
 # leaves the cross-PR perf trajectory current.  A benchmark overrun (budget exceeded) fails
 # CI loudly rather than silently shipping a stale perf file, and
 # scripts/check_bench_rows.py fails the run if the refreshed JSON lost rows

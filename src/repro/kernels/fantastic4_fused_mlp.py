@@ -108,7 +108,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from . import COMPILER_PARAMS
+from . import COMPILER_PARAMS, ref
 
 # layer dims are padded to this multiple (f32 lane width) before entering
 # the kernel; keeps every in-kernel slice tile-aligned.
@@ -210,8 +210,7 @@ def _kernel(*refs, activations: Tuple[Optional[str], ...],
             del decoded[l]
         y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
         y = y * alpha1_ref[...] + bias_ref[...]
-        if activations[l] == "relu":
-            y = jnp.maximum(y, 0.0)
+        y = ref.apply_activation(y, activations[l])
         if int8_acts:
             if l < n_layers - 1:
                 # §VI-C re-quantization: the activation leaves the layer as
@@ -389,7 +388,8 @@ def build_ws_operands(packed: Sequence[jax.Array],
 
     Returns ``(packed (L, D/2, D) u8, omega (L, 1, 4), alpha1 (L, 1, D),
     bias (L, 1, D), meta (L, 1, 4))`` where ``meta[l] = [scale_l,
-    relu_flag, quant_flag, 0]`` — the activation/re-quantization choices
+    activation_code, quant_flag, 0]`` (codes per ``ref.ACTIVATION_CODES``:
+    0 none, 1 relu, 2 gelu) — the activation/re-quantization choices
     become data so one kernel body can serve every grid step (the layer id
     is a traced ``program_id``).  Do this once per frozen pack, not per
     call: the serving plan caches the result.
@@ -402,10 +402,10 @@ def build_ws_operands(packed: Sequence[jax.Array],
         om.append(omega[l].reshape(1, 4).astype(jnp.float32))
         a1.append(_pad2(alpha1[l].reshape(1, -1).astype(jnp.float32), 1, d))
         bi.append(_pad2(bias[l].reshape(1, -1).astype(jnp.float32), 1, d))
-        relu_f = 1.0 if activations[l] == "relu" else 0.0
+        act_f = float(ref.activation_code(activations[l]))
         quant_f = 1.0 if (act_dtype == "int8" and l < n_layers - 1) else 0.0
         me.append(jnp.asarray(
-            [[float(jnp.asarray(scale[l]).reshape(())), relu_f, quant_f,
+            [[float(jnp.asarray(scale[l]).reshape(())), act_f, quant_f,
               0.0]], jnp.float32))
     return (jnp.stack(pk), jnp.stack(om), jnp.stack(a1), jnp.stack(bi),
             jnp.stack(me))
@@ -423,9 +423,9 @@ def _ws_kernel(x_ref, packed_ref, omega_ref, alpha1_ref, bias_ref, meta_ref,
     w = _decode_tile(packed_ref[0], omega_ref[0])
     y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
     y = y * alpha1_ref[0] + bias_ref[0]
-    # activation/quantization flags are per-layer *data* (meta operand):
+    # activation/quantization choices are per-layer *data* (meta operand):
     # the layer id is traced, so the branch cannot be a python conditional.
-    y = jnp.where(meta_ref[0, 0, 1] > 0, jnp.maximum(y, 0.0), y)
+    y = ref.apply_activation_coded(y, meta_ref[0, 0, 1])
     s = meta_ref[0, 0, 0]
     if act_dtype == "int8":
         q = jnp.clip(jnp.round(y / s), -127.0, 127.0)
@@ -564,7 +564,7 @@ def _stream_kernel(x_ref, packed_ref, omega_ref, alpha1_ref, bias_ref,
     y = y * alpha1_ref[0] + bias_ref[0]
     # per-layer activation/quantization choices are data (meta operand),
     # exactly as in the ws kernel — the layer id is traced.
-    y = jnp.where(meta_ref[0, 0, 1] > 0, jnp.maximum(y, 0.0), y)
+    y = ref.apply_activation_coded(y, meta_ref[0, 0, 1])
     s = meta_ref[0, 0, 0]
     if act_dtype == "int8":
         q = jnp.clip(jnp.round(y / s), -127.0, 127.0)

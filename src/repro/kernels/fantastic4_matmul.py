@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from . import COMPILER_PARAMS
+from . import COMPILER_PARAMS, ref
 
 
 def _kernel(x_ref, w_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref,
@@ -70,8 +70,7 @@ def _kernel(x_ref, w_ref, omega_ref, alpha1_ref, bias_ref, alpha2_ref,
         y = acc_ref[...]
         y = y * alpha1_ref[...]                           # (1, bn) broadcasts
         y = y + bias_ref[...]
-        if activation == "relu":
-            y = jnp.maximum(y, 0.0)
+        y = ref.apply_activation(y, activation)
         y = y * alpha2_ref[0, 0]
         o_ref[...] = y.astype(o_ref.dtype)
 

@@ -15,16 +15,50 @@ import jax.numpy as jnp
 from ..core import bitplanes
 
 
+# elementwise activations the epilogue can fuse.  The integer codes are
+# the wire format of the ws/stream schedules' meta operand (the layer id is
+# traced there, so the choice must be data, not a python branch); the
+# batch-tiled kernels and this oracle branch statically on the name.  Both
+# relu(0) and gelu(0) are exactly 0.0, so zero-padded epilogue columns stay
+# zero under every supported activation.
+ACTIVATION_CODES = {None: 0, "none": 0, "relu": 1, "gelu": 2}
+
+
+def activation_code(activation: Optional[str]) -> int:
+    try:
+        return ACTIVATION_CODES[activation]
+    except KeyError:
+        raise ValueError(f"unsupported activation {activation}") from None
+
+
+def apply_activation(y: jax.Array, activation: Optional[str]) -> jax.Array:
+    """Shared static-activation branch: oracle and every kernel schedule
+    route through the same expressions, so schedule parity is bitwise."""
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation in (None, "none"):
+        return y
+    raise ValueError(f"unsupported activation {activation}")
+
+
+def apply_activation_coded(y: jax.Array, code: jax.Array) -> jax.Array:
+    """Traced-code twin of ``apply_activation`` for the ws/stream kernels,
+    where the layer id (hence the activation choice) is runtime data.  The
+    selected branch computes the exact same expression as the static one,
+    so the two forms agree bitwise."""
+    return jnp.where(code > 1.5, jax.nn.gelu(y),
+                     jnp.where(code > 0.5, jnp.maximum(y, 0.0), y))
+
+
 def _epilogue(y: jax.Array, bias, alpha1, alpha2, activation: Optional[str],
               out_dtype) -> jax.Array:
     if alpha1 is not None:
         y = y * alpha1.astype(y.dtype)
     if bias is not None:
         y = y + bias.astype(y.dtype)
-    if activation == "relu":
-        y = jnp.maximum(y, 0.0)
-    elif activation not in (None, "none"):
-        raise ValueError(f"unsupported activation {activation}")
+    y = apply_activation(y, activation)
     if alpha2 is not None:
         y = y * jnp.asarray(alpha2, y.dtype)
     return y.astype(out_dtype)

@@ -117,6 +117,54 @@ def mlp_apply(params: dict, qstate: Any, bn_state: dict, x: jax.Array,
 
 # ----------------------------------------------------------------- freeze
 
+def freeze_dense_layer(codes: jax.Array, omega: jax.Array, *,
+                       alpha1: Optional[np.ndarray] = None,
+                       bias: Optional[np.ndarray] = None,
+                       alpha2: Optional[float] = None,
+                       activation: Optional[str] = None) -> dict:
+    """Pack one ECL-coded FC layer into the canonical serving layer dict.
+
+    ``codes`` is the unpadded ``(K, M)`` uint8 code matrix; odd K grows a
+    zero code row before bit-plane packing (decoded zero weights — the
+    serving chains mirror the pad on x).  Epilogue constants default to
+    the identity (α₁=1, b=0, α₂=1).  This is the single construction
+    every freezer shares — the paper MLPs (:func:`freeze_mlp`) and the
+    transformer block packs (``serving.lm.freeze_lm``) — so format
+    selection, size accounting and the frozen-at-birth content CRC are
+    identical across workloads.
+    """
+    k, m = codes.shape
+    if k % 2:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((1, m), jnp.uint8)], axis=0)
+    packed = bitplanes.pack_codes_rows(codes)
+    alpha1 = np.ones((m,), np.float32) if alpha1 is None \
+        else np.asarray(alpha1, np.float32)
+    bias = np.zeros((m,), np.float32) if bias is None \
+        else np.asarray(bias, np.float32)
+    alpha2 = np.float32(1.0 if alpha2 is None else alpha2)
+    codes_np = np.asarray(codes[:k])
+    fmt = formats.select_format(codes_np)
+    ct = formats.encode(codes_np, fmt)
+    return {
+        "packed": packed,
+        "omega": omega.astype(jnp.float32),
+        "alpha1": jnp.asarray(alpha1, jnp.float32),
+        "bias": jnp.asarray(bias, jnp.float32),
+        "alpha2": jnp.asarray(alpha2),
+        "shape": (k, m),
+        "activation": activation,
+        "format": fmt,
+        "size_bytes": ct.size_bytes,
+        "dense_bytes": codes_np.size * 4,   # fp32 original, for CR
+        # frozen-at-birth content digest: every downstream tier
+        # (GuardedPlan, compress_pack, export_pack) verifies against
+        # this same value
+        "crc": integrity.layer_content_crc(
+            codes_np, omega, alpha1, bias, alpha2),
+    }
+
+
 def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
                act_bits: Optional[int] = None) -> dict:
     """ECL-quantize every layer and fold BN into the §V epilogue constants.
@@ -132,11 +180,7 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
         node = layer["kernel"]
         probs = qstate["layers"][i]["kernel"]["probs"]
         codes = ecl.assign(node["w"], node["omega"], probs, lam)
-        k, m = codes.shape
-        if k % 2:
-            codes = jnp.concatenate(
-                [codes, jnp.zeros((1, m), jnp.uint8)], axis=0)
-        packed = bitplanes.pack_codes_rows(codes)
+        m = codes.shape[1]
 
         if "bn_gamma" in layer:
             st = bn_state["layers"][i]
@@ -148,27 +192,9 @@ def freeze_mlp(params: dict, qstate: dict, bn_state: dict, lam: float,
             alpha1 = np.ones((m,), np.float32)
             bias = np.asarray(layer["bias"])
 
-        alpha2 = np.float32(1.0)
-        codes_np = np.asarray(codes[:k])
-        fmt = formats.select_format(codes_np)
-        ct = formats.encode(codes_np, fmt)
-        layers.append({
-            "packed": packed,
-            "omega": node["omega"].astype(jnp.float32),
-            "alpha1": jnp.asarray(alpha1, jnp.float32),
-            "bias": jnp.asarray(bias, jnp.float32),
-            "alpha2": jnp.asarray(alpha2),
-            "shape": (k, m),
-            "activation": "relu" if i < n - 1 else None,
-            "format": fmt,
-            "size_bytes": ct.size_bytes,
-            "dense_bytes": codes_np.size * 4,   # fp32 original, for CR
-            # frozen-at-birth content digest: every downstream tier
-            # (GuardedPlan, compress_pack, export_pack) verifies against
-            # this same value
-            "crc": integrity.layer_content_crc(
-                codes_np, node["omega"], alpha1, bias, alpha2),
-        })
+        layers.append(freeze_dense_layer(
+            codes, node["omega"], alpha1=alpha1, bias=bias,
+            activation="relu" if i < n - 1 else None))
     return {"layers": layers, "act_bits": act_bits}
 
 

@@ -23,7 +23,8 @@ Large fleets fail constantly; the posture here (DESIGN.md §4):
 The same transient-retry posture extends to **serving**
 (``serving.frontend``'s degradation ladder: retry → per-layer chain
 fallback → per-model quarantine); :class:`FaultInjector` below is the
-test/benchmark harness for it — it wraps a ``serving.ExecutionPlan`` so
+test/benchmark harness for it — it wraps any ``serving.ServableProgram``
+(an ``ExecutionPlan``, a ``CachedPlan`` handle, an ``LMProgram``) so
 launches raise synthetic XLA/VMEM-style errors probabilistically or on
 schedule, which is how the goodput-under-fault numbers in
 ``benchmarks/bench_slo_traces.py`` and the retry-parity/quarantine tests
@@ -75,10 +76,13 @@ class InjectedFault(RuntimeError):
 
 
 class FaultInjector:
-    """Wrap an ``ExecutionPlan`` so launches fail on demand.
+    """Wrap a ``ServableProgram`` so launches fail on demand.
 
-    Proxies every attribute to the wrapped plan (a batcher or frontend
-    cannot tell the difference) but intercepts the two launch surfaces —
+    Proxies every attribute to the wrapped program (a batcher or frontend
+    cannot tell the difference; hot flips need only the protocol's
+    ``.layers`` surface of standard frozen layer dicts, which every
+    program implementation carries) but intercepts the two launch
+    surfaces —
     ``entry(bucket)`` and ``run(x)`` — and raises :class:`InjectedFault`
     *before* the kernel runs when the configured trigger fires:
 

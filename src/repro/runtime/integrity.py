@@ -186,6 +186,13 @@ class GuardedPlan:
     """Delegating plan proxy that verifies operand checksums and screens
     outputs on the live launch path.
 
+    Guards any :class:`~repro.serving.plans.ServableProgram` whose
+    ``.layers`` are standard frozen layer dicts — pack plans, cache
+    handles, and the transformer ``LMProgram`` (every block's FFN layer
+    is checksummed per launch) alike.  The canary probe drives
+    ``run()`` with synthetic rows, so leave it off for *stateful*
+    programs whose wire rows carry request framing (the LM program).
+
     Expected per-layer checksums come from the stamped ``layer["crc"]``
     when the pack carries them (freeze / decode both stamp), else are
     computed from the first-seen operands (trust-on-first-use for

@@ -1,6 +1,14 @@
-"""Unified serving engine: execution plans + tile-bucketed micro-batching.
+"""Unified serving engine: servable programs + tile-bucketed micro-batching.
 
-    queue ──▶ bucket ──▶ plan ──▶ kernel
+    queue ──▶ bucket ──▶ program ──▶ kernel
+
+The engine serves anything implementing the :class:`~.plans.\
+ServableProgram` protocol (``d_in``/``d_out``/``bucket_sizes`` +
+``bucket_for``/``entry``/``run``/``describe``): the frozen-MLP
+:class:`~.plans.ExecutionPlan`, the lazy :class:`~.pack_cache.CachedPlan`
+cache handle, guard/fault proxies, and the transformer
+:class:`~.lm.LMProgram` (4-bit prefill/decode) all ride the same
+batcher → frontend → cache machinery.
 
 * :mod:`plans` — :class:`ExecutionPlan`: mode (fused fp32 / fused int8 /
   per-layer / oracle), autotuned blocks, VMEM-fit fallback and int8
@@ -51,8 +59,8 @@ from ..runtime.fault import FaultInjector, InjectedFault      # noqa: F401
 from ..runtime.integrity import (GuardedPlan, IntegrityError,  # noqa: F401
                                  IntegrityPolicy, unwrap_chain)
 from .plans import (ACT_DTYPES, MODES, ExecutionPlan,        # noqa: F401
-                    adopt_plan, build_plan, calibrate_act_scales,
-                    forget_plan, get_plan)
+                    ServableProgram, adopt_plan, build_plan,
+                    calibrate_act_scales, forget_plan, get_plan)
 from .slo import (TIERS, AdmissionController, Rejected,       # noqa: F401
                   SLOTier, resolve_tier)
 from .batcher import Completion, MicroBatcher, Taken, replay  # noqa: F401
@@ -62,3 +70,6 @@ from .pack_cache import (CachedPlan, ColdPack, PackCache,     # noqa: F401
 from .sharded import ShardedStack                             # noqa: F401
 from .frontend import (ModelRegistry, RetryPolicy, Served,    # noqa: F401
                        ServingFrontend)
+# .lm imports models.mlp (freeze helper), which imports this package —
+# keep it last so the partially-initialized module is already complete
+from .lm import LMProgram, build_lm_program, freeze_lm        # noqa: F401

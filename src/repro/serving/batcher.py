@@ -1,4 +1,10 @@
-"""Request queue + tile-bucketed micro-batcher over an ExecutionPlan.
+"""Request queue + tile-bucketed micro-batcher over a ServableProgram.
+
+The batcher depends only on the :class:`~repro.serving.plans.ServableProgram`
+surface — ``d_in``, ``bucket_sizes``, ``bucket_for``, ``entry``, ``run``,
+plus the optional ``rows_per_request`` contract — so an
+:class:`~repro.serving.plans.ExecutionPlan`, an LM prefill/decode program
+(``serving.lm``) or any proxy around either slots in unchanged.
 
 FantastIC4's throughput story (§V: 2.45 TOPS on the GSC MLPs) assumes the
 execution units always see full row tiles; a serving frontend that launches
@@ -140,6 +146,10 @@ class MicroBatcher:
                  max_queued_rows: Optional[int] = None,
                  service_times: Optional[Dict[int, float]] = None):
         self.plan = plan
+        # programs with per-row request state (e.g. one row per decode
+        # sequence) fix the row count a request must carry; None = any.
+        self.rows_per_request: Optional[int] = getattr(
+            plan, "rows_per_request", None)
         self.tier = resolve_tier(tier)
         self.max_delay = self.tier.max_delay if max_delay is None \
             else max_delay
@@ -195,6 +205,14 @@ class MicroBatcher:
         if x.ndim != 2 or x.shape[1] != self.plan.d_in:
             raise ValueError(f"request must be (rows, {self.plan.d_in}), "
                              f"got {x.shape}")
+        if self.rows_per_request and x.shape[0] != self.rows_per_request:
+            # programs that carry per-row request state pin the row count;
+            # admitting a mismatched request would mis-scatter every later
+            # request sharing its bucket — fail loudly at intake instead.
+            raise ValueError(
+                f"program requires exactly {self.rows_per_request} row(s) "
+                f"per request (rows_per_request contract), got "
+                f"{x.shape[0]}")
         with self._lock:
             rows = x.shape[0]
             if self.max_queued_rows is not None and \
@@ -363,6 +381,14 @@ class MicroBatcher:
         dt = time.perf_counter() - t0
         self.admission.observe(bucket, dt)   # running EWMA cost model
 
+        if y.ndim != 2 or y.shape[0] < rows:
+            # a program that returns fewer rows than it was handed would
+            # silently mis-scatter the tail requests of the bucket; make
+            # the contract violation loud and attributable instead.
+            raise RuntimeError(
+                f"program returned {getattr(y, 'shape', None)} for a "
+                f"{rows}-row bucket (need >= {rows} rows): refusing to "
+                "scatter misaligned results")
         out: List[Completion] = []
         off = 0
         with self._lock:

@@ -146,7 +146,7 @@ from ..runtime.integrity import (GuardedPlan, IntegrityError,
 from .batcher import MicroBatcher, Taken
 from .pack_cache import (CachedPlan, ColdPack, PackCache,
                          verify_cold_pack)
-from .plans import ExecutionPlan, forget_plan
+from .plans import ServableProgram, forget_plan
 from .slo import (REJECT_CORRUPTED, REJECT_QUARANTINED,
                   REJECT_UNREGISTERED, Rejected, resolve_tier)
 
@@ -192,7 +192,14 @@ class Served:
 
 
 class ModelRegistry:
-    """Model id → (:class:`ExecutionPlan`, :class:`MicroBatcher`).
+    """Model id → (:class:`~.plans.ServableProgram`, :class:`MicroBatcher`).
+
+    Any program satisfying the protocol registers — a frozen-pack
+    :class:`~.plans.ExecutionPlan`, a transformer :class:`~.lm.LMProgram`,
+    a :class:`~.pack_cache.CachedPlan` handle, or a guarded/fault-proxy
+    wrapper around one of those; the registry and frontend feature-detect
+    optional capabilities (``demote_bucket``, ``buckets``, ``pack``) and
+    never type-switch on the concrete class.
 
     Every registered batcher shares the registry's clock, so one dispatch
     loop can compare deadlines across models directly.  Registration is
@@ -208,10 +215,10 @@ class ModelRegistry:
         self.clock = clock
         self.cache = cache
         self._lock = threading.Lock()
-        self._plans: Dict[str, ExecutionPlan] = {}
+        self._plans: Dict[str, ServableProgram] = {}
         self._batchers: Dict[str, MicroBatcher] = {}
 
-    def register(self, model_id: str, plan: ExecutionPlan, *,
+    def register(self, model_id: str, plan: ServableProgram, *,
                  tier=None,
                  max_delay: Optional[float] = None,
                  max_bucket: Optional[int] = None,
@@ -306,7 +313,7 @@ IntegrityPolicy`) wraps the plan in a ``GuardedPlan`` — per-launch
                 forget_plan(pack)
         return dropped
 
-    def plan(self, model_id: str) -> ExecutionPlan:
+    def plan(self, model_id: str) -> ServableProgram:
         with self._lock:
             return self._plans[model_id]
 
@@ -488,7 +495,7 @@ class ServingFrontend:
 
     # ------------------------------------------------------------- intake
 
-    def register(self, model_id: str, plan: ExecutionPlan, *,
+    def register(self, model_id: str, plan: ServableProgram, *,
                  tier=None,
                  max_delay: Optional[float] = None,
                  max_bucket: Optional[int] = None,

@@ -1,0 +1,499 @@
+"""LM block programs — serve a 4-bit frozen transformer through the engine.
+
+The serving stack (micro-batcher, frontend, pack cache, integrity guard)
+speaks :class:`~repro.serving.plans.ServableProgram`.  This module provides
+the second implementation of that protocol after :class:`ExecutionPlan`:
+:class:`LMProgram`, a two-phase causal-LM program over a 4-bit frozen
+transformer.
+
+Freezing (:func:`freeze_lm`) reuses the EC4T path end to end: every FC-family
+projection — attention q/k/v/o *and* the FFN matrices — becomes a packed
+``{"packed", "omega"}`` leaf (4 bits/weight in HBM); embeddings, norms,
+biases and the lm head stay fp32 per the paper's mixed-precision rule.
+
+The program then resolves **megakernel-backed plans per block** for the FFN,
+built from the *same packed codes* the frozen tree holds, so the engine path
+and the direct ``generate`` loop multiply bitwise-identical weights:
+
+* ``act == "gelu"``  — one 2-layer fused chain plan per block
+  (fc1 + gelu + fc2, biases folded into the §V epilogue).
+* ``act == "swiglu"``— three single-layer plans per block (gate / up /
+  down).  The GLU halves cannot share a chain plan: each quantized leaf
+  carries its *own* 4-centroid ω basis, and a pack layer has exactly one.
+  The ``silu(g) * u`` combine runs between plans, exactly mirroring
+  :func:`repro.nn.layers.swiglu` in fp32.
+
+Attention stays a dense-math jax path over the frozen leaves (``materialize``
+decodes packed q/k/v/o on the fly), jitted once and vmapped over sequences so
+every per-request KV cache stays independent.
+
+Two phases, one wire format.  A request row is
+
+    [seq_id, n_tokens, tok_0 .. tok_{n-1}, 0-padding]      (d_in floats)
+
+``n_tokens >= 1`` prefills a new sequence and emits its first token;
+``n_tokens == 0`` advances an existing sequence one decode step.  The output
+row is ``[token_id]`` (d_out == 1).  seq_id 0 marks bucket padding (output
+0.0); unknown/invalid rows answer -1.0 rather than failing the batch.
+
+This shape is what binds the phases to the kernel schedules the paper cares
+about: a decode batch reaches the FFN as ``m = n_seqs`` rows (the
+weight-stationary sweet spot), while a prefill reaches it as ``m = s`` token
+rows (batch-tiled territory).  The plans' measured mode selection does the
+rest per bucket.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import bitplanes, qat
+from ..nn import attention as attn
+from ..nn.layers import layer_norm, rms_norm, rope_cos_sin
+from ..nn.module import FP32_CTX
+from . import plans
+
+__all__ = ["freeze_lm", "build_lm_program", "LMProgram"]
+
+
+def _check_lm_supported(cfg: ArchConfig) -> None:
+    """The LM program covers the dense-attention archs; the exotic block
+    flavours keep their existing launch paths until they grow programs."""
+    if cfg.family != "dense":
+        raise ValueError(
+            f"LMProgram serves dense-family archs only, got {cfg.family!r} "
+            f"({cfg.name})")
+    if cfg.mla is not None or cfg.encdec or cfg.global_attn_layers:
+        raise ValueError(
+            f"LMProgram does not support mla/encdec/mixed-attn archs "
+            f"({cfg.name})")
+    if cfg.act not in ("swiglu", "gelu"):
+        raise ValueError(f"unsupported FFN act {cfg.act!r}")
+    if not cfg.quantize:
+        raise ValueError(
+            "LMProgram serves 4-bit frozen trees; arch has quantize=False")
+
+
+def freeze_lm(params: Any, qstate: Any, cfg: ArchConfig,
+              lam: Optional[float] = None) -> Any:
+    """Freeze a trained transformer for serving: every quantized leaf (attn
+    q/k/v/o and FFN matrices) becomes a packed 4-bit ``{"packed","omega"}``
+    dict; embeddings/norms/biases stay fp32.  Thin, checked wrapper over
+    :func:`repro.core.qat.freeze_tree`."""
+    _check_lm_supported(cfg)
+    return qat.freeze_tree(params, qstate, cfg.lam if lam is None else lam)
+
+
+def _frozen_codes(leaf: dict) -> Tuple[np.ndarray, np.ndarray]:
+    """(K, M) uint8 codes + (4,) omega from a frozen kernel leaf."""
+    if not qat.is_frozen_leaf(leaf):
+        raise ValueError(
+            "expected a frozen {'packed','omega'} leaf — freeze the tree "
+            "with freeze_lm() before building an LMProgram")
+    codes = np.asarray(bitplanes.unpack_codes_rows(leaf["packed"]))
+    return codes, np.asarray(leaf["omega"], np.float32)
+
+
+def _np_or_none(x) -> Optional[np.ndarray]:
+    return None if x is None else np.asarray(x, np.float32)
+
+
+class LMProgram:
+    """ServableProgram serving greedy prefill/decode of a frozen 4-bit LM.
+
+    Stateful: sequences live in the program between requests (seq_id ->
+    per-block KV caches + last token).  ``rows_per_request = 1`` — each wire
+    row is one whole request, so the micro-batcher's scatter loop maps row i
+    of a bucket back to request i with no partial-request splits.
+    """
+
+    rows_per_request: int = 1
+
+    def __init__(self, frozen: Any, cfg: ArchConfig, *,
+                 max_prompt: int = 64, max_new: int = 64,
+                 mode: str = "auto", interpret: Optional[bool] = None,
+                 max_bucket: int = 64, block_m: Optional[int] = None):
+        _check_lm_supported(cfg)
+        if max_prompt < 1 or max_new < 1:
+            raise ValueError("max_prompt and max_new must be >= 1")
+        if max_prompt > max_bucket:
+            raise ValueError(
+                f"max_prompt ({max_prompt}) must fit the FFN bucket ceiling "
+                f"({max_bucket}): a prefill reaches the FFN as one "
+                "s-token row batch")
+        self.cfg = cfg
+        self.frozen = frozen
+        self.max_prompt = int(max_prompt)
+        self.max_new = int(max_new)
+        self.cache_len = self.max_prompt + self.max_new
+        if cfg.window is not None and self.cache_len < cfg.window:
+            raise ValueError(
+                f"KV cache ({self.cache_len}) shorter than the attention "
+                f"window ({cfg.window})")
+
+        # --- ServableProgram surface
+        self.d_in = 2 + self.max_prompt
+        self.d_out = 1
+        sizes, b = [], 1
+        while b <= max_bucket:
+            sizes.append(b)
+            b *= 2
+        self.bucket_sizes: Tuple[int, ...] = tuple(sizes)
+
+        # --- per-block frozen params (slice the L-stacked leaves)
+        stacks = frozen["stacks"]
+        if set(stacks.keys()) != {"dense"}:
+            raise ValueError(
+                f"expected a pure dense stack, got {sorted(stacks)}")
+        self._blocks: List[dict] = [
+            jax.tree_util.tree_map(lambda a, _l=l: a[_l], stacks["dense"])
+            for l in range(cfg.n_layers)
+        ]
+        self._table = jnp.asarray(frozen["embed"]["table"], jnp.float32)
+
+        # --- FFN plans per block, built from the frozen leaves' own codes
+        self._plan_kw = dict(mode=mode, act_dtype="float32",
+                             interpret=interpret, max_bucket=max_bucket,
+                             block_m=block_m)
+        self._packs: List[dict] = []
+        self._plans: List[Dict[str, plans.ExecutionPlan]] = []
+        self.layers: List[dict] = []
+        for l, blk in enumerate(self._blocks):
+            self._plans.append(self._build_block_plans(l, blk["mlp"]))
+
+        # --- per-sequence decode state
+        self._states: Dict[int, dict] = {}
+        self._next_sid = 1
+
+        # --- jitted, seq-vmapped attention step (params traced: all blocks
+        # share the compilation; one compile per (n_seqs, seq_len) shape)
+        rotary_dim = int(cfg.resolved_head_dim * cfg.rotary_frac)
+
+        def attn_one(p, h, pos, cache):
+            cos_sin = rope_cos_sin(pos, rotary_dim, cfg.rope_theta,
+                                   dtype=jnp.float32)
+            return attn.gqa_apply(
+                p, 0, h, FP32_CTX, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                head_dim=cfg.resolved_head_dim, cos_sin=cos_sin,
+                positions=pos, causal=True, window=cfg.window,
+                cache=cache, chunk=cfg.attn_chunk)
+
+        self._attn_step = jax.jit(jax.vmap(attn_one,
+                                           in_axes=(None, 0, 0, 0)))
+
+    # ------------------------------------------------------------- plans
+
+    def _make_plan(self, label: str, layers: List[dict]
+                   ) -> plans.ExecutionPlan:
+        pack = {"layers": layers, "name": label}
+        self._packs.append(pack)
+        self.layers.extend(layers)
+        return plans.build_plan(pack, **self._plan_kw)
+
+    def _build_block_plans(self, l: int, mlp: dict
+                           ) -> Dict[str, plans.ExecutionPlan]:
+        # call-time import: models.mlp itself imports the serving package
+        # (either module may be imported first)
+        from ..models.mlp import freeze_dense_layer
+        if self.cfg.act == "gelu":
+            c1, o1 = _frozen_codes(mlp["fc1"]["kernel"])
+            c2, o2 = _frozen_codes(mlp["fc2"]["kernel"])
+            chain = [
+                freeze_dense_layer(c1, o1, activation="gelu",
+                                   bias=_np_or_none(mlp["fc1"].get("bias"))),
+                freeze_dense_layer(c2, o2, activation=None,
+                                   bias=_np_or_none(mlp["fc2"].get("bias"))),
+            ]
+            return {"chain": self._make_plan(f"blk{l}.mlp", chain)}
+        out = {}
+        for name in ("gate", "up", "down"):
+            codes, omega = _frozen_codes(mlp[name]["kernel"])
+            layer = freeze_dense_layer(
+                codes, omega, activation=None,
+                bias=_np_or_none(mlp[name].get("bias")))
+            out[name] = self._make_plan(f"blk{l}.{name}", [layer])
+        return out
+
+    def _ffn(self, l: int, h: jax.Array) -> jax.Array:
+        pl = self._plans[l]
+        if "chain" in pl:
+            return pl["chain"].run(h)
+        g = pl["gate"].run(h)
+        u = pl["up"].run(h)
+        inner = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+        return pl["down"].run(inner)
+
+    # ------------------------------------------------------------ forward
+
+    def _norm(self, p: dict, x: jax.Array) -> jax.Array:
+        return layer_norm(p, x) if self.cfg.norm == "layer" \
+            else rms_norm(p, x)
+
+    def _fresh_cache(self) -> dict:
+        cfg = self.cfg
+        return attn.init_kv_cache(1, self.cache_len, cfg.n_kv,
+                                  cfg.resolved_head_dim, jnp.float32)
+
+    def _run(self, tokens: np.ndarray, positions: np.ndarray,
+             caches: List[Any]) -> Tuple[np.ndarray, List[Any]]:
+        """One forward over ``n`` independent sequences.
+
+        tokens/positions: (n, S) int32; ``caches[l]`` is the block-l KV
+        cache with a leading lane axis (each lane a batch-1 cache tree).
+        Returns (next_token (n,), new caches).  Matches ``T.lm_apply``'s
+        dense block math; the FFN runs through the per-block plans.
+        """
+        cfg = self.cfg
+        n, s = tokens.shape
+        tok = jnp.asarray(tokens, jnp.int32)
+        pos = jnp.asarray(positions, jnp.int32)
+        x = self._table[tok]                                   # (n, S, d)
+        new_caches: List[Any] = []
+        for l, blk in enumerate(self._blocks):
+            h = self._norm(blk["ln1"], x)
+            ay, nc = self._attn_step(blk["attn"], h[:, None],
+                                     pos[:, None], caches[l])
+            x = x + ay[:, 0]
+            new_caches.append(nc)
+            h2 = self._norm(blk["ln2"], x)
+            f = self._ffn(l, h2.reshape(n * s, cfg.d_model))
+            x = x + f.reshape(n, s, cfg.d_model).astype(jnp.float32)
+        x = self._norm(self.frozen["final_norm"], x)
+        last = x[:, -1].astype(jnp.float32)                    # (n, d)
+        if cfg.tie_embeddings:
+            logits = last @ self._table.T
+        else:
+            w = self.frozen["lm_head"]["kernel"]
+            logits = last @ jnp.asarray(w, jnp.float32)
+        nxt = jnp.argmax(logits[:, :cfg.vocab], axis=-1)
+        return np.asarray(nxt, np.int64), new_caches
+
+    # ----------------------------------------------------- sequence state
+
+    def _alloc_sid(self) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        return sid
+
+    def _prefill_seq(self, sid: int, toks: np.ndarray) -> int:
+        if sid in self._states:
+            raise ValueError(f"seq {sid} already live")
+        toks = np.asarray(toks, np.int32).reshape(-1)
+        s = toks.shape[0]
+        if not 1 <= s <= self.max_prompt:
+            raise ValueError(
+                f"prompt length {s} outside [1, {self.max_prompt}]")
+        stacked = [jax.tree_util.tree_map(lambda a: a[None],
+                                          self._fresh_cache())
+                   for _ in self._blocks]
+        pos = np.arange(s, dtype=np.int32)[None]
+        nxt, new_stacked = self._run(toks[None], pos, stacked)
+        self._states[sid] = {
+            "caches": [jax.tree_util.tree_map(lambda a: a[0], ns)
+                       for ns in new_stacked],
+            "pos": s,
+            "last": int(nxt[0]),
+        }
+        return int(nxt[0])
+
+    def _decode_batch(self, sids: Sequence[int]) -> List[int]:
+        sts = [self._states[s] for s in sids]
+        if self.cfg.window is None:
+            for sid, st in zip(sids, sts):
+                # a wrapped write would overwrite still-visible history
+                if st["pos"] >= self.cache_len:
+                    raise RuntimeError(
+                        f"seq {sid} exhausted its KV cache "
+                        f"({self.cache_len} slots); release it")
+        n = len(sts)
+        n_pad = 1
+        while n_pad < n:
+            n_pad *= 2
+        padded = sts + [sts[0]] * (n_pad - n)   # lanes >= n are discarded
+        tokens = np.asarray([[st["last"]] for st in padded], np.int32)
+        pos = np.asarray([[st["pos"]] for st in padded], np.int32)
+        caches = [
+            jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[st["caches"][l] for st in padded])
+            for l in range(len(self._blocks))
+        ]
+        nxt, new_caches = self._run(tokens, pos, caches)
+        for i, sid in enumerate(sids):
+            st = self._states[sid]
+            st["caches"] = [jax.tree_util.tree_map(lambda a, _i=i: a[_i], nc)
+                           for nc in new_caches]
+            st["pos"] += 1
+            st["last"] = int(nxt[i])
+        return [self._states[sid]["last"] for sid in sids]
+
+    # ------------------------------------------------------- public API
+
+    def prefill(self, tokens, sid: Optional[int] = None
+                ) -> Tuple[int, int]:
+        """Start a sequence: ingest the prompt, return (sid, first token)."""
+        if sid is None:
+            sid = self._alloc_sid()
+        first = self._prefill_seq(int(sid), np.asarray(tokens))
+        return int(sid), first
+
+    def decode_step(self, sid: int) -> int:
+        """Advance one sequence one token (greedy)."""
+        if sid not in self._states:
+            raise KeyError(f"unknown seq {sid}")
+        return self._decode_batch([int(sid)])[0]
+
+    def release(self, sid: int) -> None:
+        self._states.pop(int(sid), None)
+
+    @property
+    def live_sequences(self) -> int:
+        return len(self._states)
+
+    def generate(self, prompts, max_new: int) -> np.ndarray:
+        """Direct greedy loop: prefill each row of ``prompts`` (B, S), then
+        ``max_new - 1`` batched decode steps.  This drives the exact same
+        ``_run`` internals the engine path uses, so engine decode output is
+        bit-identical to this loop by construction."""
+        prompts = np.asarray(prompts)
+        if prompts.ndim != 2:
+            raise ValueError("prompts must be (B, S)")
+        sids, firsts = [], []
+        for b in range(prompts.shape[0]):
+            sid, first = self.prefill(prompts[b])
+            sids.append(sid)
+            firsts.append(first)
+        outs = [firsts]
+        for _ in range(max_new - 1):
+            outs.append(self._decode_batch(sids))
+        for sid in sids:
+            self.release(sid)
+        return np.asarray(outs, np.int64).T         # (B, max_new)
+
+    # ----------------------------------------------- wire-format helpers
+
+    def encode_prefill(self, sid: int, tokens) -> np.ndarray:
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if not 1 <= toks.shape[0] <= self.max_prompt:
+            raise ValueError(
+                f"prompt length {toks.shape[0]} outside "
+                f"[1, {self.max_prompt}]")
+        row = np.zeros((self.d_in,), np.float32)
+        row[0] = float(sid)
+        row[1] = float(toks.shape[0])
+        row[2:2 + toks.shape[0]] = toks.astype(np.float32)
+        return row
+
+    def encode_decode(self, sid: int) -> np.ndarray:
+        row = np.zeros((self.d_in,), np.float32)
+        row[0] = float(sid)
+        return row
+
+    # -------------------------------------------- ServableProgram entries
+
+    def bucket_for(self, m: int) -> Optional[int]:
+        for b in self.bucket_sizes:
+            if m <= b:
+                return b
+        return None
+
+    def entry(self, bucket: int):
+        if bucket not in self.bucket_sizes:
+            raise ValueError(f"no bucket {bucket}; have {self.bucket_sizes}")
+
+        def run_bucket(xb):
+            X = np.asarray(xb, np.float32)
+            assert X.shape == (bucket, self.d_in), \
+                f"entry({bucket}) got {X.shape}"
+            out = np.zeros((bucket, self.d_out), np.float32)
+            dec_idx: List[int] = []
+            dec_sids: List[int] = []
+            for i in range(bucket):
+                sid = int(round(float(X[i, 0])))
+                if sid <= 0:                       # bucket padding
+                    continue
+                n_tok = int(round(float(X[i, 1])))
+                if n_tok > 0:                      # prefill row
+                    toks = np.asarray(
+                        np.round(X[i, 2:2 + n_tok]), np.int32)
+                    try:
+                        out[i, 0] = float(self._prefill_seq(sid, toks))
+                    except ValueError:
+                        out[i, 0] = -1.0           # don't fail the bucket
+                elif sid in self._states:          # decode row
+                    dec_idx.append(i)
+                    dec_sids.append(sid)
+                else:
+                    out[i, 0] = -1.0               # unknown sequence
+            if dec_sids:
+                for i, tok in zip(dec_idx, self._decode_batch(dec_sids)):
+                    out[i, 0] = float(tok)
+            return jnp.asarray(out)
+
+        return run_bucket
+
+    def run(self, x) -> jax.Array:
+        X = np.asarray(x, np.float32)
+        m = X.shape[0]
+        bucket = self.bucket_for(m)
+        if bucket is None:
+            raise ValueError(
+                f"{m} rows exceeds the largest bucket "
+                f"({self.bucket_sizes[-1]})")
+        if m < bucket:                 # zero rows are inert padding rows
+            X = np.concatenate(
+                [X, np.zeros((bucket - m, self.d_in), np.float32)])
+        return self.entry(bucket)(X)[:m]
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> "LMProgram":
+        """FFN-plan warmup: compile each block plan's entries so the first
+        served request doesn't eat the jit cost."""
+        for pl in self._plans:
+            for p in pl.values():
+                p.warmup(buckets)
+        return self
+
+    def forget(self) -> None:
+        """Drop plan-memo + kernel-operand cache entries for every block
+        pack (mirror of ``plans.forget_plan`` for a retiring program)."""
+        for pack in self._packs:
+            plans.forget_plan(pack)
+
+    def describe(self) -> dict:
+        rep = self._plans[0]["chain" if self.cfg.act == "gelu" else "down"]
+        decode_b = self.bucket_sizes[0]
+        prefill_b = self.bucket_for(self.max_prompt) or self.bucket_sizes[-1]
+        return {
+            "program": "lm",
+            "arch": self.cfg.name,
+            "blocks": len(self._blocks),
+            "ffn": ("fused gelu chain (1 plan/block)"
+                    if self.cfg.act == "gelu"
+                    else "swiglu split (gate/up/down plans/block)"),
+            "wire": ("row = [seq_id, n_tokens, tok...]; n_tokens>0 "
+                     "prefill, 0 decode; out = [token_id]"),
+            "rows_per_request": self.rows_per_request,
+            "d_in": self.d_in,
+            "d_out": self.d_out,
+            "bucket_sizes": list(self.bucket_sizes),
+            "kv_cache": {"slots": self.cache_len,
+                         "window": self.cfg.window},
+            "live_sequences": self.live_sequences,
+            "ffn_schedules": {
+                "decode(m=n_seqs)": rep.schedule_for(decode_b),
+                f"prefill(m<={self.max_prompt})":
+                    rep.schedule_for(prefill_b),
+            },
+            "block0_plans": {k: p.describe()["resolved_mode"]
+                             for k, p in self._plans[0].items()},
+        }
+
+
+def build_lm_program(params: Any, qstate: Any, cfg: ArchConfig,
+                     lam: Optional[float] = None, **kwargs) -> LMProgram:
+    """Freeze + wrap in one call (the common launch path)."""
+    return LMProgram(freeze_lm(params, qstate, cfg, lam), cfg, **kwargs)

@@ -326,18 +326,20 @@ def cold_pack_from_payload(payload: Dict[str, np.ndarray],
 
 # ----------------------------------------------------------- hot-tier cost
 
-def plan_resident_bytes(plan: ExecutionPlan) -> int:
-    """Decoded footprint of a resolved plan's operands (the hot-tier
+def plan_resident_bytes(plan) -> int:
+    """Decoded footprint of a resolved program's operands (the hot-tier
     accounting unit): per-layer packed codes + epilogue constants, plus
     the calibration vector.  Jitted executables and memoized kernel
     operands scale with this, so it is the byte knob ``hot_bytes``
-    budgets against."""
+    budgets against.  Works on any :class:`~.plans.ServableProgram`
+    whose ``.layers`` are standard frozen layer dicts."""
     total = 0
     for layer in plan.layers:
         for key in ("packed", "omega", "alpha1", "bias", "alpha2"):
             total += _nbytes(layer[key])
-    if plan.act_scales is not None:
-        total += 4 * len(plan.act_scales)
+    scales = getattr(plan, "act_scales", None)
+    if scales is not None:
+        total += 4 * len(scales)
     return total
 
 
@@ -347,7 +349,14 @@ class CachedPlan:
     """Lazy plan handle: static surface without decoding, execution
     surface resolved through the owning :class:`PackCache` per call.
     Safe to hold across evictions — every execution attribute re-resolves
-    (LRU hit when hot, decode+rebuild when cold)."""
+    (LRU hit when hot, decode+rebuild when cold).
+
+    Implements :class:`~.plans.ServableProgram`: the static protocol
+    surface (``d_in``/``d_out``/``bucket_sizes``/``rows_per_request``)
+    answers without a decode, so registering a cold model costs
+    nothing."""
+
+    rows_per_request: Optional[int] = None   # row-oriented, like the plans
 
     def __init__(self, cache: "PackCache", model_id: str, *,
                  d_in: int, d_out: int,

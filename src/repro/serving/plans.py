@@ -48,7 +48,8 @@ tiles — the runtime half of the paper's throughput story.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +81,63 @@ _CALIB_BATCH = 64
 PATH_BY_SCHEDULE = {"ws": "fused_ws", "batch_tiled": "fused",
                     "db": "fused_db", "stream": "fused_stream"}
 SCHEDULE_BY_PATH = {v: k for k, v in PATH_BY_SCHEDULE.items()}
+
+
+@runtime_checkable
+class ServableProgram(Protocol):
+    """The contract every serving layer programs against.
+
+    A servable program maps ``(rows, d_in)`` float32 batches to
+    ``(rows, d_out)`` outputs through a fixed set of row *buckets*, each
+    backed by a shape-stable compiled entry point.  The micro-batcher,
+    frontend/registry, pack cache, integrity guard and fault injector all
+    depend on exactly this surface — :class:`ExecutionPlan` (a frozen MLP
+    pack), ``serving.lm.LMProgram`` (a 4-bit transformer's prefill/decode
+    engine), and the ``CachedPlan``/``GuardedPlan``/``FaultInjector``
+    proxies are interchangeable implementations.
+
+    Required:
+
+    * ``d_in`` / ``d_out`` — the wire width of one request row.  For
+      tensor programs these are the feature dims; programs with their own
+      request encoding (e.g. the LM program's token rows) document the
+      row layout in ``describe()``.
+    * ``bucket_sizes`` — ascending row buckets the program compiles for.
+    * ``bucket_for(m)`` — smallest bucket holding ``m`` rows (None when
+      ``m`` overflows the largest bucket).
+    * ``entry(bucket)`` — shape-stable callable for exactly ``bucket``
+      rows.
+    * ``run(x)`` — pad-to-bucket convenience wrapper around ``entry``.
+    * ``describe()`` — a JSON-able report of what will execute.
+
+    Optional, feature-detected via ``getattr``/``hasattr`` (never
+    ``isinstance`` on a concrete class — the acceptance contract of the
+    serving hot path):
+
+    * ``rows_per_request`` — fixed row count each request must carry
+      (programs with per-row request state, e.g. one row per decode
+      sequence); absent/None means any row count.
+    * ``warmup(buckets=None)`` — precompile entry points.
+    * ``demote_bucket(rows, reason=...)`` — degradation rebind.
+    * ``buckets`` / ``schedule_for`` / ``mode_label`` — schedule
+      reporting surfaces used by benches and the frontend's degradation
+      ladder.
+    * ``layers`` — the 4-bit pack layer dicts backing the program (CRC
+      verification, bit-flip injection, operand-cache release).
+    * ``pack`` / ``act_dtype`` / ``act_scales`` — pack-cache plumbing.
+    """
+
+    d_in: int
+    d_out: int
+    bucket_sizes: Tuple[int, ...]
+
+    def bucket_for(self, m: int) -> Optional[int]: ...
+
+    def entry(self, bucket: int) -> Callable: ...
+
+    def run(self, x): ...
+
+    def describe(self) -> dict: ...
 
 
 def calibrate_act_scales(pack: dict, x_calib: jax.Array) -> dict:
@@ -128,7 +186,11 @@ class BucketPlan:
 class ExecutionPlan:
     """Frozen-pack serving plan: mode, blocks, calibration and per-bucket
     entry points resolved once.  Build with :func:`build_plan` (or the
-    memoizing :func:`get_plan`)."""
+    memoizing :func:`get_plan`).  The reference :class:`ServableProgram`
+    implementation — a pure tensor program with no per-request state, so
+    ``rows_per_request`` stays None (any row count)."""
+
+    rows_per_request: Optional[int] = None
 
     def __init__(self, pack: dict, *,
                  mode: str = "auto",

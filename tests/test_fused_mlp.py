@@ -171,6 +171,24 @@ def test_stream_schedule_decode_amortized_paths_match():
                                    rtol=1e-4, err_msg=str((dims, batch, bm)))
 
 
+def test_gelu_activation_matches_on_every_schedule():
+    """gelu epilogues (the transformer FFN's activation) vs the oracle on
+    all four kernel schedules — the static-activation paths (batch_tiled,
+    db) and the coded-activation paths (ws, stream) alike."""
+    dims = (33, 48, 17)
+    pack = _rand_pack(dims, seed=21)
+    for l in pack["layers"][:-1]:
+        l["activation"] = "gelu"
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(9, dims[0])),
+                    jnp.float32)
+    y_ref = _oracle(pack, x)
+    for sched in ("batch_tiled", "db", "ws", "stream"):
+        y = ops.fantastic4_mlp_fused(x, pack["layers"], interpret=True,
+                                     schedule=sched)
+        np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-4,
+                                   err_msg=sched)
+
+
 def test_frozen_pack_serves_fused():
     """freeze_mlp -> mlp_serve(fused) == oracle serve on a real pack."""
     import jax

@@ -1,0 +1,111 @@
+"""models/lm greedy decode: prefill+decode vs the one-shot forward.
+
+The incremental serving path (prefill the prompt, then single-token
+decode steps against the KV cache) must be argmax-identical to running
+the whole growing sequence through ``lm_apply`` with no cache at every
+step — on fp32 weights AND on the frozen 4-bit tree.  Plus the KV-cache
+shape/window invariants for sliding-window-attention archs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import qat
+from repro.models import lm
+from repro.nn import transformer as T
+from repro.nn.module import QuantCtx
+
+CTX = QuantCtx(quant=False, compute_dtype=jnp.float32)
+
+
+def _init(arch, seed=0):
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(seed)
+    params = T.lm_init(key, cfg)
+    qstate = qat.build_qstate(params)
+    return cfg, key, params, qstate
+
+
+def _assert_teacher_forced_parity(params, qstate, cfg, prompt, out):
+    """Every generated token must be the argmax of a fresh no-cache
+    forward over everything before it."""
+    seq = jnp.concatenate([prompt, out], axis=1)
+    s = prompt.shape[1]
+    for t in range(out.shape[1]):
+        logits, _, _ = T.lm_apply(params, qstate, seq[:, :s + t], CTX, cfg)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)
+        np.testing.assert_array_equal(
+            np.asarray(nxt, np.int64), np.asarray(out[:, t], np.int64),
+            err_msg=f"decode step {t} diverged from the one-shot forward")
+
+
+@pytest.mark.parametrize("weights", ["fp32", "frozen4bit"])
+def test_generate_matches_one_shot_forward(weights):
+    cfg, key, params, qstate = _init("smollm-360m")
+    if weights == "frozen4bit":
+        params, qstate = qat.freeze_tree(params, qstate, cfg.lam), 0
+    prompt = jax.random.randint(key, (2, 6), 0, cfg.vocab)
+    out = lm.generate(params, qstate, prompt, CTX, cfg, max_new=4)
+    assert out.shape == (2, 4)
+    _assert_teacher_forced_parity(params, qstate, cfg, prompt, out)
+
+
+def test_swa_generate_crosses_window_matches_one_shot():
+    """h2o-danube (SWA): decode far enough that the attention span slides
+    past the prompt; cached decode must still match the no-cache forward
+    (whose window masking is purely positional)."""
+    cfg, key, params, qstate = _init("h2o-danube-1.8b")
+    assert cfg.window and cfg.window == 16     # smoke caps the window
+    frozen = qat.freeze_tree(params, qstate, cfg.lam)
+    prompt = jax.random.randint(key, (2, 10), 0, cfg.vocab)
+    out = lm.generate(frozen, 0, prompt, CTX, cfg, max_new=10)
+    # 10 + 10 > window: the last steps attend to a strict suffix
+    _assert_teacher_forced_parity(frozen, 0, cfg, prompt, out)
+
+
+def test_swa_cache_shapes_and_window_cap():
+    """init_cache invariants: ``cap_window`` gives SWA archs an O(window)
+    ring (decode-only usage); the default keeps full length so multi-token
+    prefill writes never wrap.  Ring slots hold positions, not columns."""
+    cfg = get_config("h2o-danube-1.8b").smoke()
+    b, max_len = 2, 40
+    full = T.init_cache(cfg, b, max_len, dtype=jnp.float32)
+    capped = T.init_cache(cfg, b, max_len, dtype=jnp.float32,
+                          cap_window=True)
+    for cache, kv_len in ((full, max_len), (capped, cfg.window)):
+        att = cache["dense"]["attn"]
+        assert att["k"].shape == (cfg.n_layers, b, kv_len, cfg.n_kv,
+                                  cfg.resolved_head_dim)
+        assert att["v"].shape == att["k"].shape
+        assert att["pos"].shape == (cfg.n_layers, kv_len)
+        assert att["len"].shape == (cfg.n_layers,)
+        # empty slots carry position -1: never matched by the mask
+        assert int(jnp.max(att["pos"])) == -1
+
+
+def test_swa_window_ring_decode_matches_full_cache():
+    """Greedy decode against the window-capped ring (writes wrap at
+    ``len % window``) is token-identical to decode against the
+    full-length cache."""
+    cfg, key, params, qstate = _init("h2o-danube-1.8b", seed=3)
+    frozen = qat.freeze_tree(params, qstate, cfg.lam)
+    b, s, new = 2, 10, 10                     # s + new = 20 > window = 16
+    prompt = jax.random.randint(key, (b, s), 0, cfg.vocab)
+
+    full = lm.generate(frozen, 0, prompt, CTX, cfg, max_new=new)
+
+    cache = T.init_cache(cfg, b, s + new, dtype=jnp.float32,
+                         cap_window=True)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    nxt, cache = lm.greedy_step(frozen, 0, prompt, CTX, cfg,
+                                positions=pos, cache=cache)
+    outs = [nxt]
+    for t in range(new - 1):
+        p_t = jnp.full((b, 1), s + t, jnp.int32)
+        nxt, cache = lm.greedy_step(frozen, 0, nxt, CTX, cfg,
+                                    positions=p_t, cache=cache)
+        outs.append(nxt)
+    ring = jnp.concatenate(outs, axis=1)
+    np.testing.assert_array_equal(np.asarray(ring), np.asarray(full))

@@ -1,0 +1,163 @@
+"""LMProgram: 4-bit transformer prefill/decode through the serving stack.
+
+The tentpole acceptance tests: a frozen smoke transformer registered in
+``ServingFrontend`` as a :class:`~repro.serving.lm.LMProgram` serves
+end-to-end (register -> prefill -> N decode steps -> futures resolve)
+with decode outputs bit-identical to the program's direct ``generate``
+loop; the ``rows_per_request`` wire contract and the batcher's scatter
+guard; integrity guarding of the program's per-block FFN packs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.configs import get_config
+from repro.core import qat
+from repro.models import lm as lm_mod
+from repro.nn import transformer as T
+from repro.nn.module import QuantCtx
+
+B, S, NEW = 3, 6, 5
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("smollm-360m").smoke()
+    key = jax.random.PRNGKey(0)
+    params = T.lm_init(key, cfg)
+    qstate = qat.build_qstate(params)
+    frozen = qat.freeze_tree(params, qstate, cfg.lam)
+    prog = serving.LMProgram(frozen, cfg, max_prompt=S, max_new=NEW,
+                             max_bucket=8, interpret=True)
+    prompt = np.asarray(jax.random.randint(key, (B, S), 0, cfg.vocab))
+    return cfg, frozen, prog, prompt
+
+
+# ------------------------------------------------- protocol surface
+
+def test_servable_protocol_surface(world):
+    cfg, _, prog, _ = world
+    assert prog.d_in == 2 + S and prog.d_out == 1
+    assert prog.rows_per_request == 1
+    assert list(prog.bucket_sizes) == sorted(set(prog.bucket_sizes))
+    assert all(b & (b - 1) == 0 for b in prog.bucket_sizes)
+    assert prog.bucket_for(1) == prog.bucket_sizes[0]
+    assert prog.bucket_for(max(prog.bucket_sizes) + 1) is None
+    d = prog.describe()
+    assert d["program"] == "lm" and "ffn_schedules" in d
+    # protocol attr the integrity/fault layers key on
+    assert all("packed" in l for l in prog.layers)
+    with pytest.raises(KeyError):
+        prog.decode_step(99_999)
+
+
+def test_rejects_non_dense_family():
+    cfg = get_config("mamba2-1.3b").smoke()
+    key = jax.random.PRNGKey(0)
+    params = T.lm_init(key, cfg)
+    frozen = qat.freeze_tree(params, qat.build_qstate(params), cfg.lam)
+    with pytest.raises(ValueError, match="dense-family"):
+        serving.LMProgram(frozen, cfg, max_prompt=4, max_new=4)
+
+
+# ------------------------------------------------- end-to-end engine
+
+def test_frontend_end_to_end_bit_identical(world):
+    cfg, frozen, prog, prompt = world
+    direct = prog.generate(prompt, NEW)
+
+    toks = []
+    frontend = serving.ServingFrontend()
+    with frontend:
+        frontend.register("lm", prog, max_delay=1e-3)
+        futs = [frontend.submit(
+                    "lm", prog.encode_prefill(100 + i, prompt[i])[None])
+                for i in range(B)]
+        toks.append([int(f.result(60.0).y[0, 0]) for f in futs])
+        for _ in range(NEW - 1):
+            futs = [frontend.submit(
+                        "lm", prog.encode_decode(100 + i)[None])
+                    for i in range(B)]
+            toks.append([int(f.result(60.0).y[0, 0]) for f in futs])
+    for i in range(B):
+        prog.release(100 + i)
+    engine = np.asarray(toks, np.int64).T
+
+    # acceptance: engine == the program's own generate loop, bit for bit
+    np.testing.assert_array_equal(engine, direct)
+    # and token-parity with the reference models.lm greedy loop
+    ref = lm_mod.generate(frozen, 0, jnp.asarray(prompt),
+                          QuantCtx(quant=False,
+                                   compute_dtype=jnp.float32),
+                          cfg, max_new=NEW)
+    np.testing.assert_array_equal(engine, np.asarray(ref, np.int64))
+
+
+# --------------------------------------- wire contract + scatter guard
+
+def test_rows_per_request_contract(world):
+    """Satellite: a program that pins rows-per-request (the LM program's
+    per-row sequence framing) makes the batcher refuse multi-row
+    requests at intake."""
+    _, _, prog, prompt = world
+    batcher = serving.MicroBatcher(prog)
+    two_rows = np.stack([prog.encode_prefill(900, prompt[0]),
+                         prog.encode_decode(900)])
+    prog.release(900)
+    with pytest.raises(ValueError, match="rows_per_request"):
+        batcher.submit(two_rows)
+    assert batcher.stats["requests"] == 0
+
+
+class _ShortOutputStub:
+    """ServableProgram that violates the row-count contract on output."""
+    d_in = 4
+    d_out = 2
+    bucket_sizes = (4,)
+    rows_per_request = None
+
+    def bucket_for(self, rows):
+        return 4 if rows <= 4 else None
+
+    def entry(self, bucket):
+        def f(xb):
+            return jnp.zeros((bucket // 2, self.d_out), jnp.float32)
+        return f
+
+    def run(self, x):
+        return self.entry(4)(x)
+
+    def describe(self):
+        return {"kind": "stub"}
+
+
+def test_scatter_guard_refuses_short_outputs():
+    """Satellite regression: a program returning fewer rows than the
+    bucket it was handed must raise instead of silently mis-scattering
+    the tail requests."""
+    batcher = serving.MicroBatcher(_ShortOutputStub(), max_delay=0.0)
+    for _ in range(3):
+        batcher.submit(np.zeros((1, 4), np.float32))
+    with pytest.raises(RuntimeError, match="refusing to scatter"):
+        batcher.flush()
+
+
+# ------------------------------------------------- integrity guarding
+
+def test_guarded_lm_program_detects_block_corruption(world):
+    _, _, prog, _ = world
+    g = serving.GuardedPlan(prog, model_id="lm")
+    g.verify()                                  # clean pass
+    layer = prog.layers[0]
+    orig = layer["packed"]
+    flipped = np.asarray(orig, np.uint8).copy()
+    flipped[0, 0] ^= 0x08
+    layer["packed"] = jnp.asarray(flipped)
+    try:
+        with pytest.raises(serving.IntegrityError):
+            g.verify()
+    finally:
+        layer["packed"] = orig
+    g.verify()                                  # restored -> clean again
